@@ -1,0 +1,31 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import sys
+from typing import Iterable
+
+from repro.core.scheduler import MursConfig
+from repro.core.spark_sim import (  # noqa: F401
+    make_grep,
+    make_pr,
+    make_sort,
+    make_wc,
+    run_batch,
+    run_service,
+)
+
+
+def emit(name: str, value, derived: str = "") -> None:
+    """CSV row: name,value,derived."""
+    print(f"{name},{value},{derived}")
+
+
+def murs() -> MursConfig:
+    return MursConfig()
+
+
+def pct_change(base: float, new: float) -> float:
+    if base <= 0:
+        return 0.0
+    return 100.0 * (base - new) / base

@@ -1,0 +1,30 @@
+"""Paper Fig. 1: WC suffers PR's memory pressure in service mode.
+
+Runs PR+WC concurrently (service, FAIR) vs each alone (batch) and reports
+exec/GC per app — the motivation result: exec-service(WC) >> exec-batch(WC)
+entirely through pressure created by PR.
+"""
+
+from .common import emit, make_pr, make_wc, run_batch, run_service
+
+HEAP_GB = 15.0
+
+
+def main() -> None:
+    service = run_service([make_pr(), make_wc()], heap_gb=HEAP_GB,
+                          oom_is_fatal=False)
+    batch = run_batch([make_pr(), make_wc()], heap_gb=HEAP_GB)
+    for app in ("pr", "wc"):
+        s = service.jobs[app]
+        b = batch[app].jobs[app]
+        emit(f"fig1.exec_service.{app}", round(s.exec_time, 1), "seconds")
+        emit(f"fig1.exec_batch.{app}", round(b.exec_time, 1), "seconds")
+        emit(f"fig1.gc_service.{app}", round(s.gc_time, 1), "seconds")
+        emit(f"fig1.gc_batch.{app}", round(b.gc_time, 1), "seconds")
+    wc_ratio = service.jobs["wc"].exec_time / max(batch["wc"].jobs["wc"].exec_time, 1e-9)
+    emit("fig1.wc_service_over_batch", round(wc_ratio, 2),
+         "paper: service-mode WC markedly slower than batch WC")
+
+
+if __name__ == "__main__":
+    main()

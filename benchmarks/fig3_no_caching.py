@@ -1,0 +1,34 @@
+"""Paper Fig. 3: no-caching group (Sort+WC+Grep), heap sweep, FAIR vs MURS.
+
+Paper claim: MURS improves submissions by 1.8×–2.9×, driven by GC
+reduction.  We report per-heap exec/GC for both schedulers and the best
+observed improvement ratios.
+"""
+
+from .common import emit, make_grep, make_sort, make_wc, murs, run_service
+
+HEAPS = (5.0, 6.0, 8.0, 10.0)
+
+
+def main() -> None:
+    best_exec = best_gc = 0.0
+    for heap in HEAPS:
+        jobs = lambda: [make_sort(), make_wc(), make_grep()]
+        fair = run_service(jobs(), heap_gb=heap, oom_is_fatal=False)
+        m = run_service(jobs(), heap_gb=heap, murs=murs(), oom_is_fatal=False)
+        for app in ("sort", "wc", "grep"):
+            f, mm = fair.jobs[app], m.jobs[app]
+            emit(f"fig3.h{heap:g}.exec_fair.{app}", round(f.exec_time, 1))
+            emit(f"fig3.h{heap:g}.exec_murs.{app}", round(mm.exec_time, 1))
+            emit(f"fig3.h{heap:g}.gc_fair.{app}", round(f.gc_time, 1))
+            emit(f"fig3.h{heap:g}.gc_murs.{app}", round(mm.gc_time, 1))
+            if mm.exec_time > 0:
+                best_exec = max(best_exec, f.exec_time / mm.exec_time)
+            if mm.gc_time > 0:
+                best_gc = max(best_gc, 1 - mm.gc_time / f.gc_time)
+    emit("fig3.best_exec_ratio", round(best_exec, 2), "paper: up to 2.9x")
+    emit("fig3.best_gc_reduction_pct", round(100 * best_gc, 1), "paper: up to 81%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Paper Fig. 4: minimum active tasks under MURS (suspension depth)."""
+
+from .common import emit, make_grep, make_sort, make_wc, murs, run_service
+
+
+def main() -> None:
+    for heap in (5.0, 6.0):
+        jobs = lambda: [make_sort(), make_wc(), make_grep()]
+        fair = run_service(jobs(), heap_gb=heap, oom_is_fatal=False)
+        m = run_service(jobs(), heap_gb=heap, murs=murs(), oom_is_fatal=False)
+        emit(f"fig4.h{heap:g}.min_active_fair", fair.min_active_tasks)
+        emit(f"fig4.h{heap:g}.min_active_murs", m.min_active_tasks)
+        emit(f"fig4.h{heap:g}.suspensions_murs", m.suspensions)
+
+
+if __name__ == "__main__":
+    main()

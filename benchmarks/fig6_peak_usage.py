@@ -1,0 +1,21 @@
+"""Paper Fig. 6: per-task peak memory — MURS lets running tasks use MORE."""
+
+from .common import emit, make_pr, make_wc, murs, run_service
+
+
+def main() -> None:
+    heap = 15.0
+    fair = run_service([make_pr(), make_wc()], heap_gb=heap, oom_is_fatal=False)
+    m = run_service([make_pr(), make_wc()], heap_gb=heap, murs=murs(),
+                    oom_is_fatal=False)
+    for tag, res in (("fair", fair), ("murs", m)):
+        peaks = sorted(res.peak_task_live.values())
+        if peaks:
+            emit(f"fig6.{tag}.peak_task_mb_p50",
+                 round(peaks[len(peaks) // 2] / 1e6, 1))
+            emit(f"fig6.{tag}.peak_task_mb_max", round(peaks[-1] / 1e6, 1))
+        emit(f"fig6.{tag}.min_active", res.min_active_tasks)
+
+
+if __name__ == "__main__":
+    main()

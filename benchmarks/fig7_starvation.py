@@ -1,0 +1,24 @@
+"""Paper Fig. 7 / §VI-D: no starvation — the heavy job also finishes (and
+the FIFO resume bounds its delay)."""
+
+from .common import emit, make_pr, make_wc, murs, pct_change, run_service
+
+
+def main() -> None:
+    heap = 15.0
+    fair = run_service([make_pr(), make_wc()], heap_gb=heap, oom_is_fatal=False)
+    m = run_service([make_pr(), make_wc()], heap_gb=heap, murs=murs(),
+                    oom_is_fatal=False)
+    for app in ("pr", "wc"):
+        emit(f"fig7.exec_fair.{app}", round(fair.jobs[app].exec_time, 1))
+        emit(f"fig7.exec_murs.{app}", round(m.jobs[app].exec_time, 1))
+        emit(f"fig7.{app}_finished_murs", int(m.jobs[app].finish_time > 0),
+             "1 = no starvation")
+        emit(f"fig7.{app}_improvement_pct",
+             round(pct_change(fair.jobs[app].exec_time,
+                              m.jobs[app].exec_time), 1),
+             "paper: PR +24.4%, WC +29.8%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""Pallas kernel microbenchmarks: allclose vs oracle + wall time per call.
+
+On this CPU container the kernels run in interpret mode, so the wall time
+is the *interpreter's*, not the TPU's — correctness (max |err|) is the
+meaningful column; the FLOPs-derived TPU-bound is reported alongside.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from .common import emit
+
+PEAK = 197e12
+
+
+def _time(fn, *args, reps=3, **kw):
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6  # µs
+
+
+def main() -> None:
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    # flash attention
+    BH, S, HD = 4, 512, 128
+    q = jax.random.normal(k1, (BH, S, HD), jnp.bfloat16)
+    k = jax.random.normal(k2, (BH, S, HD), jnp.bfloat16)
+    v = jax.random.normal(k3, (BH, S, HD), jnp.bfloat16)
+    out, us = _time(ops.flash_attention, q, k, v, causal=True, reps=1)
+    gold = ref.flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.abs(out.astype(jnp.float32) - gold.astype(jnp.float32)).max())
+    flops = 4 * BH * S * S * HD * 0.5
+    emit("kernel.flash_attention.us_per_call", round(us, 1),
+         f"interpret-mode; max_err={err:.4f}; tpu_bound_us={flops / PEAK * 1e6:.2f}")
+
+    # decode attention
+    qd = jax.random.normal(k1, (BH, HD), jnp.bfloat16)
+    out, us = _time(ops.decode_attention, qd, k, v, 300, reps=1)
+    gold = ref.decode_attention_ref(qd, k, v, 300)
+    err = float(jnp.abs(out.astype(jnp.float32) - gold.astype(jnp.float32)).max())
+    emit("kernel.decode_attention.us_per_call", round(us, 1),
+         f"interpret-mode; max_err={err:.4f}")
+
+    # grouped matmul
+    E, C, D, F = 8, 128, 512, 256
+    x = jax.random.normal(k1, (E, C, D), jnp.bfloat16)
+    w = jax.random.normal(k2, (E, D, F), jnp.bfloat16)
+    out, us = _time(ops.grouped_matmul, x, w, reps=1)
+    gold = ref.grouped_matmul_ref(x, w)
+    rel = float(
+        (jnp.abs(out.astype(jnp.float32) - gold.astype(jnp.float32)).max()
+         / jnp.abs(gold.astype(jnp.float32)).max())
+    )
+    flops = 2 * E * C * D * F
+    emit("kernel.grouped_matmul.us_per_call", round(us, 1),
+         f"interpret-mode; rel_err={rel:.5f}; tpu_bound_us={flops / PEAK * 1e6:.2f}")
+
+    # ssd scan
+    B, S2, NH, HD2, DS = 2, 256, 4, 64, 32
+    xs = jax.random.normal(k1, (B, S2, NH, HD2), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(k2, (B, S2, NH), jnp.float32))
+    A = -jnp.exp(jax.random.normal(k3, (NH,), jnp.float32) * 0.3)
+    Bm = jax.random.normal(k1, (B, S2, DS), jnp.float32) * 0.5
+    Cm = jax.random.normal(k2, (B, S2, DS), jnp.float32) * 0.5
+    out, us = _time(ops.ssd_scan, xs, dt, A, Bm, Cm, chunk=64, reps=1)
+    gold = ref.ssd_scan_ref(xs, dt, A, Bm, Cm)
+    err = float(jnp.abs(out - gold).max())
+    emit("kernel.ssd_scan.us_per_call", round(us, 1),
+         f"interpret-mode; max_err={err:.5f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+Prints ``name,value,derived`` CSV.  The roofline table (§Roofline) is
+produced by ``repro.roofline.analysis`` from the dry-run artifacts and is
+summarized here when those artifacts exist.
+"""
+
+import importlib
+import os
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig1_motivation",
+    "benchmarks.fig3_no_caching",
+    "benchmarks.fig4_active_tasks",
+    "benchmarks.fig5_caching",
+    "benchmarks.fig6_peak_usage",
+    "benchmarks.fig7_starvation",
+    "benchmarks.table3_spill",
+    "benchmarks.kernel_micro",
+    "benchmarks.serve_pressure",
+    "benchmarks.serve_capacity_sweep",
+]
+
+
+def main() -> None:
+    print("name,value,derived")
+    failures = 0
+    for name in MODULES:
+        try:
+            mod = importlib.import_module(name)
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{name},ERROR,", file=sys.stdout)
+            traceback.print_exc()
+    # roofline summary (if dry-run artifacts are present)
+    try:
+        from repro.roofline.analysis import load_all
+
+        cells = load_all("experiments/dryrun", "16x16")
+        if cells:
+            worst = min(cells, key=lambda c: c.roofline_fraction)
+            best = max(cells, key=lambda c: c.roofline_fraction)
+            print(f"roofline.cells,{len(cells)},16x16 baseline")
+            print(
+                f"roofline.worst,{worst.roofline_fraction:.4f},"
+                f"{worst.arch}/{worst.shape} ({worst.bottleneck}-bound)"
+            )
+            print(
+                f"roofline.best,{best.roofline_fraction:.4f},"
+                f"{best.arch}/{best.shape} ({best.bottleneck}-bound)"
+            )
+    except Exception:
+        traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

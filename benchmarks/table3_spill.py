@@ -1,0 +1,29 @@
+"""Paper Table III: spill counts/sizes, Spark vs MURS.
+
+Paper: WC 9%→0%, PR 32%→2.5% of tasks spill; MURS cuts spills ~90%."""
+
+from .common import emit, make_pr, make_wc, murs, run_service
+
+
+def main() -> None:
+    heap = 13.0  # pressure point where the baseline spills
+    fair = run_service([make_pr(), make_wc()], heap_gb=heap, oom_is_fatal=False)
+    m = run_service([make_pr(), make_wc()], heap_gb=heap, murs=murs(),
+                    oom_is_fatal=False)
+    total_f = total_m = 0
+    for app in ("wc", "pr"):
+        f, mm = fair.jobs[app], m.jobs[app]
+        emit(f"table3.fair.{app}.spills", f.spills,
+             f"{100.0 * f.spills / max(f.tasks_total, 1):.1f}% of tasks")
+        emit(f"table3.murs.{app}.spills", mm.spills,
+             f"{100.0 * mm.spills / max(mm.tasks_total, 1):.1f}% of tasks")
+        emit(f"table3.fair.{app}.spill_mb", round(f.spilled_bytes / 1e6, 1))
+        emit(f"table3.murs.{app}.spill_mb", round(mm.spilled_bytes / 1e6, 1))
+        total_f += f.spills
+        total_m += mm.spills
+    red = 100.0 * (1 - total_m / total_f) if total_f else 0.0
+    emit("table3.spill_reduction_pct", round(red, 1), "paper: ~90%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpointing import AsyncCheckpointer, latest_step_path, restore, save
+
+__all__ = ["AsyncCheckpointer", "latest_step_path", "restore", "save"]

@@ -1,0 +1,158 @@
+"""Checkpointing: atomic, compressed, async-capable, elastically reshardable.
+
+Format: one ``<name>.ckpt`` file containing a zstd-compressed msgpack map
+  { "meta": {step, tree: <treedef repr>}, "leaves": [ {dtype, shape, data} ] }
+
+Restore never requires the saving mesh: leaves are loaded host-side and
+``jax.device_put`` with the *current* sharding rules — elastic rescale
+(checkpoint written on 256 chips restores onto 512 or onto 1 CPU device).
+Writes are atomic (tmp + rename) and optionally asynchronous (snapshot to
+host first, background thread serializes), so the train loop never blocks
+on disk.
+"""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+PyTree = Any
+
+_DTYPE_FIX = {"bfloat16": jnp.bfloat16}
+
+
+def _to_host(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+
+def _pack_leaf(x: np.ndarray) -> dict:
+    if x.dtype == jnp.bfloat16:
+        return {
+            "dtype": "bfloat16",
+            "shape": list(x.shape),
+            "data": x.view(np.uint16).tobytes(),
+        }
+    return {"dtype": str(x.dtype), "shape": list(x.shape), "data": x.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    if d["dtype"] == "bfloat16":
+        raw = np.frombuffer(d["data"], dtype=np.uint16).reshape(d["shape"])
+        return raw.view(jnp.bfloat16)
+    return np.frombuffer(d["data"], dtype=np.dtype(d["dtype"])).reshape(
+        d["shape"]
+    )
+
+
+def save(path: str, tree: PyTree, *, step: int = 0) -> None:
+    """Atomic synchronous save."""
+    host = _to_host(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(host)
+    payload = {
+        "meta": {"step": step, "n_leaves": len(leaves)},
+        "leaves": [_pack_leaf(np.asarray(l)) for l in leaves],
+    }
+    blob = zstandard.ZstdCompressor(level=3).compress(
+        msgpack.packb(payload, use_bin_type=True)
+    )
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(blob)
+        os.replace(tmp, path)  # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def restore(
+    path: str,
+    like: PyTree,
+    *,
+    shardings: Optional[PyTree] = None,
+) -> tuple[PyTree, int]:
+    """Restore into the structure of ``like``; reshard onto ``shardings``.
+
+    ``like`` may be a tree of arrays OR ShapeDtypeStructs (no allocation
+    needed to describe the target).  Returns (tree, step).
+    """
+    with open(path, "rb") as f:
+        blob = f.read()
+    payload = msgpack.unpackb(
+        zstandard.ZstdDecompressor().decompress(blob), raw=False
+    )
+    _, treedef = jax.tree_util.tree_flatten(like)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    if len(leaves) != treedef.num_leaves:
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, target needs "
+            f"{treedef.num_leaves} — structure mismatch"
+        )
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(jnp.asarray(x), s), tree, shardings
+        )
+    else:
+        tree = jax.tree_util.tree_map(jnp.asarray, tree)
+    return tree, payload["meta"]["step"]
+
+
+class AsyncCheckpointer:
+    """Snapshot-then-serialize-in-background checkpointer.
+
+    ``save`` snapshots device arrays to host (blocking only for the D2H
+    copy), then a worker thread compresses and writes.  ``wait`` joins the
+    in-flight write (call before exiting or before depending on the file).
+    """
+
+    def __init__(self) -> None:
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, path: str, tree: PyTree, *, step: int = 0) -> None:
+        self.wait()
+        host = _to_host(tree)  # synchronous D2H snapshot
+
+        def work():
+            try:
+                save(path, host, step=step)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+
+def latest_step_path(directory: str, prefix: str = "ckpt") -> Optional[str]:
+    """Find the newest ``<prefix>_<step>.ckpt`` in ``directory``."""
+    if not os.path.isdir(directory):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(directory):
+        if name.startswith(prefix + "_") and name.endswith(".ckpt"):
+            try:
+                s = int(name[len(prefix) + 1 : -5])
+            except ValueError:
+                continue
+            if s > best_step:
+                best, best_step = os.path.join(directory, name), s
+    return best

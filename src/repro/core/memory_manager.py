@@ -1,0 +1,86 @@
+"""Shared memory-pool accounting (the JVM-heap / HBM-pool analogue).
+
+The pool tracks two byte classes per owner, mirroring JVM generations:
+
+    transient  — young-generation objects; reclaimed wholesale by a minor GC
+                 (on TPU: per-step activations freed at step end)
+    live       — old-generation / long-living objects: shuffle buffers, cached
+                 RDD blocks (on TPU: KV caches, cached activations)
+
+The MURS pressure indicator is the fraction of *live* bytes in the pool,
+measured right after a minor GC (paper §IV: "the percentage of the heap usage
+after a minor GC represents the living data objects in the heap").
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+__all__ = ["MemoryPool", "OutOfMemoryError"]
+
+
+class OutOfMemoryError(RuntimeError):
+    """Raised when a non-reclaimable allocation exceeds pool capacity."""
+
+
+@dataclass
+class MemoryPool:
+    """Byte-accurate shared pool with live/transient accounting per owner."""
+
+    capacity: float
+    live: Dict[str, float] = field(default_factory=dict)
+    transient: Dict[str, float] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------ sums
+    @property
+    def live_bytes(self) -> float:
+        return sum(self.live.values())
+
+    @property
+    def transient_bytes(self) -> float:
+        return sum(self.transient.values())
+
+    @property
+    def used_bytes(self) -> float:
+        return self.live_bytes + self.transient_bytes
+
+    @property
+    def free_bytes(self) -> float:
+        return max(self.capacity - self.used_bytes, 0.0)
+
+    @property
+    def used_fraction(self) -> float:
+        return self.used_bytes / self.capacity if self.capacity > 0 else 1.0
+
+    @property
+    def live_fraction(self) -> float:
+        """The MURS pressure indicator: long-living bytes / capacity."""
+        return self.live_bytes / self.capacity if self.capacity > 0 else 1.0
+
+    # ------------------------------------------------------------- mutation
+    def add_live(self, owner: str, nbytes: float) -> None:
+        self.live[owner] = self.live.get(owner, 0.0) + nbytes
+        if self.live[owner] < 0.0:
+            self.live[owner] = 0.0
+
+    def set_live(self, owner: str, nbytes: float) -> None:
+        self.live[owner] = max(float(nbytes), 0.0)
+
+    def add_transient(self, owner: str, nbytes: float) -> None:
+        self.transient[owner] = self.transient.get(owner, 0.0) + nbytes
+        if self.transient[owner] < 0.0:
+            self.transient[owner] = 0.0
+
+    def release_owner(self, owner: str) -> float:
+        """Free everything held by ``owner`` (task completed/evicted)."""
+        freed = self.live.pop(owner, 0.0) + self.transient.pop(owner, 0.0)
+        return freed
+
+    def minor_gc(self) -> float:
+        """Reclaim all transient bytes; returns surviving (live) bytes."""
+        self.transient.clear()
+        return self.live_bytes
+
+    def owner_bytes(self, owner: str) -> float:
+        return self.live.get(owner, 0.0) + self.transient.get(owner, 0.0)

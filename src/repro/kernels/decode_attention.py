@@ -1,0 +1,112 @@
+"""Flash-decode Pallas kernel: one query token vs a long KV cache.
+
+Decode attention is memory-bound (the whole KV cache streams through once
+per token), so the kernel's job is to keep that stream at full HBM bandwidth
+with zero materialization of logits in HBM: grid = (BH, kv_blocks), online
+max/sum accumulators in VMEM scratch, [1, hd] output written once.
+
+The valid-length bound ``cur_pos`` is a *runtime* scalar (serving-time
+cache fill level) passed via scalar prefetch (SMEM), so one compiled kernel
+serves every request length.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(
+    pos_ref,  # SMEM scalar-prefetch: [1] int32 (cur_pos)
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, window: int, block_k: int, n_k: int,
+):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    cur_pos = pos_ref[0]
+    q = q_ref[0].astype(jnp.float32)  # [1, hd]
+    k = k_ref[0].astype(jnp.float32)  # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)  # [bk, hd]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [1, bk]
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+    mask = k_pos <= cur_pos
+    if window > 0:
+        mask &= k_pos > (cur_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def decode_attention(
+    q: jax.Array,  # [BH, hd]
+    k: jax.Array,  # [BH, S, hd]
+    v: jax.Array,  # [BH, S, hd]
+    cur_pos,  # int32 scalar (runtime)
+    *,
+    window: int = 0,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, s, hd = k.shape
+    block_k = min(block_k, s)
+    if s % block_k:
+        raise ValueError(f"cache length {s} must divide block_k {block_k}")
+    n_k = s // block_k
+    scale = 1.0 / math.sqrt(hd)
+    kernel = functools.partial(
+        _decode_kernel, scale=scale, window=window, block_k=block_k, n_k=n_k
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(bh, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, ki, pos: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, pos: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, ki, pos: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, ki, pos: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    pos = jnp.asarray(cur_pos, jnp.int32).reshape(1)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, hd), q.dtype),
+        interpret=interpret,
+    )(pos, q[:, None, :], k, v)
+    return out[:, 0, :]

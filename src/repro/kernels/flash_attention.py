@@ -1,0 +1,127 @@
+"""Flash attention Pallas TPU kernel (causal / sliding-window, GQA-ready).
+
+Tiling: grid = (batch×heads, q_blocks, kv_blocks); the kv axis is the
+innermost (sequential on TPU), so the online-softmax accumulators live in
+VMEM scratch across kv steps.  Block shapes default to 128×128 — MXU-aligned
+(the systolic array is 128×128) — with the f32 accumulator [bq, hd] kept
+resident in VMEM for the whole kv sweep (HBM traffic: Q once, K/V once,
+O once — the flash property).
+
+VMEM budget at defaults (bq=bk=128, hd≤256, bf16 in / f32 acc):
+    q 64 KiB + k 64 KiB + v 64 KiB + acc 128 KiB + stats 1 KiB ≈ 0.3 MiB
+— far under the ~16 MiB/core limit, leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int, q_offset: int,
+    block_q: int, block_k: int, n_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)  # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)  # [bk, hd]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [bq, bk]
+
+    q_pos = q_offset + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0
+    )
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1
+    )
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]  # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)  # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)  # [bq, 1]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q: jax.Array,  # [BH, Sq, hd] (batch×heads flattened, KV pre-repeated)
+    k: jax.Array,  # [BH, Sk, hd]
+    v: jax.Array,  # [BH, Sk, hd]
+    *,
+    causal: bool = True,
+    window: int = 0,  # 0 = disabled
+    q_offset: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, sq, hd = q.shape
+    sk = k.shape[1]
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    if sq % block_q or sk % block_k:
+        raise ValueError(
+            f"seq lengths ({sq}, {sk}) must divide blocks ({block_q}, {block_k})"
+        )
+    n_q = sq // block_q
+    n_k = sk // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _flash_kernel,
+        scale=scale, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),  # acc
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running max
+            pltpu.VMEM((block_q, 1), jnp.float32),  # running sum
+        ],
+        interpret=interpret,
+    )(q, k, v)

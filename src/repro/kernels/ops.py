@@ -1,0 +1,89 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+interpreter executes the kernel body in Python for correctness validation)
+and False on TPU, where the kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .moe_gmm import grouped_matmul as _grouped_matmul
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal=True, window=0, q_offset=0,
+    block_q=128, block_k=128, interpret=None,
+):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "block_k", "interpret")
+)
+def decode_attention(q, k, v, cur_pos, *, window=0, block_k=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _decode_attention(
+        q, k, v, cur_pos, window=window, block_k=block_k, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "block_d", "interpret")
+)
+def grouped_matmul(x, w, *, block_c=128, block_f=128, block_d=512, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _grouped_matmul(
+        x, w, block_c=block_c, block_f=block_f, block_d=block_d,
+        interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, C, *, chunk=128, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _ssd_scan(x, dt, A, Bm, C, chunk=chunk, interpret=interpret)
+
+
+__all__ = [
+    "flash_attention",
+    "decode_attention",
+    "grouped_matmul",
+    "ssd_scan",
+    "ref",
+]
+
+
+from .paged_decode import paged_decode_attention as _paged_decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, page_table, seq_lens, *,
+                           interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged_decode_attention(
+        q, k_pool, v_pool, page_table, seq_lens, interpret=interpret
+    )
+
+
+__all__.append("paged_decode_attention")

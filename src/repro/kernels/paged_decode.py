@@ -1,0 +1,122 @@
+"""Paged flash-decode Pallas kernel (vLLM-style block-table indirection).
+
+Serving engines fragment each request's KV cache into fixed-size PAGES drawn
+from a shared pool (repro.serve.kv_cache); decode attention must then gather
+a request's pages via its block table.  On TPU the indirection maps onto
+**scalar-prefetched BlockSpec index_maps**: the page table lives in SMEM and
+the grid's page step picks which pool page the next VMEM DMA fetches —
+no gather materialization, the KV stream stays at HBM bandwidth.
+
+Layout:
+    q           [BH, hd]               one query token per request×head
+    k/v pool    [n_pages, page, hd]    the shared page pool (per head-group)
+    page_table  [BH, max_pages] int32  pool index of each logical page
+    seq_lens    [BH] int32             valid tokens per request
+
+Grid = (BH, max_pages), page axis innermost/sequential; online-softmax
+accumulators persist in VMEM scratch across the page sweep.  Pages past a
+request's length are masked entirely (their DMA is wasted but harmless;
+production tables sort requests by length to trim the grid).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    table_ref,  # scalar-prefetch: [BH, max_pages] int32
+    lens_ref,  # scalar-prefetch: [BH] int32
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, page: int, n_pages: int,
+):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = lens_ref[b]
+    q = q_ref[0].astype(jnp.float32)  # [1, hd]
+    k = k_ref[0].astype(jnp.float32)  # [page, hd]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [1, page]
+    tok = pi * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(tok < seq_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def paged_decode_attention(
+    q: jax.Array,  # [BH, hd]
+    k_pool: jax.Array,  # [n_pool_pages, page, hd]
+    v_pool: jax.Array,  # [n_pool_pages, page, hd]
+    page_table: jax.Array,  # [BH, max_pages] int32
+    seq_lens: jax.Array,  # [BH] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, hd = q.shape
+    _, page, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, page=page, n_pages=max_pages
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bh, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, pi, table, lens: (b, 0, 0)),
+            # the indirection: the page axis fetches pool page table[b, pi]
+            pl.BlockSpec(
+                (1, page, hd), lambda b, pi, table, lens: (table[b, pi], 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, hd), lambda b, pi, table, lens: (table[b, pi], 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, pi, table, lens: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      q[:, None, :], k_pool, v_pool)
+    return out[:, 0, :]

@@ -1,0 +1,124 @@
+"""Mamba-2 SSD chunked-scan Pallas kernel.
+
+The SSD block decomposition (Dao & Gu, arXiv:2405.21060 §6) splits the
+sequence into chunks: a *quadratic, attention-like* intra-chunk term that
+maps onto the MXU, plus a rank-(d_state) *inter-chunk* state carried
+sequentially.  TPU mapping: grid = (B·NH, n_chunks) with the chunk axis
+innermost (sequential), the running state [hd, ds] resident in VMEM scratch
+across chunks, and every intra-chunk contraction expressed as an MXU matmul
+(chunk=128/256 aligns the Q×Q decay matrix to the systolic array).
+
+Heads are processed independently (B and C are shared across heads in
+Mamba-2 with n_groups=1, so they are broadcast per head outside).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    x_ref,  # [1, Q, hd]
+    dt_ref,  # [1, Q, 1]   (dt · A already folded: dA = dt * A[head])
+    dtb_ref,  # [1, Q, 1]  raw dt (the B⊗x weight)
+    b_ref,  # [1, Q, ds]
+    c_ref,  # [1, Q, ds]
+    y_ref,  # [1, Q, hd]
+    h_ref,  # VMEM scratch [hd, ds] — running inter-chunk state
+    *, n_chunks: int, chunk: int,
+):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # [Q, hd]
+    dA = dt_ref[0, :, 0].astype(jnp.float32)  # [Q]  (negative)
+    dt = dtb_ref[0, :, 0].astype(jnp.float32)  # [Q]
+    B = b_ref[0].astype(jnp.float32)  # [Q, ds]
+    C = c_ref[0].astype(jnp.float32)  # [Q, ds]
+
+    seg = jnp.cumsum(dA)  # [Q]
+    total = seg[-1]
+
+    # ---- intra-chunk: attention-form  M = (C Bᵀ) ∘ L ∘ dt_j
+    scores = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, Q]
+    rel = seg[:, None] - seg[None, :]
+    causal = (
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    )
+    # mask before exp (upper-triangle rel > 0 overflows; see blocks._ssd_scan)
+    L = jnp.exp(jnp.where(causal, rel, -jnp.inf))
+    M = scores * L * dt[None, :]
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [Q, hd]
+
+    # ---- inter-chunk: y += exp(seg_i) · C_i · H_in
+    h_in = h_ref[...]  # [hd, ds]
+    y += jnp.exp(seg)[:, None] * jax.lax.dot_general(
+        C, h_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # ---- state update:  H = exp(total)·H_in + Σ_j exp(total−seg_j)·dt_j·x_jᵀB_j
+    w = jnp.exp(total - seg) * dt  # [Q]
+    outer = jax.lax.dot_general(
+        x * w[:, None], B, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [hd, ds]
+    h_ref[...] = jnp.exp(total) * h_in + outer
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(
+    x: jax.Array,  # [B, S, nh, hd]
+    dt: jax.Array,  # [B, S, nh]  (f32, post-softplus)
+    A: jax.Array,  # [nh] (negative)
+    Bm: jax.Array,  # [B, S, ds]
+    C: jax.Array,  # [B, S, ds]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns y [B, S, nh, hd] (f32). D-skip and gating stay outside."""
+    b, s, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    chunk = min(chunk, s)
+    if s % chunk:
+        raise ValueError(f"seq {s} must divide chunk {chunk}")
+    n_chunks = s // chunk
+
+    # flatten (B, nh) → BH and broadcast shared B/C per head
+    xf = x.transpose(0, 2, 1, 3).reshape(b * nh, s, hd)
+    dA = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(b * nh, s, 1)
+    dtf = dt.transpose(0, 2, 1).reshape(b * nh, s, 1)
+    Bf = jnp.broadcast_to(Bm[:, None], (b, nh, s, ds)).reshape(b * nh, s, ds)
+    Cf = jnp.broadcast_to(C[:, None], (b, nh, s, ds)).reshape(b * nh, s, ds)
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(b * nh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hd), lambda h, ci: (h, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, ci: (h, ci, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda h, ci: (h, ci, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda h, ci: (h, ci, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda h, ci: (h, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, hd), lambda h, ci: (h, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * nh, s, hd), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((hd, ds), jnp.float32)],
+        interpret=interpret,
+    )(xf, dA, dtf, Bf, Cf)
+    return y.reshape(b, nh, s, hd).transpose(0, 2, 1, 3)

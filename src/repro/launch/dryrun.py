@@ -1,0 +1,326 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init) — they give this process 512 placeholder CPU devices so
+``jax.make_mesh`` can build the production meshes:
+
+    single-pod: (16, 16)      ("data", "model")        = 256 chips
+    multi-pod:  (2, 16, 16)   ("pod", "data", "model") = 512 chips
+
+Per cell the driver:
+  1. builds ShapeDtypeStruct stand-ins (no allocation) for params/opt/batch,
+  2. resolves arch/shape-aware sharding rules (repro.dist.presets),
+  3. ``jax.jit(step, in_shardings=…).lower(...).compile()`` — success proves
+     the distribution config is coherent,
+  4. records memory_analysis / cost_analysis / per-collective byte counts
+     (parsed from the post-SPMD HLO) to JSON for the roofline analysis.
+
+Usage:
+    python -m repro.launch.dryrun --arch internlm2-1.8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+"""
+
+import argparse
+import json
+import re
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES
+from repro.dist.presets import arch_overrides, batch_shardings
+from repro.dist.sharding import make_rules, param_shardings, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs, model_state_specs
+from repro.models import decode_step, prefill
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*"
+    r"\(?\s*([a-z0-9]+)\[([0-9,]*)\]"
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (per-device)
+    post-SPMD HLO."""
+    out = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        op, dtype, dims = m.group(1), m.group(2), m.group(3)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        entry = out.setdefault(op, {"count": 0, "bytes": 0})
+        entry["count"] += 1
+        entry["bytes"] += n * _DTYPE_BYTES[dtype]
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    try:
+        cost = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))}
+
+
+def _memory_dict(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if m is None:
+        return {}
+    out = {}
+    for k in (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        if hasattr(m, k):
+            out[k] = int(getattr(m, k))
+    return out
+
+
+#: §Perf variants — each is a hypothesis in the hillclimb log (EXPERIMENTS.md)
+VARIANTS = {
+    "baseline": {},
+    # qwen-train: never materialize [B,S,V] f32 logits
+    "chunked_loss": {"loss_chunk": 512},
+    # qwen-train: save matmul outputs in remat (cuts the 4/3 recompute tax)
+    "dots": {"remat": "dots"},
+    "chunked+dots": {"loss_chunk": 512, "remat": "dots"},
+    # qwen-train: 8-way microbatch accumulation — per-micro backward runs
+    # inside the accumulation scan body, so activation residency divides by 8
+    "micro8": {"microbatches": 8, "loss_chunk": 512},
+    "micro16": {"microbatches": 16, "loss_chunk": 512},
+    "micro32": {"microbatches": 32, "loss_chunk": 512},
+    # zamba2-train: ZeRO-1 — params replicated (no per-layer fsdp gathers),
+    # optimizer state still sharded over data
+    "zero1": {"zero1": True},
+    # decode cells: serve-mode sharding — weights TP-resident (no fsdp
+    # all-gathers per step), KV cache sequence-sharded over the model axis,
+    # MoE expert-internal dim over data (token-sized collectives only)
+    "serve_v2": {"serve_v2": True},
+    # vocab-sharded embedding tables force gather full-remats (fwd) and
+    # scatter collectives (bwd) — replicating the table trades ≤1 GiB HBM
+    # for the entire gather/scatter collective chain
+    "serve_v3": {"serve_v2": True, "repembed": True},
+    "zero1+repembed": {"zero1": True, "repembed": True},
+    "repembed": {"repembed": True},
+}
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool, variant: str = "baseline"):
+    """Returns (lowered, meta) for one (arch × shape × mesh) cell."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    if shape_name not in cfg.applicable_shapes:
+        return None, {"skipped": True, "reason": "shape not applicable"}
+    v = VARIANTS[variant]
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = arch_overrides(cfg, mesh, shape)
+    if v.get("serve_v2"):
+        overrides["fsdp"] = None
+        overrides["kv_seq"] = "model"
+        if cfg.moe is not None and overrides.get("expert", "x") is not None:
+            # safe together with the GLOBAL decode dispatch (no batch axis
+            # in the expert GEMM): experts shard over model × data →
+            # deepseek's 226 B expert params = 1.8 GiB/device
+            overrides["expert_mlp"] = "data"
+    if v.get("repembed"):
+        overrides["vocab"] = None
+    rules = make_rules(mesh, overrides=overrides)
+    specs = input_specs(cfg, shape)
+    b_shardings = batch_shardings(cfg, rules, specs)
+
+    with use_rules(rules):
+        if shape.kind == "train":
+            params_s, opt_s = model_state_specs(cfg)
+            if v.get("zero1"):
+                nofsdp = make_rules(
+                    mesh, overrides=overrides | {"fsdp": None}
+                )
+                p_shard = param_shardings(params_s, nofsdp)
+                m_shard = param_shardings(params_s, rules)
+            else:
+                p_shard = param_shardings(params_s, rules)
+                m_shard = p_shard
+            o_shard = adamw.AdamWState(
+                step=rules.sharding(()),
+                m=m_shard,
+                v=m_shard,
+            )
+            step_fn = make_train_step(
+                cfg,
+                adamw.AdamWConfig(),
+                microbatches=v.get("microbatches", 1),
+                remat=v.get("remat", True),
+                loss_chunk=v.get("loss_chunk"),
+            )
+            jitted = jax.jit(
+                step_fn,
+                in_shardings=(p_shard, o_shard, b_shardings),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_s, opt_s, specs)
+        elif shape.kind == "prefill":
+            params_s = model_state_specs(cfg, with_opt=False)
+            p_shard = param_shardings(params_s, rules)
+
+            def prefill_fn(params, batch):
+                tokens = batch["tokens"]
+                extra = {k: v for k, v in batch.items() if k != "tokens"}
+                return prefill(
+                    cfg, params, tokens, extra=extra or None,
+                    max_seq=shape.seq_len, remat=True,
+                )
+
+            jitted = jax.jit(prefill_fn, in_shardings=(p_shard, b_shardings))
+            lowered = jitted.lower(params_s, specs)
+        else:  # decode
+            params_s = model_state_specs(cfg, with_opt=False)
+            p_shard = param_shardings(params_s, rules)
+
+            def decode_fn(params, tokens, caches, pos):
+                return decode_step(cfg, params, tokens, caches, pos)
+
+            jitted = jax.jit(
+                decode_fn,
+                in_shardings=(
+                    p_shard,
+                    b_shardings["tokens"],
+                    b_shardings["caches"],
+                    b_shardings["pos"],
+                ),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(
+                params_s, specs["tokens"], specs["caches"], specs["pos"]
+            )
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "variant": variant,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return lowered, meta
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool,
+    out_dir: str,
+    variant: str = "baseline",
+):
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if variant != "baseline":
+        tag += f"__{variant}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            prev = json.load(f)
+        if "error" not in prev:
+            print(f"[skip] {tag} (cached)")
+            return prev
+    t0 = time.time()
+    try:
+        lowered, meta = build_cell(
+            arch, shape_name, multi_pod=multi_pod, variant=variant
+        )
+        if lowered is None:
+            record = meta | {"arch": arch, "shape": shape_name}
+            print(f"[n/a ] {tag}: {meta['reason']}")
+        else:
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            record = meta | {
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "cost": _cost_dict(compiled),
+                "memory": _memory_dict(compiled),
+                "collectives": collective_bytes(compiled.as_text()),
+            }
+            print(
+                f"[ ok ] {tag}: lower {t_lower:.1f}s compile {t_compile:.1f}s "
+                f"flops/dev={record['cost'].get('flops', 0):.3e}"
+            )
+    except Exception as e:  # record failures — they are bugs to fix
+        record = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "error": f"{type(e).__name__}: {e}"[:2000],
+        }
+        print(f"[FAIL] {tag}: {record['error'][:200]}")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=sorted(VARIANTS))
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    ok = fail = skipped = 0
+    for a, s, mp in cells:
+        rec = run_cell(
+            a, s, multi_pod=mp, out_dir=args.out, variant=args.variant
+        )
+        if rec.get("skipped"):
+            skipped += 1
+        elif "error" in rec:
+            fail += 1
+        else:
+            ok += 1
+    print(f"\ndry-run: {ok} ok, {fail} failed, {skipped} n/a")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

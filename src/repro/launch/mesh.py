@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state.  Production target: TPU v5e pods —
+16×16 = 256 chips per pod ("data", "model"); the multi-pod mesh adds a
+leading "pod" axis (2×16×16 = 512 chips).  Hardware constants for the
+roofline live in repro.roofline.analysis.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh():
+    """A 1×1 mesh over the local device — smoke tests / CPU runs."""
+    return jax.make_mesh((1, 1), ("data", "model"))

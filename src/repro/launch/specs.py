@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run contract.
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable abstract
+values for the given (architecture × input-shape) cell, with no device
+allocation:
+
+    train_*    → {tokens, labels}  (+ modality-stub embeddings)
+    prefill_*  → {tokens}          (+ stubs)
+    decode_* / long_* → {tokens [B,1], caches(seq_len), pos}
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import init_cache
+from repro.models.transformer import init_model
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _stub_inputs(cfg: ArchConfig, batch: int, seq: int) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "vision_stub":
+        out["patch_embeds"] = _sds((batch, cfg.vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_layers:
+        out["frame_embeds"] = _sds(
+            (batch, seq // cfg.enc_seq_divisor, cfg.d_model), jnp.bfloat16
+        )
+    return out
+
+
+def train_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.enc_layers:
+        # enc-dec: encoder sees the frames; decoder trains on text tokens
+        dec_len = min(s // 8, 512)
+        out = {
+            "tokens": _sds((b, dec_len), jnp.int32),
+            "labels": _sds((b, dec_len), jnp.int32),
+        }
+        out.update(_stub_inputs(cfg, b, s))
+        return out
+    out = {
+        "tokens": _sds((b, s), jnp.int32),
+        "labels": _sds((b, s), jnp.int32),
+    }
+    out.update(_stub_inputs(cfg, b, s))
+    return out
+
+
+def prefill_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.enc_layers:
+        out = {"tokens": _sds((b, min(s // 8, 448)), jnp.int32)}
+        out.update(_stub_inputs(cfg, b, s))
+        return out
+    out = {"tokens": _sds((b, s), jnp.int32)}
+    if cfg.frontend == "vision_stub":
+        out.update(_stub_inputs(cfg, b, s))
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Decode: one new token against a seq_len KV cache."""
+    b, s = shape.global_batch, shape.seq_len
+    caches = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    if cfg.enc_layers:
+        hd = cfg.head_dim
+        t_enc = s // cfg.enc_seq_divisor
+        caches = dict(caches)
+        caches["cross_kv"] = (
+            _sds((b, cfg.n_kv_heads, t_enc, hd), jnp.bfloat16),
+            _sds((b, cfg.n_kv_heads, t_enc, hd), jnp.bfloat16),
+        )
+    return {
+        "tokens": _sds((b, 1), jnp.int32),
+        "caches": caches,
+        "pos": _sds((), jnp.int32),
+    }
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def model_state_specs(cfg: ArchConfig, *, with_opt: bool = True):
+    """Abstract (params, opt_state) via eval_shape — no allocation."""
+    params = jax.eval_shape(
+        lambda: init_model(cfg, jax.random.PRNGKey(0))
+    )
+    if not with_opt:
+        return params
+    from repro.optim import adamw
+
+    opt = jax.eval_shape(lambda: adamw.init(params))
+    return params, opt

@@ -1,0 +1,19 @@
+"""Model zoo: 10 assigned architectures over a shared block-program core."""
+
+from .transformer import (
+    backbone_forward,
+    decode_step,
+    forward,
+    init_cache,
+    init_model,
+    prefill,
+)
+
+__all__ = [
+    "backbone_forward",
+    "decode_step",
+    "forward",
+    "init_cache",
+    "init_model",
+    "prefill",
+]

@@ -1,0 +1,246 @@
+"""Model primitives: norms, RoPE, chunked attention, gated MLP.
+
+Pure-JAX (jnp + lax) implementations designed for:
+  * scan-over-layers stacking (init fns are vmap-able),
+  * SPMD sharding via activation-constraint hooks (repro.dist.sharding),
+  * O(S) attention memory through query-block chunking with online softmax
+    (the jnp baseline of the Pallas flash kernel in repro.kernels).
+
+Weights live in bf16 by default; all reductions (norm, softmax, logits) run
+in f32.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard as _shard
+
+Array = jax.Array
+
+# ---------------------------------------------------------- grad boundaries
+@jax.custom_vjp
+def bf16_grad(x: Array) -> Array:
+    """Identity forward; casts the COTANGENT to bf16 on the way back.
+
+    Placed at residual-stream block boundaries: activation gradients between
+    blocks stay bf16 (standard mixed precision), which halves every
+    tensor-parallel activation-grad all-reduce — measured 512→256 MiB per
+    reduction on zamba2-train (EXPERIMENTS.md §Perf-2 follow-up).  Weight
+    gradients and optimizer math remain f32.
+    """
+    return x
+
+
+def _bf16_grad_fwd(x):
+    return x, None
+
+
+def _bf16_grad_bwd(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+# --------------------------------------------------------------------- init
+def dense_init(key, in_dim: int, out_dim: int, dtype=jnp.bfloat16) -> Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(
+        dtype
+    )
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.bfloat16) -> Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# -------------------------------------------------------------------- norms
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)
+
+
+# --------------------------------------------------------------------- RoPE
+def rope_frequencies(head_dim: int, theta: float) -> Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: [..., S, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)  # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- attention
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: Array, groups: int) -> Array:
+    """[B, kv, S, hd] → [B, kv*groups, S, hd] (GQA head replication)."""
+    if groups == 1:
+        return k
+    b, kv, s, hd = k.shape
+    return jnp.broadcast_to(k[:, :, None], (b, kv, groups, s, hd)).reshape(
+        b, kv * groups, s, hd
+    )
+
+
+def chunked_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk: int = 512,
+) -> Array:
+    """Flash-style attention: scan over query blocks with full-K lazily
+    masked logits — peak memory O(chunk × S) instead of O(S²).
+
+    q: [B, H, Sq, hd]; k, v: [B, KV, Sk, hd] (KV heads repeated to H here).
+    ``q_offset`` is the absolute position of q[..., 0, :] (prefill chunking /
+    decode).  ``window`` enables sliding-window (local) masking.
+    """
+    b, h, sq, hd = q.shape
+    kv_heads = k.shape[1]
+    groups = h // kv_heads
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    sk = k.shape[2]
+    v_dim = v.shape[-1]  # may differ from hd (MLA)
+    scale = 1.0 / math.sqrt(hd)
+
+    chunk = min(chunk, sq)
+    n_chunks = (sq + chunk - 1) // chunk
+    pad = n_chunks * chunk - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    qs = q.reshape(b, h, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+
+    k_pos = jnp.arange(sk)
+
+    def body(carry, inputs):
+        idx, q_blk = inputs  # q_blk: [B, H, chunk, hd]
+        logits = (
+            jnp.einsum(
+                "bhqd,bhkd->bhqk", q_blk.astype(jnp.float32), k.astype(jnp.float32)
+            )
+            * scale
+        )
+        q_pos = q_offset + idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((chunk, sk), dtype=bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos[:, None] - k_pos[None, :]) < window
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+        return carry, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qs))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(b, h, n_chunks * chunk, v_dim)
+    if pad:
+        out = out[:, :, :sq]
+    return out
+
+
+def decode_attention(
+    q: Array,
+    k_cache: Array,
+    v_cache: Array,
+    cur_pos: Array,
+    *,
+    window: Optional[int] = None,
+) -> Array:
+    """Single-token attention over a KV cache.
+
+    q: [B, H, 1, hd]; k_cache/v_cache: [B, KV, S, hd]; cur_pos: scalar int —
+    number of valid cache entries (the new token attends to [0, cur_pos]).
+    """
+    b, h, _, hd = q.shape
+    kv_heads = k_cache.shape[1]
+    k = _repeat_kv(k_cache, h // kv_heads)
+    v = _repeat_kv(v_cache, h // kv_heads)
+    sk = k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    logits = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    k_pos = jnp.arange(sk)
+    mask = k_pos[None, :] <= cur_pos
+    if window is not None:
+        mask &= k_pos[None, :] > (cur_pos - window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ring(
+    q: Array,
+    k_ring: Array,
+    v_ring: Array,
+    cur_pos: Array,
+    window: int,
+) -> Array:
+    """Sliding-window decode over a RING-BUFFER cache of size ``window``.
+
+    Slot ``i`` holds the key whose absolute position is the largest
+    ``p ≤ cur_pos`` with ``p % window == i``; keys carry RoPE applied at
+    their absolute position, so attention is order-agnostic given the mask:
+    a slot is valid iff its absolute position is ≥ 0 and ≥ cur_pos−window+1
+    (the latter holds by construction once the ring has wrapped).
+    The cache is O(window) instead of O(seq) — 1024× smaller for gemma3's
+    local layers at long_500k.
+    """
+    b, h, _, hd = q.shape
+    kv_heads = k_ring.shape[1]
+    k = _repeat_kv(k_ring, h // kv_heads)
+    v = _repeat_kv(v_ring, h // kv_heads)
+    scale = 1.0 / math.sqrt(hd)
+    logits = (
+        jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+        * scale
+    )
+    slots = jnp.arange(window)
+    abs_pos = cur_pos - ((cur_pos - slots) % window)  # [window]
+    mask = (abs_pos >= 0) & (abs_pos <= cur_pos)
+    logits = jnp.where(mask[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------- MLP
+def init_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype),
+        "down": dense_init(k3, d_ff, d_model, dtype),
+    }
+
+
+def apply_mlp(params: dict, x: Array) -> Array:
+    gate = jnp.einsum("bsd,df->bsf", x, params["gate"])
+    up = jnp.einsum("bsd,df->bsf", x, params["up"])
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = _shard(h, ("batch", "seq", "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, params["down"])

@@ -1,0 +1,244 @@
+"""Three-term roofline analysis from dry-run artifacts.
+
+Per (arch × shape × mesh) cell, from the compiled dry-run record:
+
+    compute    = HLO_FLOPs_per_device   / peak_FLOPs_per_chip
+    memory     = HLO_bytes_per_device   / HBM_bandwidth_per_chip
+    collective = collective_bytes_per_device / ICI_link_bandwidth
+
+``cost_analysis()`` of an SPMD executable reports the per-device partitioned
+module, so all three terms are per-chip seconds directly (the global
+formulation of the assignment divides global quantities by chip count —
+identical numbers).  MODEL_FLOPS uses 6·N·T (train) / 2·N·T (inference)
+with N = active params, plus the causal-attention term; the ratio
+MODEL_FLOPS / (HLO_FLOPs × chips) measures how much compiled compute is
+"useful" (remat recompute, dispatch overheads and padding show up here).
+
+TPU v5e chip constants (assignment-specified).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link
+
+CHIPS = {"16x16": 256, "2x16x16": 512}
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs for the whole step (global, all chips)."""
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    b, s = shape.global_batch, shape.seq_len
+
+    counts: Dict[str, int] = {}
+    for blk in (
+        list(cfg.block_pattern) * cfg.resolved_pattern_repeats
+        + list(cfg.suffix_blocks)
+    ):
+        counts[blk] = counts.get(blk, 0) + 1
+    full_attn = counts.get("attn", 0) + counts.get("shared_attn", 0)
+    local_attn = counts.get("local_attn", 0)
+    qk_dim = cfg.n_heads * cfg.head_dim if cfg.n_heads else 0
+
+    if shape.kind == "train":
+        tokens = b * s
+        flops = 6.0 * n_active * tokens
+        # causal attention: fwd 2·(QK+PV)·0.5, bwd ×2 → 6·S²·qk·0.5
+        flops += 6.0 * full_attn * b * s * s * qk_dim
+        flops += 6.0 * local_attn * b * s * min(s, cfg.sliding_window) * qk_dim
+        return flops
+    if shape.kind == "prefill":
+        tokens = b * s
+        flops = 2.0 * n_active * tokens
+        flops += 2.0 * full_attn * b * s * s * qk_dim
+        flops += 2.0 * local_attn * b * s * min(s, cfg.sliding_window) * qk_dim
+        return flops
+    # decode: one token over a seq_len cache
+    flops = 2.0 * n_active * b
+    flops += 4.0 * full_attn * b * s * qk_dim  # QK + PV over the cache
+    flops += 4.0 * local_attn * b * min(s, cfg.sliding_window) * qk_dim
+    if cfg.ssm is not None and counts.get("mamba"):
+        ssm = cfg.ssm
+        flops += (
+            4.0 * counts["mamba"] * b
+            * ssm.n_heads(cfg.d_model) * ssm.head_dim * ssm.d_state
+        )
+    return flops
+
+
+def memory_traffic_bytes(arch: str, shape_name: str) -> float:
+    """Analytic minimum HBM traffic per step (global bytes).
+
+    The compiled ``cost_analysis()`` on the CPU backend does NOT scale
+    while-loop bodies by trip count (scan-over-layers ⇒ up to L× FLOP/byte
+    undercount), so the roofline's primary memory term is this analytic
+    envelope (raw compiled numbers stay in the table for reference):
+
+      decode : weights once per step + whole KV cache + constant states
+      prefill: weights + KV written + activations (8 B/elem/layer envelope)
+      train  : params+opt traffic (20·N: bf16 p r/w, f32 m,v r/w, grads)
+               + activations 24 B/elem/layer (fwd save + bwd touch, bf16)
+    """
+    from repro.serve.kv_cache import constant_state_bytes, kv_bytes_per_token
+
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    n_total = cfg.param_count()
+    n_active = cfg.active_param_count()
+    kv_tok = kv_bytes_per_token(cfg)
+    states = constant_state_bytes(cfg)
+    d, L = cfg.d_model, cfg.n_layers
+
+    if shape.kind == "decode":
+        experts_touched = 1.0
+        weights = 2.0 * n_total  # bf16; all experts touched at batch≥128
+        kv = b * (kv_tok * s + states)
+        acts = b * L * d * 24.0
+        return weights + kv + acts
+    if shape.kind == "prefill":
+        tokens = b * s
+        weights = 2.0 * n_active * max(1.0, 1.0)  # streamed once (batched)
+        kv_write = b * (kv_tok * s + states)
+        acts = tokens * L * d * 8.0
+        return weights + kv_write + acts
+    tokens = b * s
+    opt_traffic = 20.0 * n_total
+    acts = tokens * L * d * 24.0
+    return opt_traffic + acts
+
+
+@dataclass
+class RooflineCell:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float  # analytic useful compute (remat-adjusted) / peak
+    memory_s: float  # analytic traffic / HBM bw
+    collective_s: float  # HLO-parsed collective payload / ICI
+    model_flops: float
+    hlo_flops_global: float
+    hlo_compute_s: float  # raw compiled cost_analysis (scan-undercounted)
+    hlo_memory_s: float
+    temp_bytes: Optional[int]
+    collectives: Dict[str, dict]
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step-time bound: no-overlap = max of the three terms
+        (each unit is independently saturable)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_fraction(self) -> float:
+        if self.hlo_flops_global <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_global
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the step-time bound:
+        (useful FLOPs / chips / step_time) / peak — the §Perf score."""
+        chips = CHIPS[self.mesh]
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / chips / self.step_time_s) / PEAK_FLOPS
+
+
+def load_cell(record: dict) -> Optional[RooflineCell]:
+    if record.get("skipped") or "error" in record:
+        return None
+    cost = record.get("cost", {})
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes accessed", 0.0)
+    coll = record.get("collectives", {})
+    coll_bytes = sum(v.get("bytes", 0) for v in coll.values())
+    chips = CHIPS[record["mesh"]]
+    arch, shape = record["arch"], record["shape"]
+    mflops = model_flops(arch, shape)
+    remat = 4.0 / 3.0 if record.get("kind") == "train" else 1.0
+    traffic = memory_traffic_bytes(arch, shape)
+    return RooflineCell(
+        arch=arch,
+        shape=shape,
+        mesh=record["mesh"],
+        compute_s=mflops * remat / chips / PEAK_FLOPS,
+        memory_s=traffic / chips / HBM_BW,
+        collective_s=coll_bytes / ICI_BW,
+        model_flops=mflops,
+        hlo_flops_global=flops_dev * chips,
+        hlo_compute_s=flops_dev / PEAK_FLOPS,
+        hlo_memory_s=bytes_dev / HBM_BW,
+        temp_bytes=record.get("memory", {}).get("temp_size_in_bytes"),
+        collectives=coll,
+    )
+
+
+def load_all(dryrun_dir: str, mesh: str = "16x16") -> List[RooflineCell]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") != mesh:
+            continue
+        cell = load_cell(rec)
+        if cell is not None:
+            cells.append(cell)
+    return cells
+
+
+def markdown_table(cells: List[RooflineCell]) -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | bottleneck "
+        "| roofline frac | HLO compute s | HLO memory s | temp GiB/dev |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for c in cells:
+        temp = f"{c.temp_bytes / 2**30:.1f}" if c.temp_bytes else "–"
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s:.3e} | {c.memory_s:.3e} "
+            f"| {c.collective_s:.3e} | **{c.bottleneck}** "
+            f"| {c.roofline_fraction:.3f} "
+            f"| {c.hlo_compute_s:.2e} | {c.hlo_memory_s:.2e} | {temp} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    cells = load_all(args.dir, args.mesh)
+    print(markdown_table(cells))
+    worst = sorted(cells, key=lambda c: c.roofline_fraction)[:3]
+    coll = sorted(cells, key=lambda c: -c.collective_s)[:3]
+    print("\nworst roofline fraction:", [(c.arch, c.shape) for c in worst])
+    print("most collective-bound:", [(c.arch, c.shape) for c in coll])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .engine import EngineConfig, Request, ServingEngine
+from .kv_cache import PagedKVManager, constant_state_bytes, kv_bytes_per_token
+
+__all__ = [
+    "EngineConfig",
+    "Request",
+    "ServingEngine",
+    "PagedKVManager",
+    "constant_state_bytes",
+    "kv_bytes_per_token",
+]

@@ -1,0 +1,400 @@
+"""Multi-tenant serving engine with MURS HBM-admission control.
+
+The paper's scheduler compiled into a JAX serving runtime: multiple tenants
+submit requests into one engine (one model, one HBM pool — the "service
+mode" of MURS §II).  Each request is a MURS task:
+
+    processed  = tokens consumed so far (prompt + generated)
+    live bytes = its KV/state footprint from the PagedKVManager
+    rate       = Δlive/Δtokens — measured online by the MURS Sampler, which
+                 classifies full-attention decodes as linear, MLA as shallow-
+                 linear, sliding-window/mamba as constant (paper §III models)
+
+Every ``period`` ticks the MursScheduler runs Algorithm 1 against the pool:
+requests proposed for suspension stop being scheduled (their KV stays
+resident — exactly Spark's suspended tasks); one suspended request resumes
+per completion (FIFO, starvation-free) and all resume when pressure drops
+below yellow.  The red band triggers ComputeSpill: offload-avoidance by
+parallelism reduction.  The FAIR baseline schedules round-robin and, like
+stock Spark, OOMs/offloads when the pool runs dry.
+
+Decode runs slot-batched: one jitted vmapped decode step advances every
+active slot per tick with per-slot positions.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.memory_manager import MemoryPool
+from repro.core.sampler import Sampler
+from repro.core.scheduler import MursConfig, MursScheduler
+from repro.models import decode_step, init_cache, prefill
+from repro.serve.kv_cache import PagedKVManager
+
+
+@dataclass
+class Request:
+    request_id: str
+    tenant: str
+    prompt: List[int]
+    max_new_tokens: int
+    submit_tick: int = 0
+    slot: int = -1
+    pos: int = 0  # tokens materialized in the cache so far
+    generated: List[int] = field(default_factory=list)
+    state: str = "queued"  # queued|prefill|decoding|suspended|offloaded|done|failed
+    finish_tick: int = -1
+    #: MURS §III classification of this request's memory behaviour, as
+    #: measured online by the sampler (constant/sub_linear/linear/super_linear)
+    memory_model: str = "constant"
+    reload_at: int = -1  # tick when an offloaded request finishes reloading
+    offloads: int = 0
+
+    @property
+    def total_tokens(self) -> int:
+        return len(self.prompt) + self.max_new_tokens
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+@dataclass
+class EngineConfig:
+    n_slots: int = 4
+    max_seq: int = 128
+    hbm_capacity_bytes: float = 1e6  # KV pool budget (simulated pressure)
+    scheduler: Optional[MursConfig] = None  # None → FAIR baseline
+    murs_period_ticks: int = 1
+    greedy: bool = True
+    #: host-DRAM offload ("spill") instead of hard failure when the pool
+    #: overcommits; reloading costs this many ticks per offloaded request
+    offload_enabled: bool = True
+    offload_reload_ticks: int = 8
+
+
+class ServingEngine:
+    def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.pool = MemoryPool(capacity=ecfg.hbm_capacity_bytes)
+        self.kv = PagedKVManager(capacity_bytes=ecfg.hbm_capacity_bytes)
+        self.murs = (
+            MursScheduler(ecfg.scheduler) if ecfg.scheduler is not None else None
+        )
+        self.sampler = Sampler()
+        self.tick = 0
+        self.queue: List[Request] = []
+        self.requests: Dict[str, Request] = {}
+        self.failed: List[str] = []
+        self.completed: List[str] = []
+        self.suspensions = 0
+        self.peak_used_fraction = 0.0
+
+        # slot-batched decode state.  Cache layout quirk: "unit" leaves are
+        # scan-stacked [reps, batch, ...] (batch on axis 1) while "suffix"
+        # (and cross_kv) leaves are [batch, ...] — vmap axes and the
+        # batch-insert/strip helpers below account for that.
+        self._caches = init_cache(cfg, ecfg.n_slots, ecfg.max_seq)
+        self._slot_req: List[Optional[str]] = [None] * ecfg.n_slots
+
+        def _cache_axes(caches):
+            axes = {
+                "unit": jax.tree_util.tree_map(lambda _: 1, caches["unit"]),
+                "suffix": jax.tree_util.tree_map(
+                    lambda _: 0, caches["suffix"]
+                ),
+            }
+            if "cross_kv" in caches:
+                axes["cross_kv"] = jax.tree_util.tree_map(
+                    lambda _: 0, caches["cross_kv"]
+                )
+            return axes
+
+        def _add_batch(caches):
+            out = {
+                "unit": jax.tree_util.tree_map(
+                    lambda x: x[:, None], caches["unit"]
+                ),
+                "suffix": jax.tree_util.tree_map(
+                    lambda x: x[None], caches["suffix"]
+                ),
+            }
+            if "cross_kv" in caches:
+                out["cross_kv"] = jax.tree_util.tree_map(
+                    lambda x: x[None], caches["cross_kv"]
+                )
+            return out
+
+        def _strip_batch(caches):
+            out = {
+                "unit": jax.tree_util.tree_map(
+                    lambda x: x[:, 0], caches["unit"]
+                ),
+                "suffix": jax.tree_util.tree_map(
+                    lambda x: x[0], caches["suffix"]
+                ),
+            }
+            if "cross_kv" in caches:
+                out["cross_kv"] = jax.tree_util.tree_map(
+                    lambda x: x[0], caches["cross_kv"]
+                )
+            return out
+
+        def _one_slot_decode(params, token, caches, pos):
+            logits, new_caches = decode_step(
+                cfg, params, token[None], _add_batch(caches), pos
+            )
+            return logits[0], _strip_batch(new_caches)
+
+        self._decode_all = jax.jit(
+            jax.vmap(
+                _one_slot_decode,
+                in_axes=(None, 0, _cache_axes(self._caches), 0),
+                out_axes=(0, _cache_axes(self._caches)),
+            ),
+            donate_argnums=(2,),
+        )
+        self._prefill = jax.jit(
+            lambda params, tokens: prefill(
+                cfg, params, tokens, max_seq=ecfg.max_seq, remat=False
+            )
+        )
+
+    # ------------------------------------------------------------- tenants
+    def submit(self, req: Request) -> None:
+        req.submit_tick = self.tick
+        self.queue.append(req)
+        self.requests[req.request_id] = req
+
+    # ------------------------------------------------------------ accounting
+    def _update_pool(self) -> None:
+        for rid, req in self.requests.items():
+            if req.state in ("prefill", "decoding", "suspended"):
+                self.pool.set_live(rid, self.kv.request_bytes(rid))
+        self.peak_used_fraction = max(
+            self.peak_used_fraction, self.pool.used_fraction
+        )
+
+    def _active(self) -> List[Request]:
+        return [
+            r
+            for r in self.requests.values()
+            if r.state in ("prefill", "decoding")
+        ]
+
+    # ------------------------------------------------------------ admission
+    def _admit(self) -> None:
+        free_slots = [i for i, r in enumerate(self._slot_req) if r is None]
+        while self.queue and free_slots:
+            req = self.queue[0]
+            new_bytes = (
+                self.kv._page_bytes.get(req.request_id)
+                or 0.0
+            )
+            # capacity check: would this request's prompt fit right now?
+            self.kv.register(req.request_id, self.cfg)
+            prompt_bytes = self.kv.grow_to(req.request_id, len(req.prompt))
+            if (
+                self.pool.used_bytes + prompt_bytes
+                > self.pool.capacity
+            ):
+                # no headroom: FAIR fails the request (OOM semantics);
+                # MURS leaves it queued (admission control)
+                self.kv.release(req.request_id)
+                if self.murs is None:
+                    self.queue.pop(0)
+                    req.state = "failed"
+                    req.finish_tick = self.tick
+                    self.failed.append(req.request_id)
+                    continue
+                break
+            self.queue.pop(0)
+            slot = free_slots.pop(0)
+            req.slot = slot
+            self._slot_req[slot] = req.request_id
+            self._run_prefill(req)
+
+    def _run_prefill(self, req: Request) -> None:
+        req.state = "prefill"
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
+        logits, caches = self._prefill(self.params, tokens)
+        # install the request's cache into its slot (unit leaves carry the
+        # scan dim first → slot axis is 1; suffix/cross leaves → axis 0)
+        slot = req.slot
+        new = dict(self._caches)
+        new["unit"] = jax.tree_util.tree_map(
+            lambda s, o: s.at[:, slot].set(o[:, 0]),
+            self._caches["unit"],
+            caches["unit"],
+        )
+        new["suffix"] = jax.tree_util.tree_map(
+            lambda s, o: s.at[slot].set(o[0]),
+            self._caches["suffix"],
+            caches["suffix"],
+        )
+        if "cross_kv" in self._caches:
+            new["cross_kv"] = jax.tree_util.tree_map(
+                lambda s, o: s.at[slot].set(o[0]),
+                self._caches["cross_kv"],
+                caches["cross_kv"],
+            )
+        self._caches = new
+        req.pos = len(req.prompt)
+        next_tok = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(next_tok)
+        req.state = "decoding"
+        self._update_pool()
+
+    # --------------------------------------------------------------- decode
+    def _decode_tick(self) -> None:
+        active = [
+            (i, self.requests[rid])
+            for i, rid in enumerate(self._slot_req)
+            if rid is not None and self.requests[rid].state == "decoding"
+        ]
+        if not active:
+            return
+        tokens = jnp.zeros((self.ecfg.n_slots, 1), jnp.int32)
+        poss = jnp.zeros((self.ecfg.n_slots,), jnp.int32)
+        for i, req in active:
+            tokens = tokens.at[i, 0].set(req.generated[-1])
+            poss = poss.at[i].set(req.pos)
+        logits, self._caches = self._decode_all(
+            self.params, tokens, self._caches, poss
+        )
+        for i, req in active:
+            req.pos += 1
+            self.kv.grow_to(req.request_id, req.pos)
+            nxt = int(jnp.argmax(logits[i, 0]))
+            req.generated.append(nxt)
+            if req.done:
+                self._finish(req)
+        self._update_pool()
+
+    def _finish(self, req: Request) -> None:
+        req.state = "done"
+        req.finish_tick = self.tick
+        self.completed.append(req.request_id)
+        self._slot_req[req.slot] = None
+        self.pool.release_owner(req.request_id)
+        self.kv.release(req.request_id)
+        self.sampler.forget(req.request_id)
+        if self.murs is not None:
+            rid = self.murs.on_task_complete()
+            if rid is not None:
+                self._resume(rid)
+
+    # ----------------------------------------------------------------- MURS
+    def _murs_pass(self) -> None:
+        assert self.murs is not None
+        active = self._active()
+        for r in active:
+            self.sampler.observe(
+                r.request_id,
+                processed_bytes=float(r.pos),
+                total_bytes=float(r.total_tokens),
+                live_bytes=self.kv.request_bytes(r.request_id),
+            )
+        stats = self.sampler.stats([r.request_id for r in active])
+        # expose the online §III classification on each request
+        for st in stats:
+            self.requests[st.task_id].memory_model = st.model.value
+        frozen = self.sampler.stats(
+            [
+                r.request_id
+                for r in self.requests.values()
+                if r.state == "suspended"
+            ]
+        )
+        decision = self.murs.propose(
+            self.pool, stats, now=float(self.tick), suspended=frozen
+        )
+        for rid in decision.suspend:
+            req = self.requests[rid]
+            if req.state == "decoding":
+                req.state = "suspended"
+                self.suspensions += 1
+        for rid in decision.resume:
+            self._resume(rid)
+
+    def _resume(self, rid: str) -> None:
+        req = self.requests.get(rid)
+        if req is not None and req.state == "suspended":
+            req.state = "decoding"
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> None:
+        self._admit()
+        self._decode_tick()
+        if self.murs is not None and self.tick % self.ecfg.murs_period_ticks == 0:
+            self._murs_pass()
+        # pool overcommitted → the stock path: OFFLOAD the fattest request's
+        # pages to host DRAM (the TPU "spill", paper Table III) when enabled,
+        # else evict/fail.  MURS's suspension keeps usage below this line —
+        # "avoiding the spill" (§VI-E) — but the guard applies to both.
+        if self.murs is None and self.pool.used_fraction > 1.0:
+            victim = max(
+                self._active(), key=lambda r: self.kv.request_bytes(r.request_id),
+                default=None,
+            )
+            if victim is not None:
+                if self.ecfg.offload_enabled and victim.state == "decoding":
+                    self.kv.offload(victim.request_id)
+                    self.pool.release_owner(victim.request_id)
+                    victim.state = "offloaded"
+                    victim.offloads += 1
+                    victim.reload_at = self.tick + self.ecfg.offload_reload_ticks
+                else:
+                    victim.state = "failed"
+                    victim.finish_tick = self.tick
+                    self.failed.append(victim.request_id)
+                    self._slot_req[victim.slot] = None
+                    self.pool.release_owner(victim.request_id)
+                    self.kv.release(victim.request_id)
+        # offloaded requests finish their PCIe reload and re-register
+        for r in self.requests.values():
+            if r.state == "offloaded" and self.tick >= r.reload_at:
+                self.kv.register(r.request_id, self.cfg)
+                self.kv.grow_to(r.request_id, r.pos)
+                r.state = "decoding"
+                self._update_pool()
+        self.tick += 1
+
+    def run(self, max_ticks: int = 1000) -> Dict[str, Any]:
+        while self.tick < max_ticks:
+            pending = self.queue or any(
+                r.state in ("prefill", "decoding", "suspended", "offloaded")
+                for r in self.requests.values()
+            )
+            if not pending:
+                break
+            self.step()
+        lat = [
+            r.finish_tick - r.submit_tick
+            for r in self.requests.values()
+            if r.state == "done"
+        ]
+        return {
+            "completed": len(self.completed),
+            "failed": len(self.failed),
+            "suspensions": self.suspensions,
+            "peak_used_fraction": self.peak_used_fraction,
+            "offload_events": self.kv.offload_events,
+            "mean_latency_ticks": sum(lat) / len(lat) if lat else None,
+            "ticks": self.tick,
+            "tokens_generated": sum(
+                len(r.generated) for r in self.requests.values()
+            ),
+            "memory_models": {
+                r.request_id: r.memory_model for r in self.requests.values()
+            },
+        }

@@ -1,0 +1,125 @@
+"""Paged KV-cache manager: page-granular HBM accounting per request.
+
+The serving engine's memory substrate.  Pages are fixed-size token spans
+(``page_tokens``); a request holds ⌈len/page_tokens⌉ pages per layer-group.
+The manager tracks the byte-exact HBM footprint of every request — this is
+what the MURS sampler reads as the request's *live* bytes, and what decides
+spill-to-host (offload) and OOM.
+
+Byte model per architecture (the MURS memory-usage classification of
+DESIGN.md §4 falls out of these):
+    full attention  : 2 · n_kv · hd · bytes  per token per attn layer  (linear)
+    MLA             : (kv_lora + rope)·bytes per token per layer       (linear,
+                      ~57× shallower slope than per-head KV at dsv2 dims)
+    sliding window  : bounded by window  (constant once past the window)
+    mamba           : fixed state bytes  (constant)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ArchConfig
+
+
+def _block_counts(cfg: ArchConfig) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for b in (
+        list(cfg.block_pattern) * cfg.resolved_pattern_repeats
+        + list(cfg.suffix_blocks)
+    ):
+        counts[b] = counts.get(b, 0) + 1
+    return counts
+
+
+def kv_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
+    """Marginal HBM bytes per generated token (the memory-usage *rate*)."""
+    counts = _block_counts(cfg)
+    per_tok = 0.0
+    if cfg.mla is not None:
+        lat = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        per_tok += (counts.get("attn", 0) + counts.get("local_attn", 0)) * lat * dtype_bytes
+    else:
+        kv = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+        per_tok += counts.get("attn", 0) * kv
+        per_tok += counts.get("shared_attn", 0) * kv
+        # local layers stop growing once past the window → marginal 0 there
+    return per_tok
+
+
+def constant_state_bytes(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
+    """Sequence-length-independent state (mamba states, local windows)."""
+    counts = _block_counts(cfg)
+    total = 0.0
+    if cfg.ssm is not None and counts.get("mamba"):
+        ssm = cfg.ssm
+        di = ssm.d_inner(cfg.d_model)
+        conv = (ssm.d_conv - 1) * (di + 2 * ssm.d_state) * dtype_bytes
+        state = ssm.n_heads(cfg.d_model) * ssm.head_dim * ssm.d_state * 4
+        total += counts["mamba"] * (conv + state)
+    if cfg.mla is None and counts.get("local_attn"):
+        kv = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
+        total += counts["local_attn"] * kv * cfg.sliding_window
+    return total
+
+
+@dataclass
+class PagedKVManager:
+    """Page-pool accounting for a shared HBM region."""
+
+    capacity_bytes: float
+    page_tokens: int = 16
+    _pages: Dict[str, int] = field(default_factory=dict)  # request → pages
+    _page_bytes: Dict[str, float] = field(default_factory=dict)
+    _state_bytes: Dict[str, float] = field(default_factory=dict)
+    offloaded_bytes: float = 0.0
+    offload_events: int = 0
+
+    # ------------------------------------------------------------ requests
+    def register(self, request_id: str, cfg: ArchConfig) -> None:
+        self._pages[request_id] = 0
+        self._page_bytes[request_id] = (
+            kv_bytes_per_token(cfg) * self.page_tokens
+        )
+        self._state_bytes[request_id] = constant_state_bytes(cfg)
+
+    def grow_to(self, request_id: str, n_tokens: int) -> float:
+        """Ensure pages cover ``n_tokens``; returns newly allocated bytes."""
+        need = (n_tokens + self.page_tokens - 1) // self.page_tokens
+        have = self._pages.get(request_id, 0)
+        if need <= have:
+            return 0.0
+        self._pages[request_id] = need
+        return (need - have) * self._page_bytes[request_id]
+
+    def release(self, request_id: str) -> float:
+        pages = self._pages.pop(request_id, 0)
+        pb = self._page_bytes.pop(request_id, 0.0)
+        sb = self._state_bytes.pop(request_id, 0.0)
+        return pages * pb + sb
+
+    def request_bytes(self, request_id: str) -> float:
+        return (
+            self._pages.get(request_id, 0)
+            * self._page_bytes.get(request_id, 0.0)
+            + self._state_bytes.get(request_id, 0.0)
+        )
+
+    @property
+    def used_bytes(self) -> float:
+        return sum(
+            self._pages[r] * self._page_bytes[r] + self._state_bytes[r]
+            for r in self._pages
+        )
+
+    @property
+    def used_fraction(self) -> float:
+        return self.used_bytes / self.capacity_bytes if self.capacity_bytes else 1.0
+
+    def offload(self, request_id: str) -> float:
+        """Spill a request's pages to host DRAM (the TPU 'spill')."""
+        freed = self.release(request_id)
+        self.offloaded_bytes += freed
+        self.offload_events += 1
+        return freed

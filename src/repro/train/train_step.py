@@ -1,0 +1,143 @@
+"""Train step: causal-LM loss, grad accumulation (microbatching), AdamW.
+
+The step is a pure function of (params, opt_state, batch) — jit/pjit-able.
+Microbatch accumulation runs as a lax.scan over microbatch slices so HLO
+size is O(1) in the accumulation factor (and remat applies per layer-unit
+inside the model).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import shard
+from repro.models import forward
+from repro.models.transformer import forward_hidden
+from repro.optim import adamw
+
+PyTree = Any
+
+
+def lm_loss(
+    cfg: ArchConfig,
+    params,
+    batch: Dict[str, jax.Array],
+    *,
+    remat: bool = True,
+    loss_chunk: Optional[int] = None,
+) -> jax.Array:
+    """Next-token cross-entropy, mean over non-padding positions.
+
+    ``loss_chunk`` enables the chunked-vocab loss: the [B, S, vocab] f32
+    logits tensor (38 GiB for qwen at 4k×16/device!) is never materialized —
+    a lax.scan over sequence chunks computes per-chunk NLL against the
+    unembedding, cutting peak temp memory by O(S/chunk)× on the logits term.
+    """
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    extra = {k: v for k, v in batch.items() if k not in ("tokens", "labels")}
+    if loss_chunk is None:
+        logits = forward(cfg, params, tokens, extra=extra or None, remat=remat)
+        # modality frontends prepend positions (vision tokens) — loss runs
+        # on the trailing text positions only
+        logits = logits[:, -labels.shape[1] :]
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        mask = (labels >= 0).astype(jnp.float32)  # label −1 = padding
+        labels_safe = jnp.maximum(labels, 0)
+        nll = -jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    hidden = forward_hidden(cfg, params, tokens, extra=extra or None, remat=remat)
+    hidden = hidden[:, -labels.shape[1] :]
+    w = params["embed"]["tokens"].T if cfg.tie_embeddings else params["lm_head"]
+    b, s, d = hidden.shape
+    chunk = min(loss_chunk, s)
+    n_chunks = (s + chunk - 1) // chunk
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    h_c = hidden.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute chunk logits in backward — never more than
+    # ONE [B, chunk, V] f32 tensor lives at a time in either pass
+    def body(carry, inputs):
+        nll_sum, n_tok = carry
+        h, lab = inputs
+        logits = jnp.einsum(
+            "bsd,dv->bsv", h.astype(jnp.float32), w.astype(jnp.float32)
+        )
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        mask = (lab >= 0).astype(jnp.float32)
+        safe = jnp.maximum(lab, 0)
+        nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+        return (nll_sum + jnp.sum(nll * mask), n_tok + jnp.sum(mask)), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        body, (jnp.float32(0.0), jnp.float32(0.0)), (h_c, l_c)
+    )
+    return nll_sum / jnp.maximum(n_tok, 1.0)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: adamw.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    remat: bool = True,
+    loss_chunk: Optional[int] = None,
+):
+    """Build a (params, opt_state, batch) → (params, opt_state, metrics)
+    step with ``microbatches``-way gradient accumulation."""
+
+    def loss_fn(params, micro_batch):
+        return lm_loss(
+            cfg, params, micro_batch, remat=remat, loss_chunk=loss_chunk
+        )
+
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(params, opt_state: adamw.AdamWState, batch):
+        if microbatches == 1:
+            loss, grads = grad_fn(params, batch)
+        else:
+
+            def micro(i, carry_batch):
+                return jax.tree_util.tree_map(
+                    lambda x: jax.lax.dynamic_slice_in_dim(
+                        x, i * (x.shape[0] // microbatches),
+                        x.shape[0] // microbatches, axis=0,
+                    ),
+                    carry_batch,
+                )
+
+            def body(carry, i):
+                loss_acc, grads_acc = carry
+                l, g = grad_fn(params, micro(i, batch))
+                grads_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), grads_acc, g
+                )
+                return (loss_acc + l, grads_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.float32(0.0), zeros), jnp.arange(microbatches)
+            )
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        new_params, new_opt, gnorm = adamw.update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": new_opt.step}
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,193 @@
+"""Trainer: the fault-tolerant training loop.
+
+Composes: data pipeline → jitted train step (remat + microbatching +
+optional int8-EF gradient compression) → async checkpointing → straggler
+detection → restart-from-latest.  The loop is crash-safe: any exception
+inside a step falls back to the RestartManager policy (restore latest
+checkpoint, bounded retries with backoff).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpointing import AsyncCheckpointer
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.dist import compression
+from repro.dist.fault import RestartManager, StragglerDetector
+from repro.models import init_model
+from repro.optim import adamw
+from repro.train.train_step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 10
+    microbatches: int = 1
+    remat: bool = True
+    grad_compression: bool = False
+    seed: int = 0
+    log_every: int = 5
+    opt: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+    #: MURS-adaptive accumulation: a probe returning HBM pool used-fraction
+    #: drives the microbatch factor through the yellow/red thresholds
+    #: (repro.train.pressure).  None disables.
+    hbm_probe: Optional[Callable[[], float]] = None
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        shape: ShapeConfig,
+        tcfg: Optional[TrainerConfig] = None,
+        *,
+        batch: Optional[int] = None,
+        seq: Optional[int] = None,
+    ) -> None:
+        self.cfg = cfg
+        self.shape = shape
+        self.tcfg = tcfg or TrainerConfig()
+        self.batch = batch
+        self.seq = seq
+        self.ckpt = AsyncCheckpointer()
+        self.restart = RestartManager(self.tcfg.ckpt_dir)
+        self.straggler = StragglerDetector()
+        self.metrics_log: list = []
+        self._adaptive = None
+        self._step_cache: Dict[int, Any] = {}
+        if self.tcfg.hbm_probe is not None:
+            from repro.train.pressure import PressureAdaptiveAccumulator
+
+            global_batch = batch if batch is not None else shape.global_batch
+            self._adaptive = PressureAdaptiveAccumulator(
+                probe=self.tcfg.hbm_probe,
+                # the factor slices the batch: never exceed it (keep it a
+                # power of two ≤ batch so slices stay equal-sized)
+                max_factor=1 << (max(global_batch, 1).bit_length() - 1),
+            )
+            self._adaptive.factor = max(self.tcfg.microbatches, 1)
+
+    # ----------------------------------------------------------- build/run
+    def build(self):
+        key = jax.random.PRNGKey(self.tcfg.seed)
+        params = init_model(self.cfg, key)
+        opt_state = adamw.init(params)
+        step_fn = make_train_step(
+            self.cfg,
+            self.tcfg.opt,
+            microbatches=self.tcfg.microbatches,
+            remat=self.tcfg.remat,
+        )
+        if self.tcfg.grad_compression:
+            base_fn = make_train_step(
+                self.cfg, self.tcfg.opt, microbatches=1, remat=self.tcfg.remat
+            )
+            # wrap: grads→EF-int8→optimizer (compression inside the jit)
+            from repro.train.train_step import lm_loss
+
+            def step_with_compression(params, opt_state, ef, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda p, b: lm_loss(self.cfg, p, b, remat=self.tcfg.remat)
+                )(params, batch)
+                grads, ef, cerr = compression.compress_grads(grads, ef)
+                new_p, new_o, gnorm = adamw.update(
+                    self.tcfg.opt, grads, opt_state, params
+                )
+                return new_p, new_o, ef, {
+                    "loss": loss,
+                    "grad_norm": gnorm,
+                    "compression_err": cerr,
+                    "step": new_o.step,
+                }
+
+            self._jit_step = jax.jit(step_with_compression, donate_argnums=(0, 1, 2))
+            self._ef = compression.init(params)
+        else:
+            self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+            self._ef = None
+        return params, opt_state
+
+    def run(self) -> Dict[str, Any]:
+        params, opt_state = self.build()
+        # resume-from-latest (fault tolerance)
+        restored, start_step = self.restart.resume((params, opt_state))
+        if restored is not None:
+            params, opt_state = restored
+        pipeline = DataPipeline(
+            self.cfg, self.shape, DataConfig(seed=self.tcfg.seed),
+            batch=self.batch, seq=self.seq,
+        )
+        host = f"host{jax.process_index()}"
+        step = start_step
+        try:
+            while step < self.tcfg.steps:
+                batch = next(pipeline)
+                t0 = time.monotonic()
+                # MURS-adaptive accumulation: re-jit only on factor change
+                if self._adaptive is not None and self._ef is None:
+                    factor = self._adaptive.step()
+                    if factor not in self._step_cache:
+                        self._step_cache[factor] = jax.jit(
+                            make_train_step(
+                                self.cfg, self.tcfg.opt,
+                                microbatches=factor, remat=self.tcfg.remat,
+                            ),
+                            donate_argnums=(0, 1),
+                        )
+                    self._jit_step = self._step_cache[factor]
+                try:
+                    if self._ef is not None:
+                        params, opt_state, self._ef, metrics = self._jit_step(
+                            params, opt_state, self._ef, batch
+                        )
+                    else:
+                        params, opt_state, metrics = self._jit_step(
+                            params, opt_state, batch
+                        )
+                    jax.block_until_ready(metrics["loss"])
+                    self.restart.on_success()
+                except Exception as exc:  # crash/preempt → restore + retry
+                    if not self.restart.should_retry():
+                        raise
+                    time.sleep(min(self.restart.on_failure(exc), 0.1))
+                    restored, step = self.restart.resume((params, opt_state))
+                    if restored is not None:
+                        params, opt_state = restored
+                    continue
+                dt = time.monotonic() - t0
+                self.straggler.observe(host, dt)
+                step += 1
+                if step % self.tcfg.log_every == 0 or step == self.tcfg.steps:
+                    self.metrics_log.append(
+                        {
+                            "step": step,
+                            "loss": float(metrics["loss"]),
+                            "grad_norm": float(metrics["grad_norm"]),
+                            "step_time_s": dt,
+                            "stragglers": self.straggler.stragglers(),
+                        }
+                    )
+                if step % self.tcfg.ckpt_every == 0:
+                    self.ckpt.save(
+                        f"{self.tcfg.ckpt_dir}/ckpt_{step}.ckpt",
+                        (params, opt_state),
+                        step=step,
+                    )
+                    self.restart.record_heartbeat(step)
+        finally:
+            pipeline.close()
+            self.ckpt.wait()
+        return {
+            "final_step": step,
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "log": self.metrics_log,
+        }

@@ -1,0 +1,188 @@
+"""Pallas kernel validation: hypothesis shape/dtype sweeps vs ref oracles.
+
+All kernels run in interpret mode on CPU (the kernel body executes in
+Python); assert_allclose against the pure-jnp oracle in ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 32), (False, 0)])
+    def test_modes(self, dtype, causal, window):
+        key = jax.random.PRNGKey(0)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = _rand(k1, (2, 128, 64), dtype)
+        k = _rand(k2, (2, 128, 64), dtype)
+        v = _rand(k3, (2, 128, 64), dtype)
+        out = ops.flash_attention(
+            q, k, v, causal=causal, window=window, block_q=64, block_k=64
+        )
+        gold = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32),
+            np.asarray(gold, np.float32),
+            atol=2e-2 if dtype == jnp.bfloat16 else 2e-5,
+        )
+
+    @given(
+        sq_blocks=st.integers(1, 4),
+        sk_blocks=st.integers(1, 4),
+        hd=st.sampled_from([32, 64, 128]),
+        bh=st.integers(1, 3),
+        q_offset=st.sampled_from([0, 64]),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_shape_sweep(self, sq_blocks, sk_blocks, hd, bh, q_offset):
+        key = jax.random.PRNGKey(sq_blocks * 100 + sk_blocks)
+        k1, k2, k3 = jax.random.split(key, 3)
+        sq, sk = sq_blocks * 64, sk_blocks * 64
+        q = _rand(k1, (bh, sq, hd), jnp.float32)
+        k = _rand(k2, (bh, sk, hd), jnp.float32)
+        v = _rand(k3, (bh, sk, hd), jnp.float32)
+        out = ops.flash_attention(
+            q, k, v, causal=True, q_offset=q_offset, block_q=64, block_k=64
+        )
+        gold = ref.flash_attention_ref(q, k, v, causal=True, q_offset=q_offset)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gold), atol=1e-4
+        )
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("cur_pos", [0, 63, 100, 255])
+    def test_positions(self, cur_pos):
+        key = jax.random.PRNGKey(1)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = _rand(k1, (4, 64), jnp.float32)
+        k = _rand(k2, (4, 256, 64), jnp.float32)
+        v = _rand(k3, (4, 256, 64), jnp.float32)
+        out = ops.decode_attention(q, k, v, cur_pos, block_k=64)
+        gold = ref.decode_attention_ref(q, k, v, cur_pos)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=1e-4)
+
+    def test_sliding_window(self):
+        key = jax.random.PRNGKey(2)
+        k1, k2, k3 = jax.random.split(key, 3)
+        q = _rand(k1, (2, 32), jnp.float32)
+        k = _rand(k2, (2, 128, 32), jnp.float32)
+        v = _rand(k3, (2, 128, 32), jnp.float32)
+        out = ops.decode_attention(q, k, v, 100, window=16, block_k=32)
+        gold = ref.decode_attention_ref(q, k, v, 100, window=16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gold), atol=1e-4)
+
+
+class TestGroupedMatmul:
+    @given(
+        e=st.integers(1, 6),
+        c_blocks=st.integers(1, 3),
+        d_blocks=st.integers(1, 3),
+        f_blocks=st.integers(1, 2),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_shape_sweep(self, e, c_blocks, d_blocks, f_blocks):
+        key = jax.random.PRNGKey(e)
+        k1, k2 = jax.random.split(key)
+        c, d, f = c_blocks * 64, d_blocks * 128, f_blocks * 64
+        x = _rand(k1, (e, c, d), jnp.float32)
+        w = _rand(k2, (e, d, f), jnp.float32)
+        out = ops.grouped_matmul(x, w, block_c=64, block_f=64, block_d=128)
+        gold = ref.grouped_matmul_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gold), rtol=1e-4, atol=1e-3
+        )
+
+    def test_bf16(self):
+        key = jax.random.PRNGKey(7)
+        k1, k2 = jax.random.split(key)
+        x = _rand(k1, (4, 128, 256), jnp.bfloat16)
+        w = _rand(k2, (4, 256, 128), jnp.bfloat16)
+        out = ops.grouped_matmul(x, w, block_d=128)
+        gold = ref.grouped_matmul_ref(x, w)
+        rel = np.abs(
+            np.asarray(out, np.float32) - np.asarray(gold, np.float32)
+        ).max() / max(np.abs(np.asarray(gold, np.float32)).max(), 1e-9)
+        assert rel < 2e-2
+
+
+class TestSSDScan:
+    @given(
+        chunks=st.integers(1, 4),
+        nh=st.integers(1, 4),
+        hd=st.sampled_from([16, 32]),
+        ds=st.sampled_from([8, 16]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_shape_sweep(self, chunks, nh, hd, ds):
+        key = jax.random.PRNGKey(chunks * 10 + nh)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s = 2, chunks * 32
+        x = _rand(k1, (b, s, nh, hd), jnp.float32) * 0.5
+        dt = jax.nn.softplus(_rand(k2, (b, s, nh), jnp.float32))
+        A = -jnp.exp(_rand(k3, (nh,), jnp.float32) * 0.3)
+        Bm = _rand(k1, (b, s, ds), jnp.float32) * 0.5
+        C = _rand(k2, (b, s, ds), jnp.float32) * 0.5
+        out = ops.ssd_scan(x, dt, A, Bm, C, chunk=32)
+        gold = ref.ssd_scan_ref(x, dt, A, Bm, C)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gold), rtol=1e-3, atol=1e-3
+        )
+
+    def test_matches_model_chunked_scan(self):
+        """The Pallas kernel, the model's jnp chunked scan, and the
+        sequential recurrence must all agree."""
+        from repro.models.blocks import _ssd_scan
+
+        key = jax.random.PRNGKey(3)
+        k1, k2, k3 = jax.random.split(key, 3)
+        b, s, nh, hd, ds = 2, 96, 2, 16, 8
+        x = _rand(k1, (b, s, nh, hd), jnp.float32) * 0.5
+        dt = jax.nn.softplus(_rand(k2, (b, s, nh), jnp.float32))
+        A = -jnp.exp(_rand(k3, (nh,), jnp.float32) * 0.3)
+        Bm = _rand(k1, (b, s, ds), jnp.float32) * 0.5
+        C = _rand(k2, (b, s, ds), jnp.float32) * 0.5
+        gold = ref.ssd_scan_ref(x, dt, A, Bm, C)
+        model = _ssd_scan(x, dt, A, Bm, C, chunk=32)
+        kern = ops.ssd_scan(x, dt, A, Bm, C, chunk=32)
+        np.testing.assert_allclose(np.asarray(model), np.asarray(gold), atol=1e-3)
+        np.testing.assert_allclose(np.asarray(kern), np.asarray(gold), atol=1e-3)
+
+
+class TestPagedDecode:
+    @given(
+        bh=st.integers(1, 4),
+        max_pages=st.integers(1, 4),
+        page=st.sampled_from([16, 32]),
+        hd=st.sampled_from([32, 64]),
+        seed=st.integers(0, 100),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_matches_gather_oracle(self, bh, max_pages, page, hd, seed):
+        key = jax.random.PRNGKey(seed)
+        k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+        n_pool = bh * max_pages + 3
+        q = _rand(k1, (bh, hd), jnp.float32)
+        k_pool = _rand(k2, (n_pool, page, hd), jnp.float32)
+        v_pool = _rand(k3, (n_pool, page, hd), jnp.float32)
+        # random non-overlapping-ish page table + random valid lengths ≥ 1
+        table = jax.random.permutation(k4, n_pool)[: bh * max_pages].reshape(
+            bh, max_pages
+        )
+        lens = jax.random.randint(k5, (bh,), 1, max_pages * page + 1)
+        out = ops.paged_decode_attention(q, k_pool, v_pool, table, lens)
+        gold = ref.paged_decode_attention_ref(q, k_pool, v_pool, table, lens)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(gold), atol=1e-4
+        )

@@ -1,0 +1,261 @@
+"""Unit + property tests for the MURS core (scheduler, models, sampler)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.memory_manager import MemoryPool
+from repro.core.sampler import Sampler, TaskStats
+from repro.core.scheduler import MursConfig, MursScheduler
+from repro.core.usage_models import (
+    MODEL_EXPONENT,
+    RateEstimator,
+    UsageModel,
+    classify_trace,
+    fit_power_law,
+    live_bytes_at,
+)
+
+
+# ------------------------------------------------------------- usage models
+class TestUsageModels:
+    @pytest.mark.parametrize("model", list(UsageModel))
+    def test_classify_recovers_generating_model(self, model):
+        xs = [float(i) * 1e6 for i in range(1, 40)]
+        ys = [live_bytes_at(model, x, 2.0) for x in xs]
+        assert classify_trace(xs, ys) is model
+
+    def test_power_law_fit_exact(self):
+        a0, b0 = 3.0, 0.7
+        xs = [float(i) for i in range(1, 50)]
+        ys = [a0 * x**b0 for x in xs]
+        a, b = fit_power_law(xs, ys)
+        assert math.isclose(a, a0, rel_tol=1e-6)
+        assert math.isclose(b, b0, rel_tol=1e-6)
+
+    def test_model_order(self):
+        order = [
+            UsageModel.CONSTANT,
+            UsageModel.SUB_LINEAR,
+            UsageModel.LINEAR,
+            UsageModel.SUPER_LINEAR,
+        ]
+        assert [m.order for m in order] == [0, 1, 2, 3]
+        assert [MODEL_EXPONENT[m] for m in order] == [0.0, 0.5, 1.0, 1.5]
+
+    @given(
+        model=st.sampled_from(list(UsageModel)),
+        rate=st.floats(0.1, 10.0),
+        n=st.integers(5, 60),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_classification_property(self, model, rate, n):
+        """classify_trace recovers the generator for any rate / length."""
+        xs = [float(i) * 1e5 for i in range(1, n + 1)]
+        ys = [live_bytes_at(model, x, rate) for x in xs]
+        assert classify_trace(xs, ys) is model
+
+    def test_rate_estimator_linear_slope(self):
+        est = RateEstimator()
+        for i in range(1, 20):
+            est.update(i * 100.0, i * 300.0)
+        assert math.isclose(est.rate, 3.0, rel_tol=1e-6)
+        assert est.model is UsageModel.LINEAR
+
+
+# --------------------------------------------------------------- pool tests
+class TestMemoryPool:
+    def test_accounting(self):
+        p = MemoryPool(capacity=100.0)
+        p.add_live("a", 30.0)
+        p.add_transient("a", 10.0)
+        assert p.used_bytes == 40.0
+        assert p.free_bytes == 60.0
+        assert p.live_fraction == pytest.approx(0.3)
+        survivors = p.minor_gc()
+        assert survivors == 30.0
+        assert p.transient_bytes == 0.0
+        assert p.release_owner("a") == 30.0
+        assert p.used_bytes == 0.0
+
+    @given(
+        allocs=st.lists(
+            st.tuples(st.sampled_from("abcd"), st.floats(0, 1e9)), max_size=30
+        )
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_never_negative(self, allocs):
+        p = MemoryPool(capacity=1e9)
+        for owner, b in allocs:
+            p.add_live(owner, b)
+            p.add_transient(owner, b / 2)
+        assert p.used_bytes >= 0.0
+        assert p.free_bytes >= 0.0
+
+
+# ---------------------------------------------------------- scheduler tests
+def _stats(i, rate, consumption=1e8, progress=0.5, remaining=1e8):
+    return TaskStats(
+        task_id=f"t{i}",
+        consumption=consumption,
+        rate=rate,
+        progress=progress,
+        remaining_bytes=remaining,
+    )
+
+
+class TestMursScheduler:
+    def make(self, capacity=10e9, live=0.0, **kw):
+        sched = MursScheduler(MursConfig(**kw))
+        pool = MemoryPool(capacity=capacity)
+        if live:
+            pool.add_live("x", live)
+        return sched, pool
+
+    def test_no_suspension_below_yellow(self):
+        sched, pool = self.make(live=0.3 * 10e9)
+        d = sched.propose(pool, [_stats(i, rate=float(i)) for i in range(8)])
+        assert d.suspend == []
+
+    def test_suspends_heavy_tasks_at_yellow(self):
+        # live 5 GB of 10 GB → yellow band; trigger headroom 1.5 GB
+        sched, pool = self.make(live=5e9)
+        tasks = [
+            _stats(i, rate=3.0, consumption=2e8, remaining=4e8) for i in range(8)
+        ] + [_stats(10 + i, rate=0.0, remaining=4e8) for i in range(4)]
+        d = sched.propose(pool, tasks)
+        assert d.suspend, "heavy tasks must be suspended under pressure"
+        # the zero-rate (light) tasks must all be kept
+        light_ids = {f"t{10 + i}" for i in range(4)}
+        assert not light_ids & set(d.suspend)
+
+    def test_suspension_order_prefers_low_future_growth(self):
+        sched, pool = self.make(live=5e9)
+        tasks = [
+            _stats(0, rate=0.1, remaining=1e8),
+            _stats(1, rate=5.0, remaining=1e9),
+            _stats(2, rate=2.0, remaining=1e9),
+        ]
+        d = sched.propose(pool, tasks)
+        if d.suspend:
+            # the highest-future-growth task is suspended first
+            assert "t1" in d.suspend
+            assert "t0" not in d.suspend
+
+    def test_kept_tasks_fit_budget(self):
+        """Whichever path fires (yellow keep-loop or spill guard), the kept
+        set's projected memory must fit the corresponding budget."""
+        cfg = MursConfig()
+        sched = MursScheduler(cfg)
+        pool = MemoryPool(capacity=10e9)
+        pool.add_live("x", 5e9)
+        tasks = [
+            _stats(i, rate=2.0, consumption=1e8, remaining=5e8) for i in range(16)
+        ]
+        d = sched.propose(pool, tasks)
+        assert d.suspend, "16 heavy tasks at 50% occupancy must not all fit"
+        kept = [t for t in tasks if t.task_id not in set(d.suspend)]
+        if d.reason == "spill-avoidance":
+            projected = sum(
+                t.consumption + t.rate * t.remaining_bytes
+                for t in kept[cfg.min_running:]
+            )
+            assert projected <= cfg.exec_fraction * pool.capacity + 1e-6
+        else:
+            free = min(
+                cfg.collector_trigger * pool.capacity - pool.live_bytes,
+                pool.free_bytes,
+            )
+            need = sum(t.memory_necessary for t in kept[cfg.min_running:])
+            assert need <= free + 1e-6
+
+    def test_fifo_resume_order(self):
+        sched, pool = self.make(live=5e9)
+        tasks = [_stats(i, rate=5.0, remaining=1e9) for i in range(6)]
+        d = sched.propose(pool, tasks)
+        assert len(d.suspend) >= 2
+        first, second = d.suspend[0], d.suspend[1]
+        assert sched.on_task_complete() == first
+        assert sched.on_task_complete() == second
+
+    def test_below_yellow_resumes_all(self):
+        sched, pool = self.make(live=5e9)
+        d = sched.propose(pool, [_stats(i, rate=5.0, remaining=1e9) for i in range(6)])
+        assert d.suspend
+        pool.live.clear()  # pressure gone
+        d2 = sched.propose(pool, [])
+        assert set(d2.resume) == set(d.suspend)
+        assert not sched.has_suspended
+
+    def test_resume_immunity_blocks_resuspension(self):
+        sched, pool = self.make(live=5e9)
+        tasks = [_stats(i, rate=5.0, remaining=1e9) for i in range(6)]
+        d = sched.propose(pool, tasks, now=0.0)
+        tid = sched.on_task_complete()
+        assert tid == d.suspend[0]
+        # immediately re-proposing must not re-suspend the resumed task
+        d2 = sched.propose(pool, tasks, now=0.5)
+        assert tid not in d2.suspend
+
+    def test_spill_guard_respects_exec_pool(self):
+        cfg = MursConfig(exec_fraction=0.2)
+        sched = MursScheduler(cfg)
+        pool = MemoryPool(capacity=10e9)
+        pool.add_live("x", 4.5e9)  # yellow band
+        # projected totals far exceed the 2 GB exec pool
+        tasks = [
+            _stats(i, rate=4.0, consumption=4e8, remaining=4e8) for i in range(10)
+        ]
+        d = sched.propose(pool, tasks)
+        assert d.suspend
+        kept = [t for t in tasks if t.task_id not in set(d.suspend)]
+        projected = sum(
+            t.consumption + t.rate * t.remaining_bytes
+            for t in kept[cfg.min_running:]
+        )
+        assert projected <= cfg.exec_fraction * pool.capacity + 1e-6
+
+    @given(
+        live_frac=st.floats(0.0, 1.0),
+        rates=st.lists(st.floats(0.0, 10.0), min_size=1, max_size=24),
+    )
+    @settings(max_examples=80, deadline=None)
+    def test_invariants_property(self, live_frac, rates):
+        """Core safety invariants for arbitrary pool states and task mixes."""
+        cfg = MursConfig()
+        sched = MursScheduler(cfg)
+        pool = MemoryPool(capacity=10e9)
+        pool.add_live("x", live_frac * 10e9)
+        tasks = [
+            _stats(i, rate=r, consumption=1e8, remaining=5e8)
+            for i, r in enumerate(rates)
+        ]
+        d = sched.propose(pool, tasks)
+        # 1. suspended ⊆ running
+        assert set(d.suspend) <= {t.task_id for t in tasks}
+        # 2. no suspension below yellow
+        if live_frac < cfg.yellow:
+            assert d.suspend == []
+        # 3. at least min_running tasks stay active
+        assert len(tasks) - len(d.suspend) >= min(len(tasks), cfg.min_running)
+        # 4. the FIFO queue exactly mirrors the suspension decision
+        assert list(sched.suspended_queue) == d.suspend
+
+
+# -------------------------------------------------------------- sampler test
+class TestSampler:
+    def test_observe_and_stats(self):
+        s = Sampler()
+        for i in range(1, 10):
+            s.observe("a", processed_bytes=i * 10.0, total_bytes=100.0,
+                      live_bytes=i * 30.0)
+        (st_,) = s.stats(["a"])
+        assert st_.progress == pytest.approx(0.9)
+        assert st_.rate == pytest.approx(3.0)
+        assert st_.remaining_bytes == pytest.approx(10.0)
+        assert st_.model is UsageModel.LINEAR
+        s.forget("a")
+        (st2,) = s.stats(["a"])
+        assert st2.consumption == 0.0

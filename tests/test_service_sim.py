@@ -1,0 +1,144 @@
+"""Integration tests: the service executor + paper workloads end-to-end."""
+
+import pytest
+
+from repro.core.scheduler import MursConfig
+from repro.core.spark_sim import (
+    make_grep,
+    make_pr,
+    make_sort,
+    make_wc,
+    run_batch,
+    run_service,
+)
+
+
+@pytest.fixture(scope="module")
+def fair_run():
+    return run_service(
+        [make_sort(), make_wc(), make_grep()], heap_gb=6.0, oom_is_fatal=False
+    )
+
+
+@pytest.fixture(scope="module")
+def murs_run():
+    return run_service(
+        [make_sort(), make_wc(), make_grep()],
+        heap_gb=6.0,
+        murs=MursConfig(),
+        oom_is_fatal=False,
+    )
+
+
+class TestServiceExecution:
+    def test_all_jobs_complete(self, fair_run):
+        for jm in fair_run.jobs.values():
+            assert jm.finish_time > 0
+
+    def test_gc_happens_under_pressure(self, fair_run):
+        assert fair_run.minor_gcs + fair_run.full_gcs > 0
+        assert fair_run.total_gc_time > 0
+
+    def test_murs_all_jobs_complete_no_starvation(self, murs_run):
+        """§VI-D: FIFO resume prevents starvation — every job finishes."""
+        for jm in murs_run.jobs.values():
+            assert jm.finish_time > 0, f"{jm.job_id} starved"
+
+    def test_murs_suspends_under_pressure(self, murs_run):
+        assert murs_run.suspensions > 0
+
+    def test_murs_improves_light_jobs(self, fair_run, murs_run):
+        """The paper's core claim: light tasks complete quickly under MURS."""
+        light_fair = fair_run.jobs["grep"].exec_time
+        light_murs = murs_run.jobs["grep"].exec_time
+        assert light_murs < light_fair
+
+    def test_murs_reduces_gc_of_light_jobs(self, fair_run, murs_run):
+        assert murs_run.jobs["grep"].gc_time <= fair_run.jobs["grep"].gc_time
+        assert murs_run.jobs["wc"].gc_time <= fair_run.jobs["wc"].gc_time
+
+    def test_murs_does_not_increase_spills(self, fair_run, murs_run):
+        f = sum(j.spills for j in fair_run.jobs.values())
+        m = sum(j.spills for j in murs_run.jobs.values())
+        assert m <= f
+
+
+class TestBatchVsService:
+    def test_service_mode_hurts_light_jobs(self):
+        """Motivation (Fig 1): WC suffers PR's pressure in service mode."""
+        service = run_service(
+            [make_pr(), make_wc()], heap_gb=15.0, oom_is_fatal=False
+        )
+        batch = run_batch([make_wc()], heap_gb=15.0)
+        wc_service = service.jobs["wc"].exec_time
+        wc_batch = batch["wc"].jobs["wc"].exec_time
+        assert wc_service > wc_batch * 1.2
+
+    def test_batch_runs_isolated(self):
+        batch = run_batch([make_grep(), make_wc()], heap_gb=8.0)
+        assert set(batch) == {"grep", "wc"}
+        for jid, m in batch.items():
+            assert m.jobs[jid].finish_time > 0
+
+
+class TestWorkloadShapes:
+    def test_stage_structure(self):
+        assert len(make_grep().stages) == 1
+        assert len(make_wc().stages) == 2
+        assert len(make_sort().stages) == 3
+        assert len(make_pr(iterations=5).stages) == 6
+
+    def test_pr_task_count_matches_paper(self):
+        """Table III: PR = 1500 tasks cluster-wide → ~372 per executor."""
+        pr = make_pr()
+        n = sum(len(s) for s in pr.stages)
+        assert 300 <= n <= 400
+
+    def test_wc_task_count_matches_paper(self):
+        wc = make_wc()
+        n = sum(len(s) for s in wc.stages)
+        assert n == 250  # 1000 / 4 executors
+
+
+class TestExecutorFuzzLiveness:
+    """Property: for ANY workload mix and heap size, the MURS executor makes
+    progress and never starves a job (unless the run genuinely OOMs)."""
+
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @given(
+        n_jobs=st.integers(1, 3),
+        heap_gb=st.floats(4.0, 20.0),
+        rate=st.floats(0.2, 4.0),
+        agg=st.booleans(),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_all_jobs_finish_or_oom(self, n_jobs, heap_gb, rate, agg):
+        from repro.core.scheduler import MursConfig
+        from repro.core.service import JobSpec, ServiceExecutor
+        from repro.core.tasks import ApiProfile, Phase, make_stage_tasks
+        from repro.core.usage_models import UsageModel
+
+        api = ApiProfile(
+            "fuzz",
+            UsageModel.SUB_LINEAR if agg else UsageModel.LINEAR,
+            rate=rate,
+            garbage_per_byte=1.5,
+        )
+        ex = ServiceExecutor(
+            cores=8, heap_bytes=heap_gb * 1e9, murs=MursConfig(),
+            dt=0.1, max_time=4000.0, oom_is_fatal=False,
+        )
+        for j in range(n_jobs):
+            tasks = make_stage_tasks(
+                f"job{j}", 0, n_tasks=12, stage_input_bytes=1.5e9,
+                phases=[Phase("read", api, 1.0)], skew=0.3,
+            )
+            ex.submit(JobSpec(f"job{j}", [tasks]))
+        m = ex.run()
+        if not m.oom:
+            for jm in m.jobs.values():
+                assert jm.finish_time > 0, "liveness: job starved"
+        # the pool accounting never goes negative
+        assert m.peak_pool_used_fraction >= 0.0

@@ -1,0 +1,321 @@
+"""Substrate tests: optimizer, checkpointing, compression, fault tolerance,
+data pipeline, sharding rules."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint.checkpointing import (
+    AsyncCheckpointer,
+    latest_step_path,
+    restore,
+    save,
+)
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, DataPipeline, _host_batch
+from repro.dist import compression
+from repro.dist.fault import RestartManager, StragglerDetector
+from repro.dist.sharding import make_rules, param_spec_for_path
+from repro.optim import adamw
+
+
+# --------------------------------------------------------------- optimizer
+class TestAdamW:
+    def test_reduces_quadratic(self):
+        cfg = adamw.AdamWConfig(
+            lr=0.1, weight_decay=0.0, warmup_steps=0, total_steps=100,
+            min_lr_ratio=1.0,
+        )
+        params = {"w": jnp.array([3.0, -2.0])}
+        state = adamw.init(params)
+        for _ in range(60):
+            grads = {"w": 2 * params["w"]}  # d/dw of w²
+            params, state, _ = adamw.update(cfg, grads, state, params)
+        assert float(jnp.abs(params["w"]).max()) < 0.3
+
+    def test_clip_bounds_update(self):
+        cfg = adamw.AdamWConfig(lr=1.0, clip_norm=1.0, warmup_steps=0)
+        params = {"w": jnp.zeros(4)}
+        state = adamw.init(params)
+        grads = {"w": jnp.full(4, 1e6)}
+        _, _, gnorm = adamw.update(cfg, grads, state, params)
+        assert float(gnorm) == pytest.approx(2e6, rel=1e-3)
+
+    def test_schedule_shape(self):
+        cfg = adamw.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                                min_lr_ratio=0.1)
+        lrs = [float(adamw.schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 100)]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(0.5)
+        assert lrs[2] == pytest.approx(1.0)
+        assert lrs[3] == pytest.approx(0.1, rel=1e-2)
+
+
+# ------------------------------------------------------------- checkpoints
+class TestCheckpointing:
+    def _tree(self, key):
+        return {
+            "a": jax.random.normal(key, (8, 4), jnp.float32),
+            "b": {"c": jax.random.normal(key, (3,), jnp.bfloat16)},
+            "step": jnp.int32(7),
+        }
+
+    def test_roundtrip(self):
+        tree = self._tree(jax.random.PRNGKey(0))
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ckpt_5.ckpt")
+            save(path, tree, step=5)
+            restored, step = restore(path, tree)
+            assert step == 5
+            for x, y in zip(
+                jax.tree_util.tree_leaves(tree),
+                jax.tree_util.tree_leaves(restored),
+            ):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_atomicity_and_latest(self):
+        tree = self._tree(jax.random.PRNGKey(1))
+        with tempfile.TemporaryDirectory() as d:
+            for s in (5, 20, 10):
+                save(os.path.join(d, f"ckpt_{s}.ckpt"), tree, step=s)
+            assert latest_step_path(d).endswith("ckpt_20.ckpt")
+            assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+    def test_async_checkpointer(self):
+        tree = self._tree(jax.random.PRNGKey(2))
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer()
+            path = os.path.join(d, "ckpt_1.ckpt")
+            ck.save(path, tree, step=1)
+            ck.wait()
+            restored, step = restore(path, tree)
+            assert step == 1
+
+    def test_structure_mismatch_raises(self):
+        tree = self._tree(jax.random.PRNGKey(3))
+        with tempfile.TemporaryDirectory() as d:
+            path = os.path.join(d, "ckpt_1.ckpt")
+            save(path, tree, step=1)
+            with pytest.raises(ValueError, match="structure mismatch"):
+                restore(path, {"only": tree["a"]})
+
+
+# ------------------------------------------------------------- compression
+class TestGradCompression:
+    @given(scale=st.floats(1e-3, 1e3))
+    @settings(max_examples=20, deadline=None)
+    def test_quantize_bounded_error(self, scale):
+        x = jnp.linspace(-scale, scale, 64)
+        q, s = compression.quantize(x)
+        err = jnp.abs(compression.dequantize(q, s) - x).max()
+        assert float(err) <= float(s) * 0.5 + 1e-9
+
+    def test_error_feedback_converges(self):
+        """EF carries the residual: the *sum* of compressed grads tracks the
+        sum of true grads (bias-free in the limit)."""
+        params = {"w": jnp.zeros(16)}
+        ef = compression.init(params)
+        true_sum = jnp.zeros(16)
+        comp_sum = jnp.zeros(16)
+        key = jax.random.PRNGKey(0)
+        for i in range(50):
+            key, k = jax.random.split(key)
+            g = {"w": jax.random.normal(k, (16,)) * 0.01}
+            true_sum = true_sum + g["w"]
+            deq, ef, _ = compression.compress_grads(g, ef)
+            comp_sum = comp_sum + deq["w"]
+        # residual bound: one quantization step of the last grad
+        assert float(jnp.abs(true_sum - comp_sum).max()) < 5e-3
+
+
+# ---------------------------------------------------------- fault handling
+class TestFaultTolerance:
+    def test_straggler_detection(self):
+        det = StragglerDetector(min_samples=3)
+        for _ in range(5):
+            det.observe("h0", 1.0)
+            det.observe("h1", 1.05)
+            det.observe("h2", 2.5)
+        assert det.stragglers() == ["h2"]
+        w = det.rebalance_weights()
+        assert w["h2"] < w["h0"]
+        assert abs(sum(w.values()) - 1.0) < 1e-9
+
+    def test_restart_manager_resume(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"w": jnp.arange(4.0)}
+            save(os.path.join(d, "ckpt_3.ckpt"), tree, step=3)
+            rm = RestartManager(d)
+            restored, step = rm.resume(tree)
+            assert step == 3
+            np.testing.assert_array_equal(
+                np.asarray(restored["w"]), np.arange(4.0)
+            )
+
+    def test_backoff_and_retry_budget(self):
+        rm = RestartManager("/tmp/none", max_retries=2, backoff_s=1.0)
+        assert rm.should_retry()
+        assert rm.on_failure(RuntimeError()) == 1.0
+        assert rm.on_failure(RuntimeError()) == 2.0
+        assert not rm.should_retry()
+        rm.on_success()
+        assert rm.should_retry()
+
+
+# ------------------------------------------------------------ data pipeline
+class TestDataPipeline:
+    def test_determinism_and_shapes(self):
+        cfg = ARCHS["internlm2-1.8b"].smoke()
+        shape = ShapeConfig("t", 16, 4, "train")
+        a = _host_batch(cfg, shape, DataConfig(seed=1), step=3)
+        b = _host_batch(cfg, shape, DataConfig(seed=1), step=3)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        assert a["tokens"].shape == (4, 16)
+        assert (a["labels"][:, :-1] == a["tokens"][:, 1:]).all()
+        assert (a["labels"][:, -1] == -1).all()
+
+    def test_prefetch_iterator(self):
+        cfg = ARCHS["internlm2-1.8b"].smoke()
+        shape = ShapeConfig("t", 8, 2, "train")
+        pipe = DataPipeline(cfg, shape, DataConfig(prefetch=2))
+        try:
+            b1 = next(pipe)
+            b2 = next(pipe)
+            assert b1["tokens"].shape == (2, 8)
+            assert not np.array_equal(
+                np.asarray(b1["tokens"]), np.asarray(b2["tokens"])
+            )
+        finally:
+            pipe.close()
+
+
+# ---------------------------------------------------------------- sharding
+class TestShardingRules:
+    def test_param_rules_resolve(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = make_rules(mesh)
+        spec = param_spec_for_path("layers/b0/attn/wq", rules, 3)
+        assert spec == jax.sharding.PartitionSpec(None, "data", "model")
+        spec = param_spec_for_path("embed/tokens", rules, 2)
+        assert spec == jax.sharding.PartitionSpec("model", "data")
+        # unknown path → replicated
+        assert param_spec_for_path("final_ln", rules, 1) == jax.sharding.PartitionSpec()
+
+    def test_mesh_axis_dedup(self):
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        rules = make_rules(mesh)
+        # two logical axes mapping to the same mesh axis: second gets None
+        spec = rules.spec(("heads", "mlp"))
+        assert spec == jax.sharding.PartitionSpec("model", None)
+
+
+# ------------------------------------------------------- elastic resharding
+class TestElasticReshard:
+    def test_checkpoint_restores_across_mesh_layouts(self):
+        """A checkpoint written under one sharding restores onto another
+        (grow/shrink) — the restore path is host-side + device_put with the
+        CURRENT rules, so topology changes are transparent."""
+        from repro.dist.fault import elastic_reshard
+
+        tree = {
+            "layers": {
+                "b0": {"mlp": {"gate": jnp.arange(64.0).reshape(8, 8)}}
+            },
+            "final_ln": jnp.ones(8),
+        }
+        with tempfile.TemporaryDirectory() as d:
+            save(os.path.join(d, "ckpt_1.ckpt"), tree, step=1)
+            restored, _ = restore(os.path.join(d, "ckpt_1.ckpt"), tree)
+            mesh = jax.make_mesh((1, 1), ("data", "model"))
+            rules = make_rules(mesh)
+            resharded = elastic_reshard(restored, rules)
+            np.testing.assert_array_equal(
+                np.asarray(resharded["layers"]["b0"]["mlp"]["gate"]),
+                np.asarray(tree["layers"]["b0"]["mlp"]["gate"]),
+            )
+            # the gate got the mlp rule (fsdp→data, mlp→model)
+            spec = resharded["layers"]["b0"]["mlp"]["gate"].sharding.spec
+            assert spec == jax.sharding.PartitionSpec("data", "model")
+
+
+# --------------------------------------------- pressure-adaptive microbatch
+class TestPressureAdaptiveAccumulator:
+    def _make(self, readings):
+        from repro.core.scheduler import MursConfig
+        from repro.train.pressure import PressureAdaptiveAccumulator
+
+        it = iter(readings)
+        return PressureAdaptiveAccumulator(
+            probe=lambda: next(it), config=MursConfig(), patience=2
+        )
+
+    def test_red_doubles_immediately(self):
+        acc = self._make([0.85, 0.85])
+        assert acc.step() == 2
+        assert acc.step() == 4
+
+    def test_yellow_needs_patience(self):
+        acc = self._make([0.5, 0.5, 0.5])
+        assert acc.step() == 1  # hot 1
+        assert acc.step() == 2  # hot 2 → double
+        assert acc.step() == 1 or acc.factor == 2  # stays until cool
+
+    def test_cool_halves_back(self):
+        acc = self._make([0.85, 0.1, 0.1, 0.1, 0.1])
+        assert acc.step() == 2
+        acc.step()
+        assert acc.step() == 1  # two cool steps → halve
+
+    def test_bounds_respected(self):
+        acc = self._make([0.9] * 12 + [0.05] * 30)
+        for _ in range(12):
+            acc.step()
+        assert acc.factor <= acc.max_factor
+        for _ in range(30):
+            acc.step()
+        assert acc.factor >= acc.min_factor
+
+    @given(st.lists(st.floats(0.0, 1.0), min_size=1, max_size=60))
+    @settings(max_examples=40, deadline=None)
+    def test_factor_always_power_of_two_in_bounds(self, readings):
+        acc = self._make(readings + [0.0])  # probe has enough values
+        for _ in range(len(readings)):
+            f = acc.step()
+            assert acc.min_factor <= f <= acc.max_factor
+            assert f & (f - 1) == 0  # power of two
+
+
+class TestAdaptiveTrainer:
+    def test_trainer_adapts_microbatching_under_pressure(self):
+        """End-to-end: a rising pressure probe makes the trainer re-jit
+        with a larger accumulation factor mid-run, and training proceeds."""
+        import tempfile
+
+        from repro.configs import ARCHS
+        from repro.optim.adamw import AdamWConfig
+        from repro.train import Trainer, TrainerConfig
+
+        readings = iter([0.1, 0.1, 0.9, 0.9, 0.9, 0.9, 0.9, 0.9, 0.9, 0.9])
+        cfg = ARCHS["internlm2-1.8b"].smoke()
+        shape = ShapeConfig("t", 16, 4, "train")
+        with tempfile.TemporaryDirectory() as d:
+            t = Trainer(
+                cfg, shape,
+                TrainerConfig(
+                    steps=8, ckpt_dir=d, ckpt_every=100, log_every=1,
+                    hbm_probe=lambda: next(readings, 0.9),
+                    opt=AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=8),
+                ),
+            )
+            out = t.run()
+        assert out["final_step"] == 8
+        factors = [h["factor"] for h in t._adaptive.history]
+        assert factors[0] == 1
+        assert max(factors) >= 2, "pressure must raise the accumulation factor"
