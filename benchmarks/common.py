@@ -2,11 +2,8 @@
 
 from __future__ import annotations
 
-import sys
-from typing import Iterable
-
 from repro.core.scheduler import MursConfig
-from repro.core.spark_sim import (  # noqa: F401
+from repro.core.spark_sim import (
     make_grep,
     make_pr,
     make_sort,
@@ -14,6 +11,19 @@ from repro.core.spark_sim import (  # noqa: F401
     run_batch,
     run_service,
 )
+
+__all__ = [
+    "MursConfig",
+    "emit",
+    "make_grep",
+    "make_pr",
+    "make_sort",
+    "make_wc",
+    "murs",
+    "pct_change",
+    "run_batch",
+    "run_service",
+]
 
 
 def emit(name: str, value, derived: str = "") -> None:

@@ -1,0 +1,140 @@
+"""Pytest bootstrap for the src layout + hermetic-container dep gating.
+
+Two jobs, both no-ops in a fully provisioned environment (CI):
+
+1. make ``repro`` importable from ``src/`` when the package is not
+   installed (so plain ``pytest`` works without the ``PYTHONPATH=src``
+   incantation — which also keeps working);
+2. when the real ``hypothesis`` package is absent, install a minimal
+   deterministic fallback so the property tests still run: each ``@given``
+   test executes ``max_examples`` seeded-random draws (boundary values
+   first).  This is a *gate* for containers where nothing can be
+   installed, not a replacement — CI installs real hypothesis.
+"""
+
+import functools
+import inspect
+import os
+import random
+import sys
+import types
+import zlib
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if os.path.isdir(_SRC) and _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+
+def _install_hypothesis_fallback():
+    class Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rnd, i):
+            return self._draw(rnd, i)
+
+    def floats(min_value=0.0, max_value=1.0, **_):
+        bounds = (min_value, max_value)
+
+        def draw(rnd, i):
+            if i < 2:
+                return bounds[i]
+            return rnd.uniform(min_value, max_value)
+
+        return Strategy(draw)
+
+    def integers(min_value=0, max_value=10, **_):
+        bounds = (min_value, max_value)
+
+        def draw(rnd, i):
+            if i < 2:
+                return bounds[i]
+            return rnd.randint(min_value, max_value)
+
+        return Strategy(draw)
+
+    def booleans():
+        return Strategy(lambda rnd, i: (i % 2 == 0) if i < 2 else rnd.random() < 0.5)
+
+    def sampled_from(elements):
+        seq = list(elements)
+        return Strategy(lambda rnd, i: seq[i % len(seq)] if i < len(seq) else rnd.choice(seq))
+
+    def lists(elements, min_size=0, max_size=10, **_):
+        def draw(rnd, i):
+            size = min_size if i == 0 else rnd.randint(min_size, max_size)
+            return [elements.example(rnd, rnd.randint(2, 10**6)) for _ in range(size)]
+
+        return Strategy(draw)
+
+    def tuples(*strategies):
+        return Strategy(
+            lambda rnd, i: tuple(s.example(rnd, i) for s in strategies)
+        )
+
+    def settings(max_examples=20, **_):
+        def deco(fn):
+            fn._fallback_settings = {"max_examples": max_examples}
+            return fn
+
+        return deco
+
+    def given(*pos_strategies, **strategies):
+        def deco(fn):
+            inner = getattr(fn, "_fallback_settings", {})
+
+            @functools.wraps(fn)
+            def wrapper(*a, **kw):
+                cfg = getattr(wrapper, "_fallback_settings", inner)
+                n = cfg.get("max_examples", 20)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rnd = random.Random(seed)
+                for i in range(n):
+                    pos = tuple(s.example(rnd, i) for s in pos_strategies)
+                    example = {
+                        k: s.example(rnd, i) for k, s in strategies.items()
+                    }
+                    fn(*a, *pos, **kw, **example)
+
+            # hide the strategy-filled params from pytest's fixture
+            # resolution (real hypothesis does the same)
+            params = list(inspect.signature(fn).parameters.values())
+            if pos_strategies:
+                start = 1 if params and params[0].name == "self" else 0
+                del params[start : start + len(pos_strategies)]
+            params = [p for p in params if p.name not in strategies]
+            wrapper.__signature__ = inspect.Signature(params)
+            if hasattr(wrapper, "__wrapped__"):
+                del wrapper.__wrapped__
+            return wrapper
+
+        return deco
+
+    def assume(condition):
+        if not condition:
+            raise AssertionError("hypothesis fallback: assume() failed")
+
+    hyp = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name, obj in (
+        ("floats", floats),
+        ("integers", integers),
+        ("booleans", booleans),
+        ("sampled_from", sampled_from),
+        ("lists", lists),
+        ("tuples", tuples),
+    ):
+        setattr(st, name, obj)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.assume = assume
+    hyp.strategies = st
+    hyp.__version__ = "0.0-fallback"
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st
+
+
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _install_hypothesis_fallback()

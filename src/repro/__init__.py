@@ -1,0 +1,4 @@
+"""MURS reproduction: service-oriented memory management for a
+production-scale JAX/Pallas training + serving stack."""
+
+__version__ = "0.1.0"

@@ -1,7 +1,10 @@
 """Checkpointing: atomic, compressed, async-capable, elastically reshardable.
 
-Format: one ``<name>.ckpt`` file containing a zstd-compressed msgpack map
+Format: one ``<name>.ckpt`` file containing a compressed msgpack map
   { "meta": {step, tree: <treedef repr>}, "leaves": [ {dtype, shape, data} ] }
+compressed with zstd when the ``zstandard`` package is available, zlib
+otherwise; the codec is detected from the frame magic on restore, so files
+written with either codec restore everywhere.
 
 Restore never requires the saving mesh: leaves are loaded host-side and
 ``jax.device_put`` with the *current* sharding rules — elastic rescale
@@ -16,13 +19,36 @@ from __future__ import annotations
 import os
 import tempfile
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # hermetic containers: fall back to stdlib zlib
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=3).compress(raw)
+    return zlib.compress(raw, 6)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but zstandard is not installed"
+            )
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 PyTree = Any
 
@@ -60,9 +86,7 @@ def save(path: str, tree: PyTree, *, step: int = 0) -> None:
         "meta": {"step": step, "n_leaves": len(leaves)},
         "leaves": [_pack_leaf(np.asarray(l)) for l in leaves],
     }
-    blob = zstandard.ZstdCompressor(level=3).compress(
-        msgpack.packb(payload, use_bin_type=True)
-    )
+    blob = _compress(msgpack.packb(payload, use_bin_type=True))
     d = os.path.dirname(os.path.abspath(path))
     os.makedirs(d, exist_ok=True)
     fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
@@ -88,9 +112,7 @@ def restore(
     """
     with open(path, "rb") as f:
         blob = f.read()
-    payload = msgpack.unpackb(
-        zstandard.ZstdDecompressor().decompress(blob), raw=False
-    )
+    payload = msgpack.unpackb(_decompress(blob), raw=False)
     _, treedef = jax.tree_util.tree_flatten(like)
     leaves = [_unpack_leaf(d) for d in payload["leaves"]]
     if len(leaves) != treedef.num_leaves:

@@ -34,7 +34,7 @@ while ComputeSpill guards the red band.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence
+from typing import List, Optional, Sequence
 
 from .memory_manager import MemoryPool
 from .sampler import TaskStats

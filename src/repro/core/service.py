@@ -18,9 +18,8 @@ across jobs each tick, as Spark's fair scheduler pool does across tenants.
 
 from __future__ import annotations
 
-import heapq
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional
 
 from .memory_manager import MemoryPool
 from .sampler import Sampler

@@ -19,7 +19,7 @@ All byte figures below are per-executor (i.e. dataset/4).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import replace
 from typing import Dict, List, Optional
 
 from .scheduler import MursConfig

@@ -10,7 +10,7 @@ Sampler observes and the scheduler acts on.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional
 
 from .usage_models import UsageModel, live_bytes_at

@@ -1,0 +1,40 @@
+"""Distribution substrate: SPMD sharding rules, per-arch presets, gradient
+compression, and fault tolerance.
+
+The four modules cover the scale-out concerns the rest of the repo programs
+against:
+
+* :mod:`repro.dist.sharding` — logical-axis → mesh-axis rules, the
+  :func:`shard` activation-constraint hook, and regex param-path rules.
+* :mod:`repro.dist.presets` — per-architecture overrides and input/batch
+  shardings for the dry-run launcher.
+* :mod:`repro.dist.compression` — int8 quantization with error-feedback
+  gradient compression.
+* :mod:`repro.dist.fault` — straggler detection, checkpoint-restoring
+  restart policy, and elastic resharding across mesh layouts.
+"""
+
+from repro.dist import compression, fault, presets, sharding
+from repro.dist.sharding import (
+    Rules,
+    current_rules,
+    make_rules,
+    param_shardings,
+    param_spec_for_path,
+    shard,
+    use_rules,
+)
+
+__all__ = [
+    "Rules",
+    "compression",
+    "current_rules",
+    "fault",
+    "make_rules",
+    "param_shardings",
+    "param_spec_for_path",
+    "presets",
+    "shard",
+    "sharding",
+    "use_rules",
+]

@@ -1,0 +1,73 @@
+"""Int8 gradient compression with error feedback.
+
+Symmetric per-tensor int8 quantization (scale = amax/127, round to
+nearest) plus an error-feedback accumulator [arXiv:1901.09847-style]: the
+residual of each compression step is added to the next gradient before
+quantizing, so the *sum* of compressed gradients tracks the sum of true
+gradients — the optimizer sees an unbiased-in-the-limit stream while every
+cross-host gradient exchange moves 4× fewer bytes than f32.
+
+All functions are pure jnp and jit-safe (the trainer runs
+:func:`compress_grads` inside the donated train step).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+_QMAX = 127.0
+
+
+def quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """x → (int8 codes, f32 scale); |dequantize(q, s) − x| ≤ s/2."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf))
+    scale = jnp.maximum(amax, jnp.float32(1e-30)) / _QMAX
+    q = jnp.clip(jnp.round(xf / scale), -_QMAX, _QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init(params: PyTree) -> PyTree:
+    """Zero error-feedback residuals, one f32 buffer per parameter."""
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+
+
+def compress_grads(grads: PyTree, ef: PyTree) -> Tuple[PyTree, PyTree, jax.Array]:
+    """(grads, residuals) → (dequantized grads, new residuals, max |error|).
+
+    Per leaf: t = g + e;  q = Q(t);  ĝ = Q⁻¹(q);  e' = t − ĝ.  Telescoping
+    over steps, Σ ĝ = Σ g − e_final, so the carried residual is the whole
+    compression bias.
+    """
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    e_leaves = treedef.flatten_up_to(ef)
+    deq_leaves, new_e_leaves, errs = [], [], []
+    for g, e in zip(g_leaves, e_leaves):
+        t = g.astype(jnp.float32) + e
+        q, scale = quantize(t)
+        deq = dequantize(q, scale)
+        deq_leaves.append(deq.astype(g.dtype))
+        new_e_leaves.append(t - deq)
+        errs.append(jnp.max(jnp.abs(t - deq)))
+    return (
+        jax.tree_util.tree_unflatten(treedef, deq_leaves),
+        jax.tree_util.tree_unflatten(treedef, new_e_leaves),
+        jnp.max(jnp.stack(errs)) if errs else jnp.float32(0.0),
+    )
+
+
+def compressed_bytes(params: PyTree) -> int:
+    """Wire size of one compressed gradient exchange (int8 + f32 scale)."""
+    leaves = jax.tree_util.tree_leaves(params)
+    return sum(int(jnp.size(leaf)) + 4 for leaf in leaves)

@@ -1,0 +1,142 @@
+"""Fault tolerance: stragglers, restart-from-checkpoint, elastic reshard.
+
+Three pieces the trainer composes:
+
+* :class:`StragglerDetector` — per-host step-time statistics; a host whose
+  mean exceeds ``ratio ×`` the across-host median is flagged, and
+  :meth:`rebalance_weights` yields inverse-speed work weights.
+* :class:`RestartManager` — resume from the newest checkpoint in a
+  directory, with a bounded-retry exponential-backoff policy for
+  crash/preemption loops.
+* :func:`elastic_reshard` — place a host-side checkpoint tree onto the
+  *current* mesh under the current rules; because restore is host-side
+  bytes + ``device_put``, a checkpoint written on one topology restores
+  onto any other (grow/shrink/CPU).
+"""
+
+from __future__ import annotations
+
+import collections
+import logging
+import statistics
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+
+from repro.checkpoint.checkpointing import latest_step_path, restore
+from repro.dist.sharding import Rules, path_str
+
+PyTree = Any
+log = logging.getLogger(__name__)
+
+
+class StragglerDetector:
+    """Flag hosts whose mean step time exceeds ``ratio``× the median."""
+
+    def __init__(
+        self,
+        min_samples: int = 5,
+        ratio: float = 1.5,
+        window: int = 64,
+    ) -> None:
+        self.min_samples = min_samples
+        self.ratio = ratio
+        self._times: Dict[str, Deque[float]] = collections.defaultdict(
+            lambda: collections.deque(maxlen=window)
+        )
+
+    def observe(self, host: str, step_time_s: float) -> None:
+        self._times[host].append(step_time_s)
+
+    def _means(self) -> Dict[str, float]:
+        return {
+            h: sum(ts) / len(ts)
+            for h, ts in self._times.items()
+            if len(ts) >= self.min_samples
+        }
+
+    def stragglers(self) -> List[str]:
+        means = self._means()
+        if len(means) < 2:
+            return []
+        median = statistics.median(means.values())
+        return sorted(h for h, m in means.items() if m > self.ratio * median)
+
+    def rebalance_weights(self) -> Dict[str, float]:
+        """Work weights ∝ host speed (1/mean step time), summing to 1."""
+        means = {
+            h: sum(ts) / len(ts) for h, ts in self._times.items() if ts
+        }
+        if not means:
+            return {}
+        inv = {h: 1.0 / max(m, 1e-9) for h, m in means.items()}
+        total = sum(inv.values())
+        return {h: v / total for h, v in inv.items()}
+
+
+class RestartManager:
+    """Resume-from-latest + bounded retries with exponential backoff."""
+
+    def __init__(
+        self,
+        ckpt_dir: str,
+        *,
+        max_retries: int = 3,
+        backoff_s: float = 1.0,
+    ) -> None:
+        self.ckpt_dir = ckpt_dir
+        self.max_retries = max_retries
+        self.backoff_s = backoff_s
+        self.failures = 0
+        self.last_heartbeat: Optional[Tuple[int, float]] = None
+
+    # ------------------------------------------------------------- resume
+    def resume(self, like: PyTree) -> Tuple[Optional[PyTree], int]:
+        """(restored tree, step) from the newest checkpoint, or (None, 0)."""
+        path = latest_step_path(self.ckpt_dir)
+        if path is None:
+            return None, 0
+        tree, step = restore(path, like)
+        log.info("resumed from %s at step %d", path, step)
+        return tree, step
+
+    # ------------------------------------------------------ retry policy
+    def should_retry(self) -> bool:
+        return self.failures < self.max_retries
+
+    def on_failure(self, exc: BaseException) -> float:
+        """Record a failure; returns the backoff delay in seconds."""
+        self.failures += 1
+        delay = self.backoff_s * (2.0 ** (self.failures - 1))
+        log.warning(
+            "step failed (%s: %s) — retry %d/%d after %.1fs",
+            type(exc).__name__, exc, self.failures, self.max_retries, delay,
+        )
+        return delay
+
+    def on_success(self) -> None:
+        self.failures = 0
+
+    def record_heartbeat(self, step: int) -> None:
+        self.last_heartbeat = (step, time.monotonic())
+
+
+def elastic_reshard(tree: PyTree, rules: Rules) -> PyTree:
+    """Place a (host-side) tree onto ``rules.mesh`` under the param rules.
+
+    The checkpoint format stores plain host arrays, so restoring onto a
+    different mesh shape is just a fresh placement decision: every leaf is
+    ``device_put`` with the spec its path resolves to under the *current*
+    rules (unknown paths → replicated).
+    """
+
+    def place(key_path, leaf):
+        arr = jnp.asarray(leaf)
+        spec = rules.spec_for_path(path_str(key_path), arr.ndim)
+        spec = rules.fit(spec, arr.shape)  # the new mesh may not divide
+        return jax.device_put(arr, NamedSharding(rules.mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(place, tree)

@@ -1,0 +1,262 @@
+"""SPMD sharding rules: logical axes, activation constraints, param specs.
+
+The model code names *logical* axes ("batch", "heads", "mlp", …); a
+:class:`Rules` object maps them onto the *mesh* axes of the current
+topology ("data", "model", optionally "pod").  Three consumers:
+
+* activations — ``shard(x, ("batch", "seq", "embed"))`` inside the model
+  is a no-op until a :func:`use_rules` context is active, at which point it
+  lowers to ``jax.lax.with_sharding_constraint`` (the GSPMD hint that pins
+  layer boundaries).  Tests and single-host smoke runs never enter the
+  context, so the same model code runs unsharded.
+* parameters — regex rules over the param *path* ("layers/b0/attn/wq")
+  resolve each weight to a PartitionSpec; leading scan/stack dims that the
+  rule does not mention are padded with ``None`` (replicated), so the same
+  rule covers a single block and its scan-stacked unit.
+* mesh hygiene — each mesh axis is used at most once per spec (GSPMD
+  rejects duplicates): when two logical axes resolve to the same mesh axis
+  the *first* one wins and the second gets ``None``.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import re
+from contextvars import ContextVar
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+PyTree = Any
+#: a logical axis resolves to one mesh axis, several (e.g. batch over
+#: ("pod", "data")), or None (replicated)
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+#: default logical-axis → mesh-axis map.  Axes absent from the active mesh
+#: are dropped at resolve time, so ("pod", "data") degrades to "data" on a
+#: single-pod mesh.
+DEFAULT_AXIS_MAP: Dict[str, MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": "data",  # dedup nulls this whenever batch already took "data"
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "expert": "model",
+    "expert_mlp": "model",
+    "kv_seq": None,  # serve presets may map the KV seq axis onto "model"
+    # parameters
+    "fsdp": "data",  # the d_model axis of every weight (ZeRO-3 style)
+}
+
+#: ordered (path-regex, logical axes) param rules — first match wins.
+#: Paths are "/"-joined pytree key paths, e.g. "layers/b0/attn/wq".
+DEFAULT_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    (r"embed/tokens$", ("vocab", "fsdp")),
+    (r"lm_head$", ("fsdp", "vocab")),
+    # GQA attention
+    (r"w[qkv]$", ("fsdp", "heads")),
+    (r"b[qkv]$", ("heads",)),
+    (r"wo$", ("heads", "fsdp")),
+    # MLA: latent ranks replicated, head-expanded dims model-parallel
+    (r"wq_a$", ("fsdp", None)),
+    (r"wq_b$", (None, "heads")),
+    (r"wkv_a$", ("fsdp", None)),
+    (r"wkv_b$", (None, "heads")),
+    # MoE (before the dense-MLP rules: "moe/gate" must not match "gate$")
+    (r"router$", ("fsdp", "expert")),
+    (r"moe/(gate|up)$", ("expert", "fsdp", "expert_mlp")),
+    (r"moe/down$", ("expert", "expert_mlp", "fsdp")),
+    # dense / shared-expert MLP
+    (r"(gate|up)$", ("fsdp", "mlp")),
+    (r"down$", ("mlp", "fsdp")),
+    # Mamba-2
+    (r"w_[zx]$", ("fsdp", "mlp")),
+    (r"w_(B|C|dt)$", ("fsdp", None)),
+    (r"out_proj$", ("mlp", "fsdp")),
+    # adapters / modality projections
+    (r"(in_adapter|out_adapter|vision_proj|audio_proj)$", ("fsdp", None)),
+    # norms, biases, conv tails, A_log/D … fall through to replicated
+)
+
+
+@dataclass(frozen=True)
+class Rules:
+    """Resolved sharding rules for one mesh: axis map + param-path rules."""
+
+    mesh: Mesh
+    axis_map: Dict[str, MeshAxes]
+    param_rules: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...]
+
+    # ------------------------------------------------------------ resolve
+    def resolve(self, logical: Optional[str]) -> MeshAxes:
+        """Logical axis → mesh axes (unknown names are an error: a typo in
+        a shard() call should fail loudly, not silently replicate)."""
+        if logical is None:
+            return None
+        if logical not in self.axis_map:
+            raise KeyError(
+                f"unknown logical axis {logical!r}; known: "
+                f"{sorted(self.axis_map)}"
+            )
+        return self.axis_map[logical]
+
+    def entries(
+        self, axes: Sequence[Optional[str]]
+    ) -> Tuple[Union[None, str, Tuple[str, ...]], ...]:
+        """Per-dimension PartitionSpec entries with mesh-axis dedup."""
+        present = set(self.mesh.axis_names)
+        used: set = set()
+        out = []
+        for ax in axes:
+            r = self.resolve(ax)
+            parts = (r,) if isinstance(r, str) else (r or ())
+            parts = tuple(p for p in parts if p in present and p not in used)
+            used.update(parts)
+            if not parts:
+                out.append(None)
+            elif len(parts) == 1:
+                out.append(parts[0])
+            else:
+                out.append(parts)
+        return tuple(out)
+
+    def spec(self, axes: Sequence[Optional[str]]) -> PartitionSpec:
+        return PartitionSpec(*self.entries(axes))
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(axes))
+
+    def fit(
+        self,
+        entries: Sequence[Union[None, str, Tuple[str, ...]]],
+        shape: Sequence[int],
+    ) -> PartitionSpec:
+        """Drop mesh axes that do not divide the dim they would shard.
+
+        pjit *argument* shardings must divide dims exactly (in-graph
+        constraints pad, arguments don't) — e.g. a 49155-row vocab or an
+        8-head KV cache cannot split 16 ways; those dims degrade to
+        replicated instead of failing the lower.
+        """
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        out = []
+        for dim, e in zip(shape, tuple(entries)):
+            parts = (e,) if isinstance(e, str) else tuple(e or ())
+            keep, total = [], 1
+            for p in parts:
+                if dim % (total * sizes[p]) == 0:
+                    keep.append(p)
+                    total *= sizes[p]
+            if not keep:
+                out.append(None)
+            elif len(keep) == 1:
+                out.append(keep[0])
+            else:
+                out.append(tuple(keep))
+        return PartitionSpec(*out)
+
+    def fitted_sharding(
+        self, axes: Sequence[Optional[str]], shape: Sequence[int]
+    ) -> NamedSharding:
+        return NamedSharding(self.mesh, self.fit(self.entries(axes), shape))
+
+    # ------------------------------------------------------------- params
+    def spec_for_path(self, path: str, ndim: int) -> PartitionSpec:
+        for pattern, axes in self.param_rules:
+            if re.search(pattern, path):
+                entries = self.entries(axes)
+                if len(entries) < ndim:  # leading scan/stack dims
+                    entries = (None,) * (ndim - len(entries)) + entries
+                elif len(entries) > ndim:
+                    entries = entries[-ndim:] if ndim else ()
+                return PartitionSpec(*entries)
+        return PartitionSpec()  # unknown → replicated
+
+
+def make_rules(
+    mesh: Mesh,
+    *,
+    overrides: Optional[Dict[str, MeshAxes]] = None,
+    param_rules: Optional[Sequence[Tuple[str, Tuple[Optional[str], ...]]]] = None,
+) -> Rules:
+    """Build :class:`Rules` for ``mesh``; ``overrides`` remap logical axes
+    (e.g. ``{"fsdp": None}`` for ZeRO-1, ``{"kv_seq": "model"}`` for
+    sequence-sharded serving caches)."""
+    axis_map = dict(DEFAULT_AXIS_MAP)
+    if overrides:
+        axis_map.update(overrides)
+    return Rules(
+        mesh=mesh,
+        axis_map=axis_map,
+        param_rules=tuple(param_rules or DEFAULT_PARAM_RULES),
+    )
+
+
+# ------------------------------------------------------------- path helpers
+def path_str(key_path: Sequence[Any]) -> str:
+    """Pytree key path → "layers/b0/attn/wq"-style string."""
+    parts = []
+    for k in key_path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec_for_path(path: str, rules: Rules, ndim: int) -> PartitionSpec:
+    """PartitionSpec for one parameter identified by its tree path."""
+    return rules.spec_for_path(path, ndim)
+
+
+def param_shardings(params: PyTree, rules: Rules) -> PyTree:
+    """NamedSharding tree matching ``params`` (arrays or ShapeDtypeStructs).
+
+    Shapes are known here, so non-divisible dims degrade to replicated
+    (see :meth:`Rules.fit`)."""
+
+    def one(kp, leaf):
+        spec = rules.spec_for_path(path_str(kp), len(leaf.shape))
+        return NamedSharding(rules.mesh, rules.fit(spec, leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# -------------------------------------------------------- activation hook
+_ACTIVE_RULES: ContextVar[Optional[Rules]] = ContextVar(
+    "repro_dist_active_rules", default=None
+)
+
+
+def current_rules() -> Optional[Rules]:
+    return _ACTIVE_RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    """Activate ``rules`` for :func:`shard` calls traced in this context."""
+    token = _ACTIVE_RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE_RULES.reset(token)
+
+
+def shard(x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+    """Activation sharding constraint; identity when no rules are active.
+
+    ``axes`` names one logical axis (or None) per array dimension.
+    """
+    rules = _ACTIVE_RULES.get()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))

@@ -10,7 +10,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention as _decode_attention

@@ -1,0 +1,5 @@
+"""Launchers: training, serving, and the multi-pod compile dry-run.
+
+``repro.launch.dryrun`` is import-order sensitive (it must set XLA flags
+before jax initializes) and is therefore not imported here.
+"""

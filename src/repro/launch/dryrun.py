@@ -1,11 +1,20 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+if "jax" not in sys.modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=512"
+    ).strip()
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST run before any other import (jax locks the device
+The lines above MUST run before any other import (jax locks the device
 count at first init) — they give this process 512 placeholder CPU devices so
-``jax.make_mesh`` can build the production meshes:
+``jax.make_mesh`` can build the production meshes.  When this module is
+merely *imported* into a process that already initialized jax (tests, the
+import sweep), the flag would be a silent no-op for this process but leak
+into child environments — so it is only set when jax is not loaded yet:
 
     single-pod: (16, 16)      ("data", "model")        = 256 chips
     multi-pod:  (2, 16, 16)   ("pod", "data", "model") = 512 chips
@@ -27,10 +36,7 @@ import argparse
 import json
 import re
 import time
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES
 from repro.dist.presets import arch_overrides, batch_shardings

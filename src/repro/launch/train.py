@@ -9,7 +9,6 @@ pass ``--full`` on real hardware.
 import argparse
 
 from repro.configs import ARCHS, SHAPES, get_arch
-from repro.configs.base import ShapeConfig
 from repro.optim.adamw import AdamWConfig
 from repro.train import Trainer, TrainerConfig
 
@@ -51,6 +50,9 @@ def main() -> None:
         seq=seq,
     )
     out = trainer.run()
+    if trainer.compressed_wire_bytes is not None:
+        print(f"grad compression: {trainer.compressed_wire_bytes / 1e6:.2f} MB/exchange "
+              f"(f32 would be {4 * cfg.param_count() / 1e6:.2f} MB)")
     print(f"finished at step {out['final_step']}  loss={out['final_loss']}")
     for m in out["log"][-3:]:
         print(f"  step {m['step']}  loss {m['loss']:.4f}  "

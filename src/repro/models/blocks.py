@@ -17,12 +17,10 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import shard
 from .layers import (
-    apply_mlp,
     apply_rope,
     chunked_attention,
     decode_attention,
     dense_init,
-    init_mlp,
     rms_norm,
 )
 

@@ -18,7 +18,7 @@ DESIGN.md §4 falls out of these):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict
 
 from repro.configs.base import ArchConfig
 

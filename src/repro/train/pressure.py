@@ -21,7 +21,7 @@ the factor changes (cached per factor).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional
+from typing import Callable, List
 
 from repro.core.scheduler import MursConfig
 

@@ -8,8 +8,7 @@ inside the model).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -104,6 +103,12 @@ def make_train_step(
     grad_fn = jax.value_and_grad(loss_fn)
 
     def train_step(params, opt_state: adamw.AdamWState, batch):
+        # pin the host batch to the data axis before any compute (no-op
+        # unless a repro.dist.sharding rules context is active)
+        batch = {
+            k: shard(v, ("batch",) + (None,) * (v.ndim - 1))
+            for k, v in batch.items()
+        }
         if microbatches == 1:
             loss, grads = grad_fn(params, batch)
         else:

@@ -14,7 +14,6 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpointing import AsyncCheckpointer
 from repro.configs.base import ArchConfig, ShapeConfig
@@ -62,6 +61,8 @@ class Trainer:
         self.restart = RestartManager(self.tcfg.ckpt_dir)
         self.straggler = StragglerDetector()
         self.metrics_log: list = []
+        #: wire size of one compressed gradient exchange (grad_compression)
+        self.compressed_wire_bytes: Optional[int] = None
         self._adaptive = None
         self._step_cache: Dict[int, Any] = {}
         if self.tcfg.hbm_probe is not None:
@@ -88,13 +89,16 @@ class Trainer:
             remat=self.tcfg.remat,
         )
         if self.tcfg.grad_compression:
-            base_fn = make_train_step(
-                self.cfg, self.tcfg.opt, microbatches=1, remat=self.tcfg.remat
-            )
             # wrap: grads→EF-int8→optimizer (compression inside the jit)
+            from repro.dist.sharding import shard
             from repro.train.train_step import lm_loss
 
             def step_with_compression(params, opt_state, ef, batch):
+                # same batch pin as make_train_step: no-op without rules
+                batch = {
+                    k: shard(v, ("batch",) + (None,) * (v.ndim - 1))
+                    for k, v in batch.items()
+                }
                 loss, grads = jax.value_and_grad(
                     lambda p, b: lm_loss(self.cfg, p, b, remat=self.tcfg.remat)
                 )(params, batch)
@@ -111,6 +115,7 @@ class Trainer:
 
             self._jit_step = jax.jit(step_with_compression, donate_argnums=(0, 1, 2))
             self._ef = compression.init(params)
+            self.compressed_wire_bytes = compression.compressed_bytes(params)
         else:
             self._jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
             self._ef = None
