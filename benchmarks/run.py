@@ -1,14 +1,29 @@
 """Benchmark orchestrator — one module per paper table/figure.
 
-Prints ``name,value,derived`` CSV.  The roofline table (§Roofline) is
+Prints ``name,value,derived`` CSV.  The serving benchmark additionally
+returns a machine-readable record that is written to ``BENCH_serve.json``
+(throughput, p50/p99 ticks-to-finish, offload count, GC time) so the
+bench trajectory is tracked as an artifact, not just console text.
+
+``--only SUBSTR`` runs the subset of modules whose name contains SUBSTR
+(the CI benchmark-smoke job uses ``--only serve_pressure``); ``--json
+PATH`` overrides the JSON output path.  The roofline table (§Roofline) is
 produced by ``repro.roofline.analysis`` from the dry-run artifacts and is
 summarized here when those artifacts exist.
 """
 
+import argparse
 import importlib
+import json
 import os
 import sys
 import traceback
+
+# allow `python benchmarks/run.py` (script mode): the repo root must be on
+# sys.path for the `benchmarks.*` module imports below
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 MODULES = [
     "benchmarks.fig1_motivation",
@@ -24,17 +39,38 @@ MODULES = [
 ]
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--only", default="",
+        help="run only modules whose name contains this substring",
+    )
+    ap.add_argument(
+        "--json", default="BENCH_serve.json",
+        help="path for the machine-readable serving record",
+    )
+    args = ap.parse_args(argv)
+    modules = [m for m in MODULES if args.only in m]
+    if not modules:
+        raise SystemExit(f"--only {args.only!r} matches no benchmark module")
+
     print("name,value,derived")
     failures = 0
-    for name in MODULES:
+    bench_record = None
+    for name in modules:
         try:
             mod = importlib.import_module(name)
-            mod.main()
+            result = mod.main()
+            if name.endswith("serve_pressure") and isinstance(result, dict):
+                bench_record = result
         except Exception:
             failures += 1
             print(f"{name},ERROR,", file=sys.stdout)
             traceback.print_exc()
+    if bench_record is not None:
+        with open(args.json, "w") as f:
+            json.dump(bench_record, f, indent=2, sort_keys=True)
+        print(f"bench.json,{args.json},machine-readable serving record")
     # roofline summary (if dry-run artifacts are present)
     try:
         from repro.roofline.analysis import load_all

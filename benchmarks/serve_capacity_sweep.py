@@ -9,7 +9,7 @@ when the heap is reduced" claim, measured on real JAX decodes.
 import jax
 
 from repro.configs import ARCHS
-from repro.core.scheduler import MursConfig
+from repro.sched import FairPolicy, MursConfig, MursPolicy
 from repro.models import init_model
 from repro.serve import EngineConfig, Request, ServingEngine
 from repro.serve.kv_cache import kv_bytes_per_token
@@ -30,12 +30,14 @@ def main() -> None:
     per_tok = kv_bytes_per_token(cfg)
     floor = {"fair": None, "murs": None}
     for tokens in CAPACITIES_TOKENS:
-        for mode, sched in (("fair", None), ("murs", MursConfig(period=1.0))):
+        policies = (("fair", FairPolicy),
+                    ("murs", lambda: MursPolicy(MursConfig.for_serving(period=1.0))))
+        for mode, make_policy in policies:
             eng = ServingEngine(
                 cfg, params,
                 EngineConfig(n_slots=4, max_seq=64,
                              hbm_capacity_bytes=per_tok * tokens,
-                             scheduler=sched, offload_enabled=False),
+                             policy=make_policy(), offload_enabled=False),
             )
             for r in _requests():
                 eng.submit(r)

@@ -1,57 +1,193 @@
-"""JAX serving engine under HBM pressure: MURS admission vs FAIR.
+"""JAX serving engine under sustained HBM pressure: one workload, three
+policies.
 
-The paper's technique as a first-class serving feature: two tenants share
-one engine; the KV pool is sized to force pressure.  FAIR OOM-evicts;
-MURS suspends heavy decodes and completes everything (§VI-C scalability).
+The paper's technique as a first-class serving feature, in the paper's own
+SERVICE setting (§II): two tenants submit a sustained stream of requests
+into one engine whose KV pool is sized to force pressure — tenant A sends
+long decodes (linear KV growth), tenant B short interactive ones.  The
+SAME engine runs under :class:`FairPolicy` (stock: fills the pool, pays
+reactive offloads and residency stalls), :class:`MursPolicy` with the
+serving-tuned config (admission control + suspension + frozen-KV swap;
+zero reactive offloads) and :class:`PriorityPolicy` (tenant-weighted).
+Policy swaps, not code paths.
+
+Besides the CSV rows every benchmark emits, :func:`collect` returns the
+machine-readable record ``benchmarks/run.py`` writes to
+``BENCH_serve.json``: throughput, p50/p99 ticks-to-finish, offload count,
+and the paired simulator GC time per policy.
 """
+
+import os
 
 import jax
 
 from repro.configs import ARCHS
-from repro.core.scheduler import MursConfig
 from repro.models import init_model
+from repro.sched import (
+    FairPolicy,
+    MursConfig,
+    MursPolicy,
+    PriorityConfig,
+    PriorityPolicy,
+)
 from repro.serve import EngineConfig, Request, ServingEngine
 from repro.serve.kv_cache import kv_bytes_per_token
-from .common import emit
+from .common import emit, make_grep, make_sort, run_service
 
 
-def _requests():
-    reqs = [Request(f"A{i}", "A", list(range(10, 18)), 40) for i in range(3)]
-    reqs += [Request(f"B{i}", "B", list(range(30, 34)), 6) for i in range(4)]
-    return reqs
+def _arrivals(debug: bool = False):
+    """(submit_tick, request) stream: heavy tenant A + interactive tenant B."""
+    n_waves, gen_a = (2, 16) if debug else (4, 40)
+    evs, t = [], 0
+    for i in range(n_waves):
+        evs.append((t, Request(f"A{i}", "A", list(range(10, 18)), gen_a)))
+        t += 10
+        for j in range(2):
+            evs.append((t, Request(f"B{i}_{j}", "B", list(range(30, 34)), 6)))
+            t += 3
+    return evs
 
 
-def main() -> None:
+def _percentile(sorted_vals, q: float):
+    if not sorted_vals:
+        return None
+    idx = min(len(sorted_vals) - 1, round(q * (len(sorted_vals) - 1)))
+    return sorted_vals[idx]
+
+
+def _policies():
+    return (
+        ("fair", lambda: FairPolicy()),
+        ("murs", lambda: MursPolicy(MursConfig.for_serving(period=1.0))),
+        (
+            "priority",
+            lambda: PriorityPolicy(
+                PriorityConfig(weights={"B": 4.0, "A": 1.0})
+            ),
+        ),
+    )
+
+
+def _run_stream(eng: ServingEngine, arrivals, max_ticks: int = 800) -> dict:
+    k = 0
+    while eng.tick < max_ticks and k < len(arrivals):
+        while k < len(arrivals) and arrivals[k][0] <= eng.tick:
+            eng.submit(arrivals[k][1])
+            k += 1
+        eng.step()
+    return eng.run(max_ticks=max_ticks)
+
+
+def collect(debug: bool = False) -> dict:
+    """Run the pressure stream under every policy; JSON-ready record."""
     cfg = ARCHS["internlm2-1.8b"].smoke()
     params = init_model(cfg, jax.random.PRNGKey(0))
     cap = kv_bytes_per_token(cfg) * 80
-    for mode, sched in (("fair", None), ("murs", MursConfig(period=1.0))):
+    record = {
+        "workload": {
+            "arch": "internlm2-1.8b (smoke)",
+            "n_requests": len(_arrivals(debug)),
+            "hbm_capacity_tokens": 80,
+            "service_mode": "sustained stream (paper SII)",
+            "debug": debug,
+        },
+        "engine": {},
+        "sim": {},
+    }
+    for mode, make_policy in _policies():
         eng = ServingEngine(
             cfg, params,
             EngineConfig(n_slots=4, max_seq=64, hbm_capacity_bytes=cap,
-                         scheduler=sched),
+                         policy=make_policy()),
         )
-        for r in _requests():
-            eng.submit(r)
-        out = eng.run(max_ticks=400)
-        emit(f"serve.{mode}.completed", out["completed"], "of 7 requests")
-        emit(f"serve.{mode}.failed", out["failed"])
-        emit(f"serve.{mode}.suspensions", out["suspensions"])
-        emit(f"serve.{mode}.peak_used_fraction",
-             round(out["peak_used_fraction"], 2))
-        emit(f"serve.{mode}.tokens_generated", out["tokens_generated"])
-        emit(f"serve.{mode}.offloads", out["offload_events"],
-             "paper Table III: MURS avoids ~90% of spills")
-    # online §III classification of a decode request (MURS engine)
-    eng = ServingEngine(
+        # fresh Request objects per run — the engine mutates them
+        out = _run_stream(eng, _arrivals(debug))
+        lat = out["latency_ticks"]
+        record["engine"][mode] = {
+            "completed": out["completed"],
+            "failed": out["failed"],
+            "suspensions": out["suspensions"],
+            "offload_count": out["offload_events"],
+            "swap_count": out["swap_events"],
+            "stall_ticks": out["stall_ticks"],
+            "peak_used_fraction": round(out["peak_used_fraction"], 3),
+            "makespan_ticks": out["ticks"],
+            "tokens_generated": out["tokens_generated"],
+            "throughput_tokens_per_tick": round(
+                out["tokens_generated"] / max(out["ticks"], 1), 3
+            ),
+            "mean_ticks_to_finish": (
+                round(sum(lat) / len(lat), 2) if lat else None
+            ),
+            "p50_ticks_to_finish": _percentile(lat, 0.50),
+            "p99_ticks_to_finish": _percentile(lat, 0.99),
+            "chunked_prefill_ticks": out["chunked_prefill_ticks"],
+        }
+    # the paired simulator run supplies the GC-time axis the engine has no
+    # analogue for (stop-the-world collector pauses, paper Table III)
+    if not debug:
+        for mode, kwargs in (("fair", {}), ("murs", {"murs": MursConfig()})):
+            m = run_service(
+                [make_sort(), make_grep()], heap_gb=6.0, oom_is_fatal=False,
+                **kwargs,
+            )
+            record["sim"][mode] = {
+                "gc_time_s": round(m.total_gc_time, 3),
+                "makespan_s": round(m.sim_time, 2),
+                "full_gcs": m.full_gcs,
+                "spills": sum(j.spills for j in m.jobs.values()),
+            }
+    # online §III classification of a decode request (MURS engine, no
+    # pressure) — reuses the already-initialized model
+    probe_eng = ServingEngine(
         cfg, params,
         EngineConfig(n_slots=2, max_seq=64, hbm_capacity_bytes=cap * 100,
-                     scheduler=MursConfig(period=1.0)),
+                     policy=MursPolicy(MursConfig(period=1.0))),
     )
-    eng.submit(Request("probe", "T", list(range(8)), 20))
-    out = eng.run(max_ticks=200)
-    emit("serve.murs.decode_memory_model", out["memory_models"]["probe"],
+    probe_eng.submit(Request("probe", "T", list(range(8)), 20))
+    probe_out = probe_eng.run(max_ticks=200)
+    record["probe_memory_model"] = probe_out["memory_models"]["probe"]
+    fair, murs = record["engine"]["fair"], record["engine"]["murs"]
+    murs_p50, fair_p50 = murs["p50_ticks_to_finish"], fair["p50_ticks_to_finish"]
+    record["murs_beats_fair"] = {
+        # median request completion time — the serving SLO metric.  (FAIR
+        # wins raw makespan in this cheap-offload regime by overcommitting
+        # into host memory; see DESIGN.md §5 for the regime discussion.)
+        # None = that policy completed nothing: it cannot win the axis.
+        "completion_time_p50": (
+            murs_p50 is not None
+            and (fair_p50 is None or murs_p50 < fair_p50)
+        ),
+        "offload_count": murs["offload_count"] < fair["offload_count"],
+        "completed": murs["completed"] >= fair["completed"],
+    }
+    return record
+
+
+def main() -> dict:
+    debug = bool(os.environ.get("BENCH_DEBUG"))
+    record = collect(debug=debug)
+    for mode, row in record["engine"].items():
+        emit(f"serve.{mode}.completed", row["completed"],
+             f"of {record['workload']['n_requests']} requests")
+        emit(f"serve.{mode}.failed", row["failed"])
+        emit(f"serve.{mode}.suspensions", row["suspensions"])
+        emit(f"serve.{mode}.peak_used_fraction", row["peak_used_fraction"])
+        emit(f"serve.{mode}.tokens_generated", row["tokens_generated"])
+        emit(f"serve.{mode}.throughput", row["throughput_tokens_per_tick"],
+             "tokens/tick")
+        emit(f"serve.{mode}.p50_ticks", row["p50_ticks_to_finish"],
+             "median request completion time")
+        emit(f"serve.{mode}.p99_ticks", row["p99_ticks_to_finish"])
+        emit(f"serve.{mode}.offloads", row["offload_count"],
+             "paper Table III: MURS avoids ~90% of spills")
+        emit(f"serve.{mode}.swaps", row["swap_count"],
+             "policy-driven frozen-KV swap-outs")
+    for mode, row in record["sim"].items():
+        emit(f"serve.sim.{mode}.gc_time_s", row["gc_time_s"])
+    emit("serve.murs.decode_memory_model", record["probe_memory_model"],
          "paper SIII online classification (attention decode = linear)")
+    return record
 
 
 if __name__ == "__main__":

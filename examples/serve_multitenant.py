@@ -7,8 +7,8 @@ service-mode scenario as a first-class JAX serving feature).
 import jax
 
 from repro.configs import ARCHS
-from repro.core.scheduler import MursConfig
 from repro.models import init_model
+from repro.sched import FairPolicy, MursConfig, MursPolicy
 from repro.serve import EngineConfig, Request, ServingEngine
 from repro.serve.kv_cache import kv_bytes_per_token
 
@@ -25,11 +25,15 @@ def main() -> None:
     params = init_model(cfg, jax.random.PRNGKey(0))
     capacity = kv_bytes_per_token(cfg) * 80  # KV pool ≈ 80 tokens → pressure
 
-    for name, sched in (("FAIR (stock)", None), ("MURS", MursConfig(period=1.0))):
+    policies = (
+        ("FAIR (stock)", FairPolicy()),
+        ("MURS", MursPolicy(MursConfig.for_serving(period=1.0))),
+    )
+    for name, policy in policies:
         engine = ServingEngine(
             cfg, params,
             EngineConfig(n_slots=4, max_seq=64,
-                         hbm_capacity_bytes=capacity, scheduler=sched),
+                         hbm_capacity_bytes=capacity, policy=policy),
         )
         for r in workload():
             engine.submit(r)

@@ -33,6 +33,9 @@ class TaskStats:
     progress: float  # fraction of input processed, in [0, 1]
     remaining_bytes: float = 0.0  # input bytes still to process
     model: UsageModel = UsageModel.CONSTANT
+    #: scheduling group the task belongs to (job id in the simulator,
+    #: tenant in the serving engine) — consumed by tenant-aware policies
+    group: str = ""
 
     @property
     def memory_necessary(self) -> float:
@@ -66,6 +69,7 @@ class Sampler:
     _progress: Dict[str, float] = field(default_factory=dict)
     _consumption: Dict[str, float] = field(default_factory=dict)
     _remaining: Dict[str, float] = field(default_factory=dict)
+    _group: Dict[str, str] = field(default_factory=dict)
 
     def observe(
         self,
@@ -74,6 +78,7 @@ class Sampler:
         processed_bytes: float,
         total_bytes: float,
         live_bytes: float,
+        group: str = "",
     ) -> None:
         est = self._estimators.get(task_id)
         if est is None:
@@ -85,12 +90,15 @@ class Sampler:
         else:
             self._progress[task_id] = 1.0
         self._remaining[task_id] = max(total_bytes - processed_bytes, 0.0)
+        if group:
+            self._group[task_id] = group
 
     def forget(self, task_id: str) -> None:
         self._estimators.pop(task_id, None)
         self._progress.pop(task_id, None)
         self._consumption.pop(task_id, None)
         self._remaining.pop(task_id, None)
+        self._group.pop(task_id, None)
 
     def stats(self, task_ids: Iterable[str]) -> list[TaskStats]:
         out = []
@@ -104,6 +112,7 @@ class Sampler:
                     progress=self._progress.get(tid, 0.0),
                     remaining_bytes=self._remaining.get(tid, 0.0),
                     model=est.model if est else UsageModel.CONSTANT,
+                    group=self._group.get(tid, ""),
                 )
             )
         return out

@@ -1,293 +1,16 @@
-"""MURS — the Memory-Usage-Rate based Scheduler (paper §IV, Algorithm 1).
+"""Re-export shim — the scheduler moved to :mod:`repro.sched`.
 
-Decision procedure, invoked periodically ("seasonally") with fresh Sampler
-stats and the pool state:
-
-    usage < yellow                     → no action (and: resume ALL suspended
-                                         tasks once usage drops below yellow
-                                         after a full GC)
-    yellow ≤ usage < red, SQ empty     → ComputeSuspendTasks: keep the
-                                         lowest-rate tasks whose projected
-                                         remaining need Σ c·(1−done%) fits the
-                                         free pool, suspend the rest (the
-                                         heavy tasks) into a FIFO queue
-    yellow ≤ usage < red, SQ non-empty → no action (pressure already handled)
-    usage ≥ red                        → emergency: ComputeSuspendTasks against
-                                         the shrunken free pool (queue gate
-                                         ignored) plus ComputeSpill — suspend
-                                         every task whose actual (c > M/N) or
-                                         projected (c/done% > M/N) consumption
-                                         exceeds its fair share, cutting the
-                                         degree of parallelism before
-                                         spill / OOM
-
-On every task completion one suspended task is resumed (FIFO — avoids
-starvation, paper §VI-D); dropping below yellow resumes all.
-
-The published pseudocode has two OCR-garbled lines (its line 21 pushes the
-*kept* min-rate task into SQ; its branch order tests red before yellow);
-we follow the unambiguous prose of §IV: the *returned* heavy tasks are the
-ones suspended and queued, and ComputeSuspendTasks runs in the yellow band
-while ComputeSpill guards the red band.
+The MURS decision procedure (paper §IV, Algorithm 1) now lives in
+:mod:`repro.sched.murs` as :class:`MursPolicy`, one implementation of the
+pluggable :class:`repro.sched.SchedulingPolicy` protocol that both the
+Spark-fidelity simulator and the JAX serving engine consume.  This module
+keeps the historical import path alive; ``MursScheduler`` is an alias of
+``MursPolicy``.
 """
 
-from __future__ import annotations
+from repro.sched.murs import MursConfig, MursPolicy
+from repro.sched.protocol import SchedulingDecision
 
-from dataclasses import dataclass, field
-from typing import List, Optional, Sequence
+MursScheduler = MursPolicy
 
-from .memory_manager import MemoryPool
-from .sampler import TaskStats
-
-__all__ = ["MursConfig", "SchedulingDecision", "MursScheduler"]
-
-
-@dataclass(frozen=True)
-class MursConfig:
-    """Thresholds and knobs of MURS (defaults from the paper: 0.4 / 0.8)."""
-
-    yellow: float = 0.4
-    red: float = 0.8
-    #: sampler/scheduler period in (sim or wall) seconds
-    period: float = 1.0
-    #: never suspend below this many running tasks (keep the service live)
-    min_running: int = 1
-    #: the collector's full-GC initiating occupancy.  Heap above this line
-    #: is not usable without incurring full collections, so the scheduler's
-    #: working notion of "free memory" is the headroom below it:
-    #: free = trigger×capacity − live.  Set to None to use the raw
-    #: JM.freeMemory reading of the paper's pseudocode (heap − used).
-    collector_trigger: Optional[float] = 0.65
-    #: a freshly resumed task cannot be re-suspended for this many seconds —
-    #: prevents the suspend/resume oscillation around the yellow threshold
-    resume_immunity: float = 5.0
-    #: execution-memory share of the pool that the memory manager actually
-    #: grants to tasks — the fair share M/N of ComputeSpill is M_exec/N, the
-    #: same limit the environment spills at (anything larger never fires).
-    #: Held slightly below the environment's grant (0.6) as a safety margin
-    #: so kept tasks finish without ever hitting the per-task cap.
-    exec_fraction: float = 0.55
-
-    def __post_init__(self) -> None:
-        if not (0.0 < self.yellow <= self.red <= 1.0):
-            raise ValueError(
-                f"need 0 < yellow <= red <= 1, got {self.yellow}, {self.red}"
-            )
-
-
-@dataclass
-class SchedulingDecision:
-    """Output of one scheduler invocation."""
-
-    suspend: List[str] = field(default_factory=list)
-    resume: List[str] = field(default_factory=list)
-    reason: str = "ok"
-
-    @property
-    def is_noop(self) -> bool:
-        return not self.suspend and not self.resume
-
-
-class MursScheduler:
-    """Algorithm 1 with FIFO suspension queue and resume rules."""
-
-    def __init__(self, config: Optional[MursConfig] = None) -> None:
-        self.config = config or MursConfig()
-        self._suspended: List[str] = []  # FIFO: index 0 = first suspended
-        self._resumed_at: dict[str, float] = {}
-        self._now: float = 0.0
-
-    # ------------------------------------------------------------ properties
-    @property
-    def suspended_queue(self) -> Sequence[str]:
-        return tuple(self._suspended)
-
-    @property
-    def has_suspended(self) -> bool:
-        return bool(self._suspended)
-
-    def _immune(self, task_id: str) -> bool:
-        t0 = self._resumed_at.get(task_id)
-        return t0 is not None and (self._now - t0) < self.config.resume_immunity
-
-    # ------------------------------------------------------------- main loop
-    def propose(
-        self,
-        pool: MemoryPool,
-        running: Sequence[TaskStats],
-        now: float = 0.0,
-        suspended: Sequence[TaskStats] = (),
-    ) -> SchedulingDecision:
-        """One "seasonal" scheduling pass (paper Algorithm 1).
-
-        Yellow band: classify by rate and suspend the heavy tail (once —
-        gated on an empty suspension queue, paper line 7).  Red band: the
-        emergency path — ComputeSuspendTasks against the (now tiny) free
-        pool *plus* the ComputeSpill fair-share guard, regardless of the
-        queue gate, because red means spill/OOM is imminent.
-        """
-        cfg = self.config
-        self._now = now
-        usage = pool.live_fraction
-
-        if usage < cfg.yellow:
-            # Pressure receded: resume everything still suspended.
-            if self._suspended:
-                resumed = list(self._suspended)
-                self._suspended.clear()
-                for tid in resumed:
-                    self._resumed_at[tid] = now
-                return SchedulingDecision(resume=resumed, reason="below-yellow")
-            return SchedulingDecision(reason="light")
-
-        if usage >= cfg.red:
-            d1 = self._compute_suspend_tasks(pool, running)
-            still = [t for t in running if t.task_id not in set(d1.suspend)]
-            d2 = self._compute_spill(pool, still, suspended)
-            return SchedulingDecision(
-                suspend=d1.suspend + d2.suspend,
-                reason="red-emergency" if (d1.suspend or d2.suspend) else "red-fits",
-            )
-
-        # Spill-avoidance: if the execution pool is close to exhaustion the
-        # memory manager is about to deny allocations (spill), regardless of
-        # total-heap occupancy — run the ComputeSpill guard now.
-        exec_pool = cfg.exec_fraction * pool.capacity
-        frozen = sum(t.consumption for t in suspended)
-        projected = sum(t.consumption + t.rate * t.remaining_bytes for t in running)
-        if frozen + projected >= 0.9 * exec_pool:
-            d = self._compute_spill(pool, running, suspended)
-            if d.suspend:
-                return d
-
-        if self._suspended:
-            # Yellow band but pressure already being handled.
-            return SchedulingDecision(reason="already-suspended")
-
-        return self._compute_suspend_tasks(pool, running)
-
-    # --------------------------------------------------- ComputeSuspendTasks
-    def _compute_suspend_tasks(
-        self, pool: MemoryPool, running: Sequence[TaskStats]
-    ) -> SchedulingDecision:
-        """Keep lowest-rate tasks that fit free memory; suspend the rest."""
-        cfg = self.config
-        if cfg.collector_trigger is not None:
-            free = max(
-                cfg.collector_trigger * pool.capacity - pool.live_bytes, 0.0
-            )
-            free = min(free, pool.free_bytes)
-        else:
-            free = pool.free_bytes
-        fair_share = self._fair_share(pool, running)
-
-        # Order by projected FUTURE growth (rate × remaining input): keeping
-        # low-future-growth tasks lets them finish cheaply, while suspending
-        # high-future-growth tasks freezes only their (typically still small)
-        # current buffer and saves all of their remaining growth.
-        by_growth = sorted(
-            running, key=lambda t: (t.rate * t.remaining_bytes, t.rate, t.task_id)
-        )
-        kept: List[TaskStats] = []
-        suspend: List[TaskStats] = []
-        for t in by_growth:
-            if len(kept) < cfg.min_running or self._immune(t.task_id):
-                kept.append(t)
-                free -= t.memory_necessary
-                continue
-            # Inline spill guard (paper line 17): a task that would exceed its
-            # fair share cannot be saved by suspending others — reduce the
-            # degree of parallelism by suspending it instead.
-            if self._violates_fair_share(t, fair_share):
-                suspend.append(t)
-                continue
-            need = t.memory_necessary
-            if free - need > 0.0:
-                free -= need
-                kept.append(t)
-            else:
-                suspend.append(t)
-
-        # Suspend heaviest-first ordering for the FIFO queue: tasks were
-        # examined in ascending rate, so `suspend` is already ascending;
-        # queue them ascending so that the FIFO resume brings back the
-        # lightest suspended task first.
-        ids = [t.task_id for t in suspend]
-        self._suspended.extend(ids)
-        return SchedulingDecision(
-            suspend=ids,
-            reason="yellow-suspend" if ids else "yellow-fits",
-        )
-
-    # ---------------------------------------------------------- ComputeSpill
-    def _compute_spill(
-        self,
-        pool: MemoryPool,
-        running: Sequence[TaskStats],
-        suspended: Sequence[TaskStats] = (),
-    ) -> SchedulingDecision:
-        """Spill-avoidance: reduce parallelism until the projected total
-        consumption of the kept tasks — plus the frozen buffers of already
-        suspended tasks, which stay resident — fits the execution pool, so
-        the memory manager never has to deny an allocation (paper: "ensures
-        that the running tasks can complete with the remaining memory
-        space")."""
-        cfg = self.config
-        budget = cfg.exec_fraction * pool.capacity
-        budget -= sum(t.consumption for t in suspended)
-        by_growth = sorted(
-            running, key=lambda t: (t.rate * t.remaining_bytes, t.rate, t.task_id)
-        )
-        suspend: List[str] = []
-        kept = 0
-        for t in by_growth:
-            projected = t.consumption + t.rate * t.remaining_bytes
-            if kept < cfg.min_running or self._immune(t.task_id):
-                kept += 1
-                budget -= projected
-                continue
-            if budget - projected > 0.0:
-                budget -= projected
-                kept += 1
-            elif t.task_id not in self._suspended:
-                suspend.append(t.task_id)
-                budget -= t.consumption  # its buffer stays frozen in the pool
-        self._suspended.extend(suspend)
-        return SchedulingDecision(
-            suspend=suspend, reason="spill-avoidance" if suspend else "spill-fits"
-        )
-
-    def _fair_share(
-        self, pool: MemoryPool, running: Sequence[TaskStats]
-    ) -> float:
-        n = max(len(running), 1)
-        return self.config.exec_fraction * pool.capacity / n
-
-    @staticmethod
-    def _violates_fair_share(t: TaskStats, fair_share: float) -> bool:
-        if t.consumption > fair_share:
-            return True
-        return t.progress > 1e-9 and t.projected_total > fair_share
-
-    # ------------------------------------------------------------ resume API
-    def on_task_complete(self) -> Optional[str]:
-        """A running task finished: resume the first suspended task (FIFO)."""
-        if self._suspended:
-            tid = self._suspended.pop(0)
-            self._resumed_at[tid] = self._now
-            return tid
-        return None
-
-    def on_full_gc(self, pool: MemoryPool) -> List[str]:
-        """After a full GC, resume all if usage dropped below yellow."""
-        if pool.live_fraction < self.config.yellow and self._suspended:
-            resumed = list(self._suspended)
-            self._suspended.clear()
-            for tid in resumed:
-                self._resumed_at[tid] = self._now
-            return resumed
-        return []
-
-    def drop(self, task_id: str) -> None:
-        """Remove a task from the queue (e.g. its job was cancelled)."""
-        self._suspended = [t for t in self._suspended if t != task_id]
+__all__ = ["MursConfig", "MursPolicy", "MursScheduler", "SchedulingDecision"]

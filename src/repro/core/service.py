@@ -1,4 +1,4 @@
-"""Multi-tenant service executor: FAIR baseline vs MURS (paper §II, §V).
+"""Multi-tenant service executor scheduling through the policy layer.
 
 Discrete-time executor model of one Spark executor JVM (the paper runs four
 identical workers; we simulate one executor on its 1/4 data share — jobs are
@@ -9,11 +9,14 @@ The executor owns:
   * a :class:`MemoryPool` (the JVM heap) with young/old accounting,
   * a GC cost model (minor + full, stop-the-world),
   * a spill model (fair-share violation under a nearly-full heap),
-  * either the FAIR scheduler (Spark baseline) or :class:`MursScheduler`.
+  * a :class:`repro.sched.SchedulingPolicy` — :class:`FairPolicy` (the
+    Spark baseline), :class:`MursPolicy` (Algorithm 1), or any other
+    implementation of the protocol.
 
 Jobs are DAGs of stages; a stage's tasks become runnable when the previous
-stage of that job completes.  The FAIR policy assigns cores round-robin
-across jobs each tick, as Spark's fair scheduler pool does across tenants.
+stage of that job completes.  Core handout each tick is the policy's
+``assign`` hook (FAIR/MURS: round-robin across jobs, as Spark's fair
+scheduler pool does across tenants; PriorityPolicy: weighted stride).
 """
 
 from __future__ import annotations
@@ -21,9 +24,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.sched import FairPolicy, MursConfig, MursPolicy, SchedulingPolicy
+from repro.sched.protocol import SchedulingDecision
+
 from .memory_manager import MemoryPool
 from .sampler import Sampler
-from .scheduler import MursConfig, MursScheduler, SchedulingDecision
 from .tasks import TaskSpec, TaskState
 
 __all__ = ["GcModel", "JobSpec", "JobMetrics", "ServiceMetrics", "ServiceExecutor"]
@@ -132,7 +137,13 @@ class ServiceMetrics:
 
 
 class ServiceExecutor:
-    """Tick-driven executor; ``scheduler=None`` gives the FAIR baseline."""
+    """Tick-driven executor scheduling exclusively through ``policy``.
+
+    ``policy`` takes any :class:`SchedulingPolicy`; the legacy ``murs``
+    kwarg (a :class:`MursConfig`, or None for the FAIR baseline) is kept
+    as a constructor convenience and resolves to :class:`MursPolicy` /
+    :class:`FairPolicy`.
+    """
 
     def __init__(
         self,
@@ -146,17 +157,22 @@ class ServiceExecutor:
         gc: Optional[GcModel] = None,
         spill: Optional[SpillModel] = None,
         murs: Optional[MursConfig] = None,
+        policy: Optional[SchedulingPolicy] = None,
         dt: float = 0.05,
         max_time: float = 36000.0,
         oom_is_fatal: bool = True,
     ) -> None:
+        if policy is not None and murs is not None:
+            raise ValueError("pass either policy= or murs=, not both")
         self.cores = cores
         self.pool = MemoryPool(capacity=heap_bytes)
         self.proc_rate = proc_rate
         self.disk_bandwidth = disk_bandwidth
         self.gc = gc or GcModel()
         self.spill = spill or SpillModel()
-        self.murs = MursScheduler(murs) if murs is not None else None
+        self.policy: SchedulingPolicy = policy or (
+            MursPolicy(murs) if murs is not None else FairPolicy()
+        )
         self.sampler = Sampler()
         self.dt = dt
         self.max_time = max_time
@@ -174,7 +190,6 @@ class ServiceExecutor:
         self._last_minor_live = 0.0
         self._next_sample = 0.0
         self.metrics = ServiceMetrics()
-        self._rr_cursor = 0  # round-robin cursor over jobs for FAIR pick
 
     # ------------------------------------------------------------ submission
     def submit(self, job: JobSpec) -> None:
@@ -245,10 +260,10 @@ class ServiceExecutor:
         # --- task completion ---------------------------------------------
         self._complete_tasks()
 
-        # --- MURS seasonal pass ------------------------------------------
-        if self.murs is not None and self.time >= self._next_sample:
-            self._murs_pass()
-            self._next_sample = self.time + self.murs.config.period
+        # --- seasonal policy pass ----------------------------------------
+        if self.time >= self._next_sample:
+            self._policy_pass()
+            self._next_sample = self.time + self.policy.period
 
         self.time += dt
 
@@ -267,7 +282,7 @@ class ServiceExecutor:
                 self._pending.setdefault(jid, []).extend(tasks)
 
     def _launch_tasks(self) -> None:
-        """FAIR: fill free cores round-robin across jobs with pending tasks.
+        """Fill free cores in the order the policy's ``assign`` hook picks.
 
         A suspended task's thread sleeps inside InterruptibleIterator and
         costs no CPU: its *core* is released to other tasks (paper §I: "the
@@ -279,29 +294,20 @@ class ServiceExecutor:
         free = self.cores - sum(
             1 for t in self._running.values() if not t.suspended
         )
-        # A job with suspended tasks is a known heavy-pressure source: MURS
-        # does not launch more of its tasks until its queue drains — the
-        # released cores go to the light jobs' pending tasks.
-        gated = set()
-        if self.murs is not None and self.murs.has_suspended:
-            gated = {
-                self._running[tid].spec.job_id
-                for tid in self.murs.suspended_queue
-                if tid in self._running
-            }
-        jobs_with_pending = [
-            j for j, p in self._pending.items() if p and j not in gated
-        ]
-        while free > 0 and jobs_with_pending:
-            self._rr_cursor = self._rr_cursor % len(jobs_with_pending)
-            jid = jobs_with_pending[self._rr_cursor]
+        # A job with suspended tasks is a known heavy-pressure source: a
+        # proactive policy does not launch more of its tasks until its
+        # queue drains — the released cores go to the light jobs' tasks.
+        gated = {
+            self._running[tid].spec.job_id
+            for tid in self.policy.suspended_queue
+            if tid in self._running
+        }
+        pending = {
+            j: len(p) for j, p in self._pending.items() if p and j not in gated
+        }
+        for jid in self.policy.assign(free, pending):
             spec = self._pending[jid].pop(0)
             self._running[spec.task_id] = TaskState(spec=spec)
-            free -= 1
-            if not self._pending[jid]:
-                jobs_with_pending.remove(jid)
-            else:
-                self._rr_cursor += 1
 
     # ------------------------------------------------------------- spill/OOM
     def _maybe_spill_or_oom(self) -> None:
@@ -377,9 +383,8 @@ class ServiceExecutor:
                 # permanent-thrash regime (the live set is genuinely large).
                 # Pace it — real collectors degrade, they don't spin.
                 self._next_full_gc_allowed = self.time + pause + g.full_cooldown
-            if self.murs is not None:
-                for tid in self.murs.on_full_gc(self.pool):
-                    self._resume(tid)
+            for tid in self.policy.on_full_gc(self.pool):
+                self._resume(tid)
         if pause > 0.0:
             self._bill_gc(pause)
 
@@ -420,14 +425,12 @@ class ServiceExecutor:
                     # job-lifetime caches die with the job (dead until full GC)
                     freed = self.pool.live.pop(f"cache/{spec.job_id}", 0.0)
                     self.pool.add_live(DEAD, freed)
-            if self.murs is not None:
-                tid = self.murs.on_task_complete()
-                if tid is not None:
-                    self._resume(tid)
+            tid = self.policy.on_task_complete(spec.task_id)
+            if tid is not None:
+                self._resume(tid)
 
-    # ------------------------------------------------------------------ MURS
-    def _murs_pass(self) -> None:
-        assert self.murs is not None
+    # ---------------------------------------------------------------- policy
+    def _policy_pass(self) -> None:
         running_states = [
             t for t in self._running.values() if not t.suspended
         ]
@@ -438,10 +441,11 @@ class ServiceExecutor:
                 processed_bytes=t.processed,
                 total_bytes=t.spec.input_bytes,
                 live_bytes=t.live,
+                group=t.spec.job_id,
             )
         stats = self.sampler.stats([t.spec.task_id for t in running_states])
         frozen = self.sampler.stats([t.spec.task_id for t in suspended_states])
-        decision: SchedulingDecision = self.murs.propose(
+        decision: SchedulingDecision = self.policy.propose(
             self.pool, stats, now=self.time, suspended=frozen
         )
         for tid in decision.suspend:

@@ -208,16 +208,22 @@ def run_service(
     *,
     heap_gb: float,
     murs: Optional[MursConfig] = None,
+    policy=None,
     cores: int = 16,
     dt: float = 0.05,
     gc: Optional[GcModel] = None,
     oom_is_fatal: bool = True,
 ) -> ServiceMetrics:
-    """Run jobs concurrently in one shared context (service mode)."""
+    """Run jobs concurrently in one shared context (service mode).
+
+    ``policy`` takes any :class:`repro.sched.SchedulingPolicy`; ``murs``
+    (a config, or None for FAIR) is the legacy convenience spelling.
+    """
     ex = ServiceExecutor(
         cores=cores,
         heap_bytes=heap_gb * GB,
         murs=murs,
+        policy=policy,
         dt=dt,
         gc=gc or GcModel(),
         oom_is_fatal=oom_is_fatal,

@@ -1,8 +1,11 @@
 """Paged flash-decode Pallas kernel (vLLM-style block-table indirection).
 
 Serving engines fragment each request's KV cache into fixed-size PAGES drawn
-from a shared pool (repro.serve.kv_cache); decode attention must then gather
-a request's pages via its block table.  On TPU the indirection maps onto
+from a shared pool — the free-list ``PageBlockAllocator`` in
+``repro.serve.kv_cache``, whose per-request page tables
+(``PagedKVManager.table_array``) are exactly the ``page_table`` operand
+below; decode attention must then gather a request's pages via its block
+table.  On TPU the indirection maps onto
 **scalar-prefetched BlockSpec index_maps**: the page table lives in SMEM and
 the grid's page step picks which pool page the next VMEM DMA fetches —
 no gather materialization, the KV stream stays at HBM bandwidth.

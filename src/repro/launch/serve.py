@@ -9,7 +9,7 @@ import argparse
 import jax
 
 from repro.configs import ARCHS, get_arch
-from repro.core.scheduler import MursConfig
+from repro.sched import FairPolicy, MursConfig, MursPolicy
 from repro.models import init_model
 from repro.serve import EngineConfig, Request, ServingEngine
 from repro.serve.kv_cache import kv_bytes_per_token
@@ -35,7 +35,8 @@ def main() -> None:
             n_slots=args.slots,
             max_seq=args.max_seq,
             hbm_capacity_bytes=capacity,
-            scheduler=None if args.fair else MursConfig(period=1.0),
+            policy=(FairPolicy() if args.fair
+                    else MursPolicy(MursConfig.for_serving(period=1.0))),
         ),
     )
     n_a = args.requests // 2 + args.requests % 2

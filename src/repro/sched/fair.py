@@ -1,0 +1,42 @@
+"""FAIR — the stock baseline policy (Spark fair scheduler pool / naive
+serving admission).
+
+Round-robin core handout across tenants (inherited from
+:class:`BasePolicy`), no pressure response: ``propose`` never suspends
+and ``admission_headroom`` is 1.0, so the runtimes apply stock semantics
+— admit until the pool is full, then resolve overcommit reactively
+(spill / offload-to-host, or OOM-style hard failure when no spill path
+exists).
+"""
+
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Sequence
+
+from .protocol import BasePolicy, SchedulingDecision
+
+if TYPE_CHECKING:
+    from repro.core.memory_manager import MemoryPool
+    from repro.core.sampler import TaskStats
+
+__all__ = ["FairPolicy"]
+
+
+class FairPolicy(BasePolicy):
+    """Pressure-oblivious round-robin: the paper's comparison baseline."""
+
+    name = "fair"
+    proactive = False
+
+    def __init__(self, period: float = 1.0) -> None:
+        super().__init__()
+        self.period = period
+
+    def propose(
+        self,
+        pool: "MemoryPool",
+        running: Sequence["TaskStats"],
+        now: float = 0.0,
+        suspended: Sequence["TaskStats"] = (),
+    ) -> SchedulingDecision:
+        return SchedulingDecision(reason="fair")

@@ -1,0 +1,340 @@
+"""MURS — the Memory-Usage-Rate based Scheduler (paper §IV, Algorithm 1).
+
+Decision procedure, invoked periodically ("seasonally") with fresh Sampler
+stats and the pool state:
+
+    usage < yellow                     → no action (and: resume ALL suspended
+                                         tasks once usage drops below yellow
+                                         after a full GC)
+    yellow ≤ usage < red, SQ empty     → ComputeSuspendTasks: keep the
+                                         lowest-rate tasks whose projected
+                                         remaining need Σ c·(1−done%) fits the
+                                         free pool, suspend the rest (the
+                                         heavy tasks) into a FIFO queue
+    yellow ≤ usage < red, SQ non-empty → no action (pressure already handled)
+    usage ≥ red                        → emergency: ComputeSuspendTasks against
+                                         the shrunken free pool (queue gate
+                                         ignored) plus ComputeSpill — suspend
+                                         every task whose actual (c > M/N) or
+                                         projected (c/done% > M/N) consumption
+                                         exceeds its fair share, cutting the
+                                         degree of parallelism before
+                                         spill / OOM
+
+On every task completion one suspended task is resumed (FIFO — avoids
+starvation, paper §VI-D); dropping below yellow resumes all.
+
+The published pseudocode has two OCR-garbled lines (its line 21 pushes the
+*kept* min-rate task into SQ; its branch order tests red before yellow);
+we follow the unambiguous prose of §IV: the *returned* heavy tasks are the
+ones suspended and queued, and ComputeSuspendTasks runs in the yellow band
+while ComputeSpill guards the red band.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence
+
+from .protocol import BasePolicy, SchedulingDecision
+
+if TYPE_CHECKING:
+    from repro.core.memory_manager import MemoryPool
+    from repro.core.sampler import TaskStats
+
+__all__ = ["MursConfig", "MursPolicy"]
+
+
+@dataclass(frozen=True)
+class MursConfig:
+    """Thresholds and knobs of MURS (defaults from the paper: 0.4 / 0.8)."""
+
+    yellow: float = 0.4
+    red: float = 0.8
+    #: sampler/scheduler period in (sim or wall) seconds
+    period: float = 1.0
+    #: never suspend below this many running tasks (keep the service live)
+    min_running: int = 1
+    #: the collector's full-GC initiating occupancy.  Heap above this line
+    #: is not usable without incurring full collections, so the scheduler's
+    #: working notion of "free memory" is the headroom below it:
+    #: free = trigger×capacity − live.  Set to None to use the raw
+    #: JM.freeMemory reading of the paper's pseudocode (heap − used).
+    collector_trigger: Optional[float] = 0.65
+    #: a freshly resumed task cannot be re-suspended for this many seconds —
+    #: prevents the suspend/resume oscillation around the yellow threshold
+    resume_immunity: float = 5.0
+    #: execution-memory share of the pool that the memory manager actually
+    #: grants to tasks — the fair share M/N of ComputeSpill is M_exec/N, the
+    #: same limit the environment spills at (anything larger never fires).
+    #: Held slightly below the environment's grant (0.6) as a safety margin
+    #: so kept tasks finish without ever hitting the per-task cap.
+    exec_fraction: float = 0.55
+    #: the inline per-task fair-share check (paper line 17) models Spark's
+    #: M/N execution-memory grant: a task projected past its grant WILL
+    #: spill, so it is suspended pre-emptively.  Pools without per-task
+    #: grants (an HBM KV pool) should turn this off — page-quantized
+    #: consumption makes c/done% overshoot and the guard then suspends
+    #: every request at once.
+    fair_share_guard: bool = True
+
+    def __post_init__(self) -> None:
+        if not (0.0 < self.yellow <= self.red <= 1.0):
+            raise ValueError(
+                f"need 0 < yellow <= red <= 1, got {self.yellow}, {self.red}"
+            )
+
+    @classmethod
+    def for_serving(cls, **overrides) -> "MursConfig":
+        """Thresholds retuned for a serving HBM pool.
+
+        The JVM-specific machinery is disabled: there is no full-GC
+        occupancy line (``collector_trigger``), no per-task execution-
+        memory grant (``fair_share_guard``), and the scheduler may plan
+        against nearly the whole pool (``exec_fraction`` ≈ 1) because
+        nothing else shares it.
+        """
+        base = dict(
+            exec_fraction=0.95, collector_trigger=None, fair_share_guard=False
+        )
+        base.update(overrides)
+        return cls(**base)
+
+
+class MursPolicy(BasePolicy):
+    """Algorithm 1 with FIFO suspension queue and resume rules.
+
+    Placement (``assign``) stays round-robin — MURS changes which tasks
+    RUN under pressure, not how free cores rotate across tenants.
+    """
+
+    name = "murs"
+    proactive = True
+
+    def __init__(self, config: Optional[MursConfig] = None) -> None:
+        super().__init__()
+        self.config = config or MursConfig()
+        self.period = self.config.period
+        # never admit new work into a red pool — it would be suspended on
+        # the very next pass (and gate its whole tenant); queue it instead
+        self.admission_headroom = self.config.red
+        self._resumed_at: Dict[str, float] = {}
+        self._now: float = 0.0
+
+    def _immune(self, task_id: str) -> bool:
+        t0 = self._resumed_at.get(task_id)
+        return t0 is not None and (self._now - t0) < self.config.resume_immunity
+
+    # ------------------------------------------------------------- main loop
+    def propose(
+        self,
+        pool: "MemoryPool",
+        running: Sequence["TaskStats"],
+        now: float = 0.0,
+        suspended: Sequence["TaskStats"] = (),
+    ) -> SchedulingDecision:
+        """One "seasonal" scheduling pass (paper Algorithm 1).
+
+        Yellow band: classify by rate and suspend the heavy tail (once —
+        gated on an empty suspension queue, paper line 7).  Red band: the
+        emergency path — ComputeSuspendTasks against the (now tiny) free
+        pool *plus* the ComputeSpill fair-share guard, regardless of the
+        queue gate, because red means spill/OOM is imminent.
+        """
+        cfg = self.config
+        self._now = now
+        # Expired immunity stamps are dead weight in a long-lived service —
+        # prune them here so the dict is bounded by the active task set.
+        expired = [
+            t
+            for t, t0 in self._resumed_at.items()
+            if (now - t0) >= cfg.resume_immunity
+        ]
+        for t in expired:
+            del self._resumed_at[t]
+        usage = pool.live_fraction
+
+        if usage < cfg.yellow:
+            # Pressure receded: resume everything still suspended.
+            if self._suspended:
+                resumed = list(self._suspended)
+                self._suspended.clear()
+                for tid in resumed:
+                    self._resumed_at[tid] = now
+                return SchedulingDecision(resume=resumed, reason="below-yellow")
+            return SchedulingDecision(reason="light")
+
+        if usage >= cfg.red:
+            d1 = self._compute_suspend_tasks(pool, running)
+            still = [t for t in running if t.task_id not in set(d1.suspend)]
+            d2 = self._compute_spill(pool, still, suspended)
+            return SchedulingDecision(
+                suspend=d1.suspend + d2.suspend,
+                reason="red-emergency" if (d1.suspend or d2.suspend) else "red-fits",
+            )
+
+        # Spill-avoidance: if the execution pool is close to exhaustion the
+        # memory manager is about to deny allocations (spill), regardless of
+        # total-heap occupancy — run the ComputeSpill guard now.
+        exec_pool = cfg.exec_fraction * pool.capacity
+        frozen = sum(t.consumption for t in suspended)
+        projected = sum(t.consumption + t.rate * t.remaining_bytes for t in running)
+        if frozen + projected >= 0.9 * exec_pool:
+            d = self._compute_spill(pool, running, suspended)
+            if d.suspend:
+                return d
+
+        if self._suspended:
+            # Yellow band but pressure already being handled.
+            return SchedulingDecision(reason="already-suspended")
+
+        return self._compute_suspend_tasks(pool, running)
+
+    # --------------------------------------------------- ComputeSuspendTasks
+    def _compute_suspend_tasks(
+        self, pool: "MemoryPool", running: Sequence["TaskStats"]
+    ) -> SchedulingDecision:
+        """Keep lowest-rate tasks that fit free memory; suspend the rest."""
+        cfg = self.config
+        if cfg.collector_trigger is not None:
+            free = max(
+                cfg.collector_trigger * pool.capacity - pool.live_bytes, 0.0
+            )
+            free = min(free, pool.free_bytes)
+        else:
+            free = pool.free_bytes
+        fair_share = self._fair_share(pool, running)
+
+        # Order by projected FUTURE growth (rate × remaining input): keeping
+        # low-future-growth tasks lets them finish cheaply, while suspending
+        # high-future-growth tasks freezes only their (typically still small)
+        # current buffer and saves all of their remaining growth.  Ties —
+        # in particular the zero-information passes before the sampler has
+        # rate estimates — break on the §III-B projected remaining need, so
+        # a nearly-done task is never suspended ahead of a fresh heavy one.
+        by_growth = sorted(
+            running,
+            key=lambda t: (
+                t.rate * t.remaining_bytes,
+                t.rate,
+                t.memory_necessary,
+                t.task_id,
+            ),
+        )
+        kept: List["TaskStats"] = []
+        suspend: List["TaskStats"] = []
+        for t in by_growth:
+            if len(kept) < cfg.min_running or self._immune(t.task_id):
+                kept.append(t)
+                free -= t.memory_necessary
+                continue
+            # Inline spill guard (paper line 17): a task that would exceed its
+            # fair share cannot be saved by suspending others — reduce the
+            # degree of parallelism by suspending it instead.
+            if cfg.fair_share_guard and self._violates_fair_share(t, fair_share):
+                suspend.append(t)
+                continue
+            need = t.memory_necessary
+            if free - need > 0.0:
+                free -= need
+                kept.append(t)
+            else:
+                suspend.append(t)
+
+        # Suspend heaviest-first ordering for the FIFO queue: tasks were
+        # examined in ascending rate, so `suspend` is already ascending;
+        # queue them ascending so that the FIFO resume brings back the
+        # lightest suspended task first.
+        ids = [t.task_id for t in suspend]
+        self._suspended.extend(ids)
+        return SchedulingDecision(
+            suspend=ids,
+            reason="yellow-suspend" if ids else "yellow-fits",
+        )
+
+    # ---------------------------------------------------------- ComputeSpill
+    def _compute_spill(
+        self,
+        pool: "MemoryPool",
+        running: Sequence["TaskStats"],
+        suspended: Sequence["TaskStats"] = (),
+    ) -> SchedulingDecision:
+        """Spill-avoidance: reduce parallelism until the projected total
+        consumption of the kept tasks — plus the frozen buffers of already
+        suspended tasks, which stay resident — fits the execution pool, so
+        the memory manager never has to deny an allocation (paper: "ensures
+        that the running tasks can complete with the remaining memory
+        space")."""
+        cfg = self.config
+        budget = cfg.exec_fraction * pool.capacity
+        budget -= sum(t.consumption for t in suspended)
+        by_growth = sorted(
+            running,
+            key=lambda t: (
+                t.rate * t.remaining_bytes,
+                t.rate,
+                t.memory_necessary,
+                t.task_id,
+            ),
+        )
+        suspend: List[str] = []
+        kept = 0
+        for t in by_growth:
+            projected = t.consumption + t.rate * t.remaining_bytes
+            if kept < cfg.min_running or self._immune(t.task_id):
+                kept += 1
+                budget -= projected
+                continue
+            if budget - projected > 0.0:
+                budget -= projected
+                kept += 1
+            elif t.task_id not in self._suspended:
+                suspend.append(t.task_id)
+                budget -= t.consumption  # its buffer stays frozen in the pool
+        self._suspended.extend(suspend)
+        return SchedulingDecision(
+            suspend=suspend, reason="spill-avoidance" if suspend else "spill-fits"
+        )
+
+    def _fair_share(
+        self, pool: "MemoryPool", running: Sequence["TaskStats"]
+    ) -> float:
+        n = max(len(running), 1)
+        return self.config.exec_fraction * pool.capacity / n
+
+    @staticmethod
+    def _violates_fair_share(t: "TaskStats", fair_share: float) -> bool:
+        if t.consumption > fair_share:
+            return True
+        return t.progress > 1e-9 and t.projected_total > fair_share
+
+    # ------------------------------------------------------------ resume API
+    def on_task_complete(self, task_id: Optional[str] = None) -> Optional[str]:
+        """A running task finished: resume the first suspended task (FIFO).
+
+        The finished task's immunity stamp is purged — without this the
+        ``_resumed_at`` dict grows without bound in a long-lived service
+        (every task that was ever resumed stays in it forever).
+        """
+        if task_id is not None:
+            self._resumed_at.pop(task_id, None)
+        if self._suspended:
+            tid = self._suspended.pop(0)
+            self._resumed_at[tid] = self._now
+            return tid
+        return None
+
+    def on_full_gc(self, pool: "MemoryPool") -> List[str]:
+        """After a full GC, resume all if usage dropped below yellow."""
+        if pool.live_fraction < self.config.yellow and self._suspended:
+            resumed = list(self._suspended)
+            self._suspended.clear()
+            for tid in resumed:
+                self._resumed_at[tid] = self._now
+            return resumed
+        return []
+
+    def drop(self, task_id: str) -> None:
+        """Remove a task from every policy structure (job cancelled)."""
+        super().drop(task_id)
+        self._resumed_at.pop(task_id, None)

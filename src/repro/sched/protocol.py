@@ -1,0 +1,162 @@
+"""The :class:`SchedulingPolicy` protocol and shared policy machinery.
+
+A policy owns four runtime hooks (the minimal surface both runtimes call):
+
+    propose(pool, running, now, suspended) → SchedulingDecision
+        the "seasonal" pass: given fresh sampler stats and the pool state,
+        decide which tasks to suspend / resume this period.
+    on_task_complete(task_id) → resumed task id or None
+        a running task finished; the policy may resume one suspended task
+        (MURS: FIFO, starvation-free) and must forget per-task state it
+        holds for the finished task.
+    on_full_gc(pool) → resumed task ids
+        the collector just ran; resume if pressure receded.
+    drop(task_id)
+        the task's job was cancelled — purge it from every policy structure.
+
+plus one placement hook:
+
+    assign(free, pending) → group ids to launch from, one per free core
+        how free execution slots are offered to tenants/jobs.  FAIR's
+        round-robin cursor lives HERE now, not inlined in the executor.
+
+Runtimes interrogate declarative attributes instead of branching on the
+policy's type: ``proactive`` (True → the policy prevents overcommit via
+admission control + suspension; False → stock reactive semantics),
+``admission_headroom`` (the pool fraction the policy will fill before
+gating new admissions — 1.0 for the stock baseline, the red line for
+MURS), and ``period`` (seconds between seasonal passes).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (
+    TYPE_CHECKING,
+    List,
+    Mapping,
+    Optional,
+    Protocol,
+    Sequence,
+    runtime_checkable,
+)
+
+if TYPE_CHECKING:  # annotation-only: keeps repro.sched import-cycle free
+    from repro.core.memory_manager import MemoryPool
+    from repro.core.sampler import TaskStats
+
+__all__ = ["SchedulingDecision", "SchedulingPolicy", "BasePolicy"]
+
+
+@dataclass
+class SchedulingDecision:
+    """Output of one policy invocation."""
+
+    suspend: List[str] = field(default_factory=list)
+    resume: List[str] = field(default_factory=list)
+    reason: str = "ok"
+
+    @property
+    def is_noop(self) -> bool:
+        return not self.suspend and not self.resume
+
+
+@runtime_checkable
+class SchedulingPolicy(Protocol):
+    """Structural type every scheduling policy satisfies."""
+
+    name: str
+    proactive: bool
+    period: float
+    admission_headroom: float
+
+    def propose(
+        self,
+        pool: "MemoryPool",
+        running: Sequence["TaskStats"],
+        now: float = 0.0,
+        suspended: Sequence["TaskStats"] = (),
+    ) -> SchedulingDecision: ...
+
+    def on_task_complete(self, task_id: Optional[str] = None) -> Optional[str]: ...
+
+    def on_full_gc(self, pool: "MemoryPool") -> List[str]: ...
+
+    def drop(self, task_id: str) -> None: ...
+
+    def assign(self, free: int, pending: Mapping[str, int]) -> List[str]: ...
+
+    @property
+    def suspended_queue(self) -> Sequence[str]: ...
+
+    @property
+    def has_suspended(self) -> bool: ...
+
+
+class BasePolicy:
+    """Default implementations: FIFO suspension queue + round-robin assign.
+
+    The round-robin ``assign`` reproduces Spark's fair-pool core handout
+    (and the cursor semantics the simulator previously inlined): the cursor
+    persists across calls; draining a group does not advance it, so the
+    next group slides into the cursor's slot.
+    """
+
+    name = "base"
+    proactive = False
+    period: float = 1.0
+    #: admit new work while pool usage stays below this fraction of
+    #: capacity (1.0 = stock: fill to the brim, handle pressure reactively)
+    admission_headroom: float = 1.0
+
+    def __init__(self) -> None:
+        self._suspended: List[str] = []  # FIFO: index 0 = first suspended
+        self._cursor = 0
+
+    # ------------------------------------------------------------ properties
+    @property
+    def suspended_queue(self) -> Sequence[str]:
+        return tuple(self._suspended)
+
+    @property
+    def has_suspended(self) -> bool:
+        return bool(self._suspended)
+
+    # ----------------------------------------------------------------- hooks
+    def propose(
+        self,
+        pool: "MemoryPool",
+        running: Sequence["TaskStats"],
+        now: float = 0.0,
+        suspended: Sequence["TaskStats"] = (),
+    ) -> SchedulingDecision:
+        return SchedulingDecision(reason=self.name)
+
+    def on_task_complete(self, task_id: Optional[str] = None) -> Optional[str]:
+        if self._suspended:
+            return self._suspended.pop(0)
+        return None
+
+    def on_full_gc(self, pool: "MemoryPool") -> List[str]:
+        return []
+
+    def drop(self, task_id: str) -> None:
+        self._suspended = [t for t in self._suspended if t != task_id]
+
+    # ------------------------------------------------------------- placement
+    def assign(self, free: int, pending: Mapping[str, int]) -> List[str]:
+        """Round-robin over groups with pending work; one pick per core."""
+        groups = [g for g, n in pending.items() if n > 0]
+        remaining = {g: pending[g] for g in groups}
+        picks: List[str] = []
+        while free > 0 and groups:
+            self._cursor %= len(groups)
+            g = groups[self._cursor]
+            picks.append(g)
+            remaining[g] -= 1
+            free -= 1
+            if remaining[g] <= 0:
+                groups.remove(g)
+            else:
+                self._cursor += 1
+        return picks

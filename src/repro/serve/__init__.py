@@ -1,10 +1,16 @@
 from .engine import EngineConfig, Request, ServingEngine
-from .kv_cache import PagedKVManager, constant_state_bytes, kv_bytes_per_token
+from .kv_cache import (
+    PageBlockAllocator,
+    PagedKVManager,
+    constant_state_bytes,
+    kv_bytes_per_token,
+)
 
 __all__ = [
     "EngineConfig",
     "Request",
     "ServingEngine",
+    "PageBlockAllocator",
     "PagedKVManager",
     "constant_state_bytes",
     "kv_bytes_per_token",

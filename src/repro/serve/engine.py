@@ -1,8 +1,9 @@
-"""Multi-tenant serving engine with MURS HBM-admission control.
+"""Multi-tenant continuous-batching serving engine on the policy layer.
 
 The paper's scheduler compiled into a JAX serving runtime: multiple tenants
 submit requests into one engine (one model, one HBM pool — the "service
-mode" of MURS §II).  Each request is a MURS task:
+mode" of MURS §II).  Each request is a task of the pluggable
+:class:`repro.sched.SchedulingPolicy`:
 
     processed  = tokens consumed so far (prompt + generated)
     live bytes = its KV/state footprint from the PagedKVManager
@@ -10,21 +11,31 @@ mode" of MURS §II).  Each request is a MURS task:
                  classifies full-attention decodes as linear, MLA as shallow-
                  linear, sliding-window/mamba as constant (paper §III models)
 
-Every ``period`` ticks the MursScheduler runs Algorithm 1 against the pool:
-requests proposed for suspension stop being scheduled (their KV stays
-resident — exactly Spark's suspended tasks); one suspended request resumes
-per completion (FIFO, starvation-free) and all resume when pressure drops
-below yellow.  The red band triggers ComputeSpill: offload-avoidance by
-parallelism reduction.  The FAIR baseline schedules round-robin and, like
-stock Spark, OOMs/offloads when the pool runs dry.
+Every ``period`` ticks the policy runs against the pool: requests proposed
+for suspension stop being scheduled (their KV pages stay resident — exactly
+Spark's suspended tasks); one suspended request resumes per completion
+(FIFO, starvation-free under MURS) and all resume when pressure drops below
+yellow.  :class:`FairPolicy` is the stock baseline: no pressure response,
+so the engine's reactive path (offload-to-host, or hard failure when
+offload is disabled) fires when the pool overcommits.  Admission is
+uniform — every policy queues at the door; what differs is the admission
+line (``admission_headroom``) and how fast headroom appears (a suspending
+policy swaps frozen KV to host, a pressure-oblivious one waits for
+completions or pays the reactive path).
 
-Decode runs slot-batched: one jitted vmapped decode step advances every
-active slot per tick with per-slot positions.
+The hot loop is CONTINUOUS BATCHING with CHUNKED PREFILL: prompts are
+consumed in token-budgeted chunks (``prefill_chunk_tokens`` per tick)
+interleaved with decode ticks, so one long prompt never stalls every
+in-flight decode the way a monolithic prefill call does.  Decode runs
+slot-batched: one jitted vmapped decode step advances every active slot per
+tick with per-slot positions; prefill continuation shares the same cache
+layout through a single-slot jitted step.  KV lives in the paged pool of
+:class:`PagedKVManager` — free-list block allocator, per-request page
+tables, the same tables the Pallas ``paged_decode`` kernel consumes.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
@@ -34,9 +45,13 @@ import jax.numpy as jnp
 from repro.configs.base import ArchConfig
 from repro.core.memory_manager import MemoryPool
 from repro.core.sampler import Sampler
-from repro.core.scheduler import MursConfig, MursScheduler
+from repro.sched import FairPolicy, MursConfig, MursPolicy, SchedulingPolicy
 from repro.models import decode_step, init_cache, prefill
 from repro.serve.kv_cache import PagedKVManager
+
+#: Request.reload_at sentinel — offloaded while suspended; reload is gated
+#: on the policy resuming the request, not on a timer.
+WAIT_FOR_RESUME = -2
 
 
 @dataclass
@@ -65,19 +80,51 @@ class Request:
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    @property
+    def feed_tokens(self) -> List[int]:
+        """Every token whose KV must be materialized before the next decode
+        step: the prompt plus all generated tokens but the last (which is
+        fed BY the next decode step).  This is also the replay sequence
+        that rebuilds a slot cache after suspension moved the request out
+        of its batch row."""
+        if self.generated:
+            return self.prompt + self.generated[:-1]
+        return self.prompt
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < len(self.feed_tokens)
+
 
 @dataclass
 class EngineConfig:
     n_slots: int = 4
     max_seq: int = 128
     hbm_capacity_bytes: float = 1e6  # KV pool budget (simulated pressure)
-    scheduler: Optional[MursConfig] = None  # None → FAIR baseline
+    #: scheduling policy instance; None → resolved from ``scheduler``
+    policy: Optional[SchedulingPolicy] = None
+    #: legacy spelling: a MursConfig → MursPolicy, None → FairPolicy
+    scheduler: Optional[MursConfig] = None
+    #: engine ticks per unit of the policy's ``period`` — the seasonal
+    #: pass runs every ``round(policy.period * murs_period_ticks)`` ticks
     murs_period_ticks: int = 1
     greedy: bool = True
+    #: prefill token budget per engine tick — prompts longer than this are
+    #: split into chunks interleaved with decode ticks (continuous batching)
+    prefill_chunk_tokens: int = 64
     #: host-DRAM offload ("spill") instead of hard failure when the pool
     #: overcommits; reloading costs this many ticks per offloaded request
     offload_enabled: bool = True
     offload_reload_ticks: int = 8
+
+    def resolve_policy(self) -> SchedulingPolicy:
+        if self.policy is not None and self.scheduler is not None:
+            raise ValueError("pass either policy= or scheduler=, not both")
+        if self.policy is not None:
+            return self.policy
+        if self.scheduler is not None:
+            return MursPolicy(self.scheduler)
+        return FairPolicy()
 
 
 class ServingEngine:
@@ -87,17 +134,23 @@ class ServingEngine:
         self.ecfg = ecfg
         self.pool = MemoryPool(capacity=ecfg.hbm_capacity_bytes)
         self.kv = PagedKVManager(capacity_bytes=ecfg.hbm_capacity_bytes)
-        self.murs = (
-            MursScheduler(ecfg.scheduler) if ecfg.scheduler is not None else None
-        )
+        self.policy: SchedulingPolicy = ecfg.resolve_policy()
         self.sampler = Sampler()
         self.tick = 0
         self.queue: List[Request] = []
-        self.requests: Dict[str, Request] = {}
+        self._restore: List[str] = []  # resumed/reloaded, waiting for a slot
+        self.requests: Dict[str, Request] = {}  # full history (lookup/report)
+        #: not-yet-terminal requests — every per-tick scan walks this, so
+        #: tick cost is bounded by the in-flight set, not request history
+        self._live: Dict[str, Request] = {}
         self.failed: List[str] = []
         self.completed: List[str] = []
         self.suspensions = 0
         self.peak_used_fraction = 0.0
+        self.chunked_prefill_ticks = 0
+        self.reactive_offloads = 0  # forced spill of RUNNING work (stock path)
+        self.swap_outs = 0  # suspended-KV swapped to host to free pages
+        self.stall_ticks = 0  # request-ticks lost to non-resident KV
 
         # slot-batched decode state.  Cache layout quirk: "unit" leaves are
         # scan-stacked [reps, batch, ...] (batch on axis 1) while "suffix"
@@ -149,16 +202,25 @@ class ServingEngine:
                 )
             return out
 
-        def _one_slot_decode(params, token, caches, pos):
+        def _one_slot_decode(params, token, caches, pos, active):
             logits, new_caches = decode_step(
                 cfg, params, token[None], _add_batch(caches), pos
             )
-            return logits[0], _strip_batch(new_caches)
+            # inactive slots (mid-chunked-prefill, stalled, suspended-but-
+            # slotted) must not advance: keep their cache bit-for-bit —
+            # an unmasked step would write token-0 KV at position 0 and
+            # advance recurrent (mamba) state unconditionally
+            new_caches = jax.tree_util.tree_map(
+                lambda n, o: jnp.where(active, n, o),
+                _strip_batch(new_caches),
+                caches,
+            )
+            return logits[0], new_caches
 
         self._decode_all = jax.jit(
             jax.vmap(
                 _one_slot_decode,
-                in_axes=(None, 0, _cache_axes(self._caches), 0),
+                in_axes=(None, 0, _cache_axes(self._caches), 0, 0),
                 out_axes=(0, _cache_axes(self._caches)),
             ),
             donate_argnums=(2,),
@@ -169,15 +231,61 @@ class ServingEngine:
             )
         )
 
+        def _chunk_scan(params, tokens, caches, slot, pos0):
+            """Advance ONE slot by ``len(tokens)`` prompt tokens in a
+            single device dispatch (scan over the shared decode_step) —
+            the chunked-prefill continuation path of continuous batching.
+
+            Extracts the slot's cache once (keepdims → batch of 1), scans
+            the chunk through decode_step, writes the slot back, and
+            returns the last token's logits.
+            """
+            take_u = lambda x: jax.lax.dynamic_index_in_dim(x, slot, 1)
+            take_s = lambda x: jax.lax.dynamic_index_in_dim(x, slot, 0)
+            sub = {
+                "unit": jax.tree_util.tree_map(take_u, caches["unit"]),
+                "suffix": jax.tree_util.tree_map(take_s, caches["suffix"]),
+            }
+            if "cross_kv" in caches:
+                sub["cross_kv"] = jax.tree_util.tree_map(
+                    take_s, caches["cross_kv"]
+                )
+
+            def body(carry, inp):
+                tok, p = inp
+                logits, carry = decode_step(
+                    cfg, params, tok[None, None], carry, p
+                )
+                return carry, logits[0, 0]
+
+            poss = pos0 + jnp.arange(tokens.shape[0], dtype=jnp.int32)
+            new_sub, logits_seq = jax.lax.scan(body, sub, (tokens, poss))
+            put_u = lambda s, o: jax.lax.dynamic_update_index_in_dim(s, o, slot, 1)
+            put_s = lambda s, o: jax.lax.dynamic_update_index_in_dim(s, o, slot, 0)
+            out = {
+                "unit": jax.tree_util.tree_map(
+                    put_u, caches["unit"], new_sub["unit"]
+                ),
+                "suffix": jax.tree_util.tree_map(
+                    put_s, caches["suffix"], new_sub["suffix"]
+                ),
+            }
+            if "cross_kv" in caches:
+                out["cross_kv"] = caches["cross_kv"]  # static during decode
+            return logits_seq[-1], out
+
+        self._chunk_scan = jax.jit(_chunk_scan, donate_argnums=(2,))
+
     # ------------------------------------------------------------- tenants
     def submit(self, req: Request) -> None:
         req.submit_tick = self.tick
         self.queue.append(req)
         self.requests[req.request_id] = req
+        self._live[req.request_id] = req
 
     # ------------------------------------------------------------ accounting
     def _update_pool(self) -> None:
-        for rid, req in self.requests.items():
+        for rid, req in self._live.items():
             if req.state in ("prefill", "decoding", "suspended"):
                 self.pool.set_live(rid, self.kv.request_bytes(rid))
         self.peak_used_fraction = max(
@@ -187,46 +295,105 @@ class ServingEngine:
     def _active(self) -> List[Request]:
         return [
             r
-            for r in self.requests.values()
+            for r in self._live.values()
             if r.state in ("prefill", "decoding")
         ]
 
     # ------------------------------------------------------------ admission
     def _admit(self) -> None:
+        """Admit queued requests while slots and prompt headroom allow.
+
+        A request that does not fit WAITS at the door (stock continuous-
+        batching semantics: block until KV pages free up) — for every
+        policy, so admission order is never a policy branch.  What differs
+        is how fast headroom appears: a suspending policy swaps frozen KV
+        to host and frees pages; a pressure-oblivious one waits for
+        completions or pays the reactive spill path.
+        """
         free_slots = [i for i, r in enumerate(self._slot_req) if r is None]
-        while self.queue and free_slots:
-            req = self.queue[0]
-            new_bytes = (
-                self.kv._page_bytes.get(req.request_id)
-                or 0.0
-            )
-            # capacity check: would this request's prompt fit right now?
-            self.kv.register(req.request_id, self.cfg)
-            prompt_bytes = self.kv.grow_to(req.request_id, len(req.prompt))
-            if (
-                self.pool.used_bytes + prompt_bytes
-                > self.pool.capacity
-            ):
-                # no headroom: FAIR fails the request (OOM semantics);
-                # MURS leaves it queued (admission control)
-                self.kv.release(req.request_id)
-                if self.murs is None:
-                    self.queue.pop(0)
-                    req.state = "failed"
-                    req.finish_tick = self.tick
-                    self.failed.append(req.request_id)
-                    continue
-                break
-            self.queue.pop(0)
+        # resumed / reloaded requests re-acquire a batch row first — their
+        # slot cache is rebuilt by replaying feed_tokens through the
+        # chunked-prefill path (their page-pool accounting never moved)
+        while self._restore and free_slots:
+            req = self.requests[self._restore.pop(0)]
+            if req.state == "offloaded":
+                self.kv.register(req.request_id, self.cfg)
             slot = free_slots.pop(0)
             req.slot = slot
             self._slot_req[slot] = req.request_id
-            self._run_prefill(req)
+            req.state = "prefill"
+            req.pos = 0
+            # replay rewinds processed-token counts: restart the rate
+            # estimator so the sampler never sees progress go backwards
+            # (a stale window would report rate 0 and invert MURS's
+            # keep-the-lightest victim ordering)
+            self.sampler.forget(req.request_id)
+        # a tenant with suspended requests is a known heavy-pressure source:
+        # don't admit more of its traffic until its queue drains (the sim's
+        # launch gating, §I: "the resources are released from running heavy
+        # tasks" — and handed to the light tenants)
+        gated = {
+            self.requests[tid].tenant
+            for tid in self.policy.suspended_queue
+            if tid in self.requests
+        }
+        headroom = self.policy.admission_headroom * self.pool.capacity
+        # the policy's placement hook decides which tenant's head-of-line
+        # request each free slot goes to (FAIR/MURS: round-robin across
+        # tenants, PriorityPolicy: weighted stride) — FIFO within a tenant
+        by_tenant: Dict[str, List[Request]] = {}
+        for r in self.queue:
+            if r.tenant not in gated:
+                by_tenant.setdefault(r.tenant, []).append(r)
+        picks = self.policy.assign(
+            len(free_slots), {t: len(v) for t, v in by_tenant.items()}
+        )
+        for tenant in picks:
+            if not free_slots or not by_tenant.get(tenant):
+                continue
+            req = by_tenant[tenant][0]
+            # capacity check: would this request's prompt fit below the
+            # policy's admission line right now?  Pure arithmetic — no
+            # allocator churn for a request that just waits at the door.
+            prompt_bytes = self.kv.bytes_for(self.cfg, len(req.prompt))
+            if prompt_bytes > headroom:
+                # can never fit, even into an empty pool: fail fast
+                # (OOM semantics) instead of blocking the queue forever
+                self.queue.remove(req)
+                by_tenant[tenant].pop(0)
+                req.state = "failed"
+                req.finish_tick = self.tick
+                self.failed.append(req.request_id)
+                self._live.pop(req.request_id, None)
+                continue
+            # frozen suspended KV pins the pool while slots idle — swap
+            # victims to host while that can actually open the door
+            while (
+                self.pool.used_bytes + prompt_bytes > headroom
+                and self.pool.used_bytes - self._frozen_bytes() + prompt_bytes
+                <= headroom
+            ):
+                if not self._swap_out_frozen():
+                    break
+            if self.pool.used_bytes + prompt_bytes > headroom:
+                break  # pool-bound: nobody else fits this tick either
+            self.queue.remove(req)
+            by_tenant[tenant].pop(0)
+            self.kv.register(req.request_id, self.cfg)
+            self.kv.grow_to(req.request_id, len(req.prompt))
+            slot = free_slots.pop(0)
+            req.slot = slot
+            self._slot_req[slot] = req.request_id
+            req.state = "prefill"
+            req.pos = 0
+            self._update_pool()
 
-    def _run_prefill(self, req: Request) -> None:
-        req.state = "prefill"
-        tokens = jnp.asarray(req.prompt, jnp.int32)[None]
-        logits, caches = self._prefill(self.params, tokens)
+    # -------------------------------------------------------------- prefill
+    def _install_prefill(self, req: Request, tokens: List[int]) -> Any:
+        """Monolithic prefill of ``tokens`` into the request's slot; returns
+        the last-position logits."""
+        arr = jnp.asarray(tokens, jnp.int32)[None]
+        logits, caches = self._prefill(self.params, arr)
         # install the request's cache into its slot (unit leaves carry the
         # scan dim first → slot axis is 1; suffix/cross leaves → axis 0)
         slot = req.slot
@@ -248,28 +415,101 @@ class ServingEngine:
                 caches["cross_kv"],
             )
         self._caches = new
-        req.pos = len(req.prompt)
-        next_tok = int(jnp.argmax(logits[0, -1]))
+        req.pos = len(tokens)
+        return logits[0, -1]
+
+    def _finish_prefill(self, req: Request, last_logits) -> None:
+        if req.generated:
+            # replay after suspension/offload: the cache is rebuilt; the
+            # next decode step feeds generated[-1] — nothing new to sample
+            req.state = "decoding"
+            return
+        next_tok = int(jnp.argmax(last_logits))
         req.generated.append(next_tok)
         req.state = "decoding"
+
+    def _prefill_tick(self) -> None:
+        """Consume up to ``prefill_chunk_tokens`` prompt tokens this tick.
+
+        Short prompts take the monolithic fast path (one fused prefill
+        call, same numerics as before); longer prompts start with one
+        budget-sized monolithic chunk and continue through the single-slot
+        decode path a chunk per tick — decode slots keep ticking in
+        between, which is the whole point of chunked prefill.
+        """
+        budget = self.ecfg.prefill_chunk_tokens
+        chunked = False
+        for rid in list(self._slot_req):
+            if budget <= 0:
+                break
+            if rid is None:
+                continue
+            req = self.requests[rid]
+            if req.state != "prefill":
+                continue
+            if not self.kv.resident(rid):
+                self.stall_ticks += 1  # KV partly in host memory: wait
+                continue
+            feed = req.feed_tokens
+            if req.pos == 0:
+                if len(feed) <= budget:
+                    logits = self._install_prefill(req, feed)
+                    budget -= len(feed)
+                    self._finish_prefill(req, logits)
+                else:
+                    # power-of-two first chunk: a partial leftover budget
+                    # still starts the prompt (no starvation behind short
+                    # traffic) while keeping the compiled shapes bounded
+                    w = 1 << (budget.bit_length() - 1)
+                    self._install_prefill(req, feed[:w])
+                    budget -= w
+                    chunked = True
+            else:
+                take = min(budget, len(feed) - req.pos)
+                budget -= take
+                last = None
+                # power-of-two buckets: O(log chunk) dispatches per tick
+                # and a bounded set of compiled scan widths
+                while take > 0:
+                    w = 1 << (take.bit_length() - 1)
+                    toks = jnp.asarray(feed[req.pos:req.pos + w], jnp.int32)
+                    last, self._caches = self._chunk_scan(
+                        self.params, toks, self._caches, req.slot,
+                        jnp.int32(req.pos),
+                    )
+                    req.pos += w
+                    take -= w
+                chunked = True
+                if not req.prefilling and last is not None:
+                    self._finish_prefill(req, last)
+            self.kv.grow_to(req.request_id, max(req.pos, 1))
+        if chunked:
+            self.chunked_prefill_ticks += 1
         self._update_pool()
 
     # --------------------------------------------------------------- decode
     def _decode_tick(self) -> None:
-        active = [
-            (i, self.requests[rid])
-            for i, rid in enumerate(self._slot_req)
-            if rid is not None and self.requests[rid].state == "decoding"
-        ]
+        active = []
+        for i, rid in enumerate(self._slot_req):
+            if rid is None or self.requests[rid].state != "decoding":
+                continue
+            if not self.kv.resident(rid):
+                # tokens on overflow pages live in host DRAM — attention
+                # cannot read them; the request stalls until reclaim()
+                self.stall_ticks += 1
+                continue
+            active.append((i, self.requests[rid]))
         if not active:
             return
         tokens = jnp.zeros((self.ecfg.n_slots, 1), jnp.int32)
         poss = jnp.zeros((self.ecfg.n_slots,), jnp.int32)
+        mask = jnp.zeros((self.ecfg.n_slots,), jnp.bool_)
         for i, req in active:
             tokens = tokens.at[i, 0].set(req.generated[-1])
             poss = poss.at[i].set(req.pos)
+            mask = mask.at[i].set(True)
         logits, self._caches = self._decode_all(
-            self.params, tokens, self._caches, poss
+            self.params, tokens, self._caches, poss, mask
         )
         for i, req in active:
             req.pos += 1
@@ -284,18 +524,17 @@ class ServingEngine:
         req.state = "done"
         req.finish_tick = self.tick
         self.completed.append(req.request_id)
-        self._slot_req[req.slot] = None
+        self._live.pop(req.request_id, None)
+        self._release_slot(req)
         self.pool.release_owner(req.request_id)
         self.kv.release(req.request_id)
         self.sampler.forget(req.request_id)
-        if self.murs is not None:
-            rid = self.murs.on_task_complete()
-            if rid is not None:
-                self._resume(rid)
+        rid = self.policy.on_task_complete(req.request_id)
+        if rid is not None:
+            self._resume(rid)
 
-    # ----------------------------------------------------------------- MURS
-    def _murs_pass(self) -> None:
-        assert self.murs is not None
+    # ----------------------------------------------------------------- policy
+    def _policy_pass(self) -> None:
         active = self._active()
         for r in active:
             self.sampler.observe(
@@ -303,6 +542,7 @@ class ServingEngine:
                 processed_bytes=float(r.pos),
                 total_bytes=float(r.total_tokens),
                 live_bytes=self.kv.request_bytes(r.request_id),
+                group=r.tenant,
             )
         stats = self.sampler.stats([r.request_id for r in active])
         # expose the online §III classification on each request
@@ -311,69 +551,154 @@ class ServingEngine:
         frozen = self.sampler.stats(
             [
                 r.request_id
-                for r in self.requests.values()
+                for r in self._live.values()
                 if r.state == "suspended"
             ]
         )
-        decision = self.murs.propose(
+        decision = self.policy.propose(
             self.pool, stats, now=float(self.tick), suspended=frozen
         )
         for rid in decision.suspend:
             req = self.requests[rid]
-            if req.state == "decoding":
+            if req.state in ("decoding", "prefill"):
                 req.state = "suspended"
                 self.suspensions += 1
+                self._release_slot(req)
         for rid in decision.resume:
             self._resume(rid)
 
+    def _release_slot(self, req: Request) -> None:
+        """Free the request's batch row (its KV pages stay accounted) — in
+        a paged runtime batch rows are virtual, so a suspended request must
+        not block admission of new work."""
+        if req.slot >= 0:
+            self._slot_req[req.slot] = None
+            req.slot = -1
+
     def _resume(self, rid: str) -> None:
         req = self.requests.get(rid)
-        if req is not None and req.state == "suspended":
-            req.state = "decoding"
+        if req is None:
+            return
+        if req.state == "suspended":
+            # re-acquire a batch row; the slot cache is rebuilt by replay
+            if rid not in self._restore:
+                self._restore.append(rid)
+        elif req.state == "offloaded" and req.reload_at == WAIT_FOR_RESUME:
+            # swapped out while suspended: start the PCIe reload now
+            req.reload_at = self.tick + self.ecfg.offload_reload_ticks
 
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
         self._admit()
+        self._prefill_tick()
         self._decode_tick()
-        if self.murs is not None and self.tick % self.ecfg.murs_period_ticks == 0:
-            self._murs_pass()
-        # pool overcommitted → the stock path: OFFLOAD the fattest request's
-        # pages to host DRAM (the TPU "spill", paper Table III) when enabled,
-        # else evict/fail.  MURS's suspension keeps usage below this line —
-        # "avoiding the spill" (§VI-E) — but the guard applies to both.
-        if self.murs is None and self.pool.used_fraction > 1.0:
-            victim = max(
-                self._active(), key=lambda r: self.kv.request_bytes(r.request_id),
-                default=None,
-            )
-            if victim is not None:
-                if self.ecfg.offload_enabled and victim.state == "decoding":
-                    self.kv.offload(victim.request_id)
-                    self.pool.release_owner(victim.request_id)
-                    victim.state = "offloaded"
-                    victim.offloads += 1
-                    victim.reload_at = self.tick + self.ecfg.offload_reload_ticks
-                else:
-                    victim.state = "failed"
-                    victim.finish_tick = self.tick
-                    self.failed.append(victim.request_id)
-                    self._slot_req[victim.slot] = None
-                    self.pool.release_owner(victim.request_id)
-                    self.kv.release(victim.request_id)
-        # offloaded requests finish their PCIe reload and re-register
-        for r in self.requests.values():
-            if r.state == "offloaded" and self.tick >= r.reload_at:
-                self.kv.register(r.request_id, self.cfg)
-                self.kv.grow_to(r.request_id, r.pos)
-                r.state = "decoding"
-                self._update_pool()
+        period_ticks = max(
+            round(self.policy.period * self.ecfg.murs_period_ticks), 1
+        )
+        if self.tick % period_ticks == 0:
+            self._policy_pass()
+        self._resolve_overcommit()
+        # offloaded requests finish their PCIe reload and queue for a batch
+        # row.  reload_at == WAIT_FOR_RESUME means the request was swapped
+        # out while suspended: it reloads only once the policy resumes it.
+        for r in self._live.values():
+            if (
+                r.state == "offloaded"
+                and r.reload_at != WAIT_FOR_RESUME
+                and self.tick >= r.reload_at
+                and r.request_id not in self._restore
+            ):
+                self._restore.append(r.request_id)
+        self.kv.reclaim()
         self.tick += 1
+
+    def _frozen_bytes(self) -> float:
+        """Pool bytes held by swappable (suspended, not restoring) KV."""
+        return sum(
+            self.kv.request_bytes(r.request_id)
+            for r in self._live.values()
+            if r.state == "suspended" and r.request_id not in self._restore
+        )
+
+    def _swap_out_frozen(self) -> bool:
+        """Swap the fattest SUSPENDED request's frozen KV to host DRAM.
+
+        It is not being decoded, so moving it stalls nobody; it reloads
+        when the policy resumes it.  Returns False when nothing is
+        swappable (no suspended request holding pages).
+        """
+        suspended = [
+            r
+            for r in self._live.values()
+            if r.state == "suspended"
+            and r.request_id not in self._restore
+            and self.kv.request_bytes(r.request_id) > 0.0
+        ]
+        if not suspended:
+            return False
+        victim = max(
+            suspended, key=lambda r: self.kv.request_bytes(r.request_id)
+        )
+        self.kv.offload(victim.request_id)
+        self.pool.release_owner(victim.request_id)
+        victim.state = "offloaded"
+        victim.offloads += 1
+        victim.reload_at = WAIT_FOR_RESUME
+        self.swap_outs += 1
+        self.kv.reclaim()
+        return True
+
+    def _resolve_overcommit(self) -> None:
+        """Restore HBM residency when the page pool is overcommitted.
+
+        One path for every policy (no scheduler branches):
+
+          1. swap out a SUSPENDED request's frozen KV first — it is not
+             being decoded, so moving it to host DRAM stalls nobody; it
+             reloads when the policy resumes it.  A proactive policy that
+             suspends under pressure therefore sheds overcommit without
+             ever interrupting running work.
+          2. otherwise the stock spill: offload (or, with offload disabled,
+             fail) the fattest ACTIVE request — the paper's Table III
+             reactive path, which is all a pressure-oblivious policy has.
+        """
+        if not (self.kv.overflow_pages > 0 or self.pool.used_fraction > 1.0):
+            return
+        if self._swap_out_frozen():
+            return
+        victim = max(
+            self._active(), key=lambda r: self.kv.request_bytes(r.request_id),
+            default=None,
+        )
+        if victim is None:
+            return
+        if self.ecfg.offload_enabled and victim.state in ("decoding", "prefill"):
+            # mid-prefill victims are offloadable too (chunked prefill keeps
+            # requests in "prefill" across ticks): reload replays the prompt
+            self.kv.offload(victim.request_id)
+            self.pool.release_owner(victim.request_id)
+            victim.state = "offloaded"
+            victim.offloads += 1
+            victim.reload_at = self.tick + self.ecfg.offload_reload_ticks
+            self.reactive_offloads += 1
+            self._release_slot(victim)
+        else:
+            victim.state = "failed"
+            victim.finish_tick = self.tick
+            self.failed.append(victim.request_id)
+            self._live.pop(victim.request_id, None)
+            self.pool.release_owner(victim.request_id)
+            self.kv.release(victim.request_id)
+            self.sampler.forget(victim.request_id)
+            self.policy.drop(victim.request_id)
+            self._release_slot(victim)
+        self.kv.reclaim()
 
     def run(self, max_ticks: int = 1000) -> Dict[str, Any]:
         while self.tick < max_ticks:
             pending = self.queue or any(
                 r.state in ("prefill", "decoding", "suspended", "offloaded")
-                for r in self.requests.values()
+                for r in self._live.values()
             )
             if not pending:
                 break
@@ -384,13 +709,19 @@ class ServingEngine:
             if r.state == "done"
         ]
         return {
+            "policy": self.policy.name,
             "completed": len(self.completed),
             "failed": len(self.failed),
             "suspensions": self.suspensions,
             "peak_used_fraction": self.peak_used_fraction,
-            "offload_events": self.kv.offload_events,
+            "offload_events": self.reactive_offloads,
+            "swap_events": self.swap_outs,
+            "host_transfers": self.kv.offload_events,
+            "stall_ticks": self.stall_ticks,
             "mean_latency_ticks": sum(lat) / len(lat) if lat else None,
+            "latency_ticks": sorted(lat),
             "ticks": self.tick,
+            "chunked_prefill_ticks": self.chunked_prefill_ticks,
             "tokens_generated": sum(
                 len(r.generated) for r in self.requests.values()
             ),

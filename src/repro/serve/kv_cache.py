@@ -1,10 +1,19 @@
-"""Paged KV-cache manager: page-granular HBM accounting per request.
+"""Paged KV-cache manager: page-granular HBM block allocation per request.
 
 The serving engine's memory substrate.  Pages are fixed-size token spans
-(``page_tokens``); a request holds ⌈len/page_tokens⌉ pages per layer-group.
+(``page_tokens``); a request holds ⌈len/page_tokens⌉ pages per layer-group,
+drawn from a shared fixed-size HBM pool by :class:`PageBlockAllocator` —
+a free list plus a per-request PAGE TABLE.  The same tables feed the Pallas
+``paged_decode`` kernel (:mod:`repro.kernels.paged_decode`): the scheduler's
+byte accounting and the attention kernel's indirection consume one memory
+model, instead of bytes-only bookkeeping on one side and dense caches on
+the other.
+
 The manager tracks the byte-exact HBM footprint of every request — this is
 what the MURS sampler reads as the request's *live* bytes, and what decides
-spill-to-host (offload) and OOM.
+spill-to-host (offload) and OOM.  Pages past pool capacity are OVERFLOW
+pages (ids ≥ ``n_pages``): the pool is overcommitted, ``used_fraction``
+exceeds 1.0, and the runtime's reactive path (offload / fail) fires.
 
 Byte model per architecture (the MURS memory-usage classification of
 DESIGN.md §4 falls out of these):
@@ -18,9 +27,18 @@ DESIGN.md §4 falls out of these):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from repro.configs.base import ArchConfig
+
+__all__ = [
+    "PageBlockAllocator",
+    "PagedKVManager",
+    "constant_state_bytes",
+    "kv_bytes_per_token",
+]
 
 
 def _block_counts(cfg: ArchConfig) -> Dict[str, int]:
@@ -64,53 +82,230 @@ def constant_state_bytes(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
     return total
 
 
+class PageBlockAllocator:
+    """Fixed-size HBM page pool: free list + per-owner page tables.
+
+    ``n_pages`` physical pages exist; allocation pops the free list (lowest
+    id first on a fresh pool, then LIFO reuse for locality).  When the free
+    list is empty, allocation hands out OVERFLOW page ids (≥ ``n_pages``) —
+    the pool is overcommitted; callers detect this via
+    :attr:`overflow_pages` / byte accounting and react (offload, fail,
+    or — under a proactive policy — never get here).
+    """
+
+    def __init__(self, n_pages: int) -> None:
+        if n_pages < 0:
+            raise ValueError(f"n_pages must be >= 0, got {n_pages}")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, -1, -1))
+        self._free_overflow: List[int] = []  # recycled overflow ids
+        self._tables: Dict[str, List[int]] = {}
+        self._next_overflow = n_pages
+        self.overflow_pages = 0  # overflow pages currently held
+
+    # ------------------------------------------------------------- queries
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def pages_in_use(self) -> int:
+        return sum(len(t) for t in self._tables.values())
+
+    @property
+    def page_id_bound(self) -> int:
+        """Exclusive upper bound on every page id ever handed out — size
+        pool-indexed arrays (k/v pools) with this, not
+        ``n_pages + overflow_pages`` (overflow ids are recycled, but the
+        high-water mark can exceed the current count)."""
+        return self._next_overflow
+
+    def table(self, owner: str) -> Tuple[int, ...]:
+        return tuple(self._tables.get(owner, ()))
+
+    def pages_held(self, owner: str) -> int:
+        return len(self._tables.get(owner, ()))
+
+    def table_array(
+        self, owners: Sequence[str], max_pages: Optional[int] = None
+    ) -> np.ndarray:
+        """Kernel-ready page tables: int32 ``[len(owners), max_pages]``.
+
+        Rows are padded with page 0 — the paged_decode kernel masks tokens
+        past ``seq_lens``, so padding entries cost a wasted DMA, never a
+        wrong value.
+        """
+        tables = [self._tables.get(o, []) for o in owners]
+        width = max_pages or max((len(t) for t in tables), default=1) or 1
+        out = np.zeros((len(owners), width), np.int32)
+        for i, t in enumerate(tables):
+            if len(t) > width:
+                raise ValueError(
+                    f"owner {owners[i]!r} holds {len(t)} pages > max_pages={width}"
+                )
+            out[i, : len(t)] = t
+        return out
+
+    # ---------------------------------------------------------- allocation
+    def grow_to(self, owner: str, n_pages_needed: int) -> int:
+        """Extend ``owner``'s table to ``n_pages_needed``; returns #new pages."""
+        table = self._tables.setdefault(owner, [])
+        new = n_pages_needed - len(table)
+        if new <= 0:
+            return 0
+        for _ in range(new):
+            if self._free:
+                table.append(self._free.pop())
+            elif self._free_overflow:
+                table.append(self._free_overflow.pop())
+                self.overflow_pages += 1
+            else:
+                table.append(self._next_overflow)
+                self._next_overflow += 1
+                self.overflow_pages += 1
+        return new
+
+    def free(self, owner: str) -> int:
+        """Release every page ``owner`` holds; returns the page count."""
+        table = self._tables.pop(owner, [])
+        for pid in table:
+            if pid < self.n_pages:
+                self._free.append(pid)
+            else:
+                self._free_overflow.append(pid)
+                self.overflow_pages -= 1
+        return len(table)
+
+    # ------------------------------------------------------------ residency
+    def resident(self, owner: str) -> bool:
+        """True iff every page of ``owner`` is a physical HBM page.
+
+        A request holding overflow pages cannot be decoded — those tokens
+        live in host memory, not HBM — until :meth:`reclaim` pages them
+        back in after something else frees physical pages.
+        """
+        return all(pid < self.n_pages for pid in self._tables.get(owner, ()))
+
+    def reclaim(self) -> int:
+        """Page overflow entries back into freed physical pages (the DMA
+        that resolves overcommit); returns the number of pages moved."""
+        moved = 0
+        for table in self._tables.values():
+            for i, pid in enumerate(table):
+                if pid >= self.n_pages and self._free:
+                    self._free_overflow.append(pid)
+                    table[i] = self._free.pop()
+                    self.overflow_pages -= 1
+                    moved += 1
+        return moved
+
+
 @dataclass
 class PagedKVManager:
-    """Page-pool accounting for a shared HBM region."""
+    """Byte accounting + page-table allocation for a shared HBM region.
+
+    The page pool is sized lazily on the first :meth:`register` (the page
+    byte size depends on the architecture): ``n_pages = ⌊capacity /
+    page_bytes⌋``.  Architectures with zero marginal KV bytes (mamba:
+    constant state) hold no pages at all.
+    """
 
     capacity_bytes: float
     page_tokens: int = 16
-    _pages: Dict[str, int] = field(default_factory=dict)  # request → pages
     _page_bytes: Dict[str, float] = field(default_factory=dict)
     _state_bytes: Dict[str, float] = field(default_factory=dict)
+    _alloc: Optional[PageBlockAllocator] = None
     offloaded_bytes: float = 0.0
     offload_events: int = 0
 
     # ------------------------------------------------------------ requests
     def register(self, request_id: str, cfg: ArchConfig) -> None:
-        self._pages[request_id] = 0
-        self._page_bytes[request_id] = (
-            kv_bytes_per_token(cfg) * self.page_tokens
-        )
+        page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
+        self._page_bytes[request_id] = page_bytes
         self._state_bytes[request_id] = constant_state_bytes(cfg)
+        if self._alloc is None and page_bytes > 0:
+            self._alloc = PageBlockAllocator(
+                int(self.capacity_bytes // page_bytes)
+            )
+        if self._alloc is not None and page_bytes > 0:
+            self._alloc.grow_to(request_id, 0)  # materialize an empty table
 
     def grow_to(self, request_id: str, n_tokens: int) -> float:
         """Ensure pages cover ``n_tokens``; returns newly allocated bytes."""
-        need = (n_tokens + self.page_tokens - 1) // self.page_tokens
-        have = self._pages.get(request_id, 0)
-        if need <= have:
+        page_bytes = self._page_bytes.get(request_id, 0.0)
+        if page_bytes <= 0.0 or self._alloc is None:
             return 0.0
-        self._pages[request_id] = need
-        return (need - have) * self._page_bytes[request_id]
+        need = (n_tokens + self.page_tokens - 1) // self.page_tokens
+        return self._alloc.grow_to(request_id, need) * page_bytes
+
+    def bytes_for(self, cfg: ArchConfig, n_tokens: int) -> float:
+        """Page-rounded HBM bytes ``n_tokens`` would occupy — an
+        arithmetic admission probe that allocates nothing."""
+        pages = (n_tokens + self.page_tokens - 1) // self.page_tokens
+        return pages * kv_bytes_per_token(cfg) * self.page_tokens
 
     def release(self, request_id: str) -> float:
-        pages = self._pages.pop(request_id, 0)
+        pages = self._alloc.free(request_id) if self._alloc is not None else 0
         pb = self._page_bytes.pop(request_id, 0.0)
         sb = self._state_bytes.pop(request_id, 0.0)
         return pages * pb + sb
 
+    # ------------------------------------------------------------- queries
+    def page_table(self, request_id: str) -> Tuple[int, ...]:
+        """The request's page table — the paged_decode kernel's indirection."""
+        if self._alloc is None:
+            return ()
+        return self._alloc.table(request_id)
+
+    def table_array(
+        self, request_ids: Sequence[str], max_pages: Optional[int] = None
+    ) -> np.ndarray:
+        """Kernel-ready ``[B, max_pages]`` int32 page tables (padded)."""
+        if self._alloc is None:
+            return np.zeros((len(request_ids), max_pages or 1), np.int32)
+        return self._alloc.table_array(request_ids, max_pages)
+
+    def request_pages(self, request_id: str) -> int:
+        return self._alloc.pages_held(request_id) if self._alloc else 0
+
+    def resident(self, request_id: str) -> bool:
+        """True iff the request's KV is fully HBM-resident (decodable)."""
+        return self._alloc.resident(request_id) if self._alloc else True
+
+    def reclaim(self) -> int:
+        """Page overflow entries back in; returns pages moved."""
+        return self._alloc.reclaim() if self._alloc is not None else 0
+
     def request_bytes(self, request_id: str) -> float:
         return (
-            self._pages.get(request_id, 0)
+            self.request_pages(request_id)
             * self._page_bytes.get(request_id, 0.0)
             + self._state_bytes.get(request_id, 0.0)
         )
 
     @property
+    def n_pages(self) -> int:
+        """Physical pages in the pool (0 until the first register sizes it)."""
+        return self._alloc.n_pages if self._alloc is not None else 0
+
+    @property
+    def free_pages(self) -> int:
+        return self._alloc.free_pages if self._alloc is not None else 0
+
+    @property
+    def overflow_pages(self) -> int:
+        return self._alloc.overflow_pages if self._alloc is not None else 0
+
+    @property
+    def page_id_bound(self) -> int:
+        """Exclusive upper bound on every page id ever handed out."""
+        return self._alloc.page_id_bound if self._alloc is not None else 0
+
+    @property
     def used_bytes(self) -> float:
         return sum(
-            self._pages[r] * self._page_bytes[r] + self._state_bytes[r]
-            for r in self._pages
+            self.request_pages(r) * self._page_bytes[r] + self._state_bytes[r]
+            for r in self._page_bytes
         )
 
     @property

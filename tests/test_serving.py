@@ -9,6 +9,7 @@ from repro.core.scheduler import MursConfig
 from repro.models import init_model
 from repro.serve import EngineConfig, Request, ServingEngine
 from repro.serve.kv_cache import (
+    PageBlockAllocator,
     PagedKVManager,
     constant_state_bytes,
     kv_bytes_per_token,
@@ -49,9 +50,108 @@ class TestKVManager:
         grew = mgr.grow_to("r1", 17)  # needs 2 pages
         assert grew == pytest.approx(2 * 16 * kv_bytes_per_token(cfg))
         assert mgr.grow_to("r1", 20) == 0.0  # still within 2 pages
+        assert mgr.page_table("r1") == (0, 1)
         freed = mgr.release("r1")
         assert freed >= grew
         assert mgr.used_bytes == 0.0
+        assert mgr.free_pages == mgr.n_pages
+
+
+class TestPageBlockAllocator:
+    def test_free_list_alloc_and_reuse(self):
+        a = PageBlockAllocator(n_pages=4)
+        assert a.grow_to("r1", 2) == 2
+        assert a.table("r1") == (0, 1)
+        assert a.grow_to("r2", 2) == 2
+        assert a.table("r2") == (2, 3)
+        assert a.free_pages == 0
+        a.free("r1")
+        assert a.free_pages == 2
+        # LIFO reuse: the most recently freed pages come back first
+        a.grow_to("r3", 1)
+        assert a.table("r3")[0] in (0, 1)
+
+    def test_overflow_pages_and_residency(self):
+        a = PageBlockAllocator(n_pages=2)
+        a.grow_to("r1", 2)
+        assert a.resident("r1")
+        a.grow_to("r2", 2)  # pool exhausted → overflow ids
+        assert not a.resident("r2")
+        assert a.overflow_pages == 2
+        assert all(pid >= a.n_pages for pid in a.table("r2"))
+
+    def test_reclaim_pages_overflow_back_in(self):
+        a = PageBlockAllocator(n_pages=2)
+        a.grow_to("r1", 2)
+        a.grow_to("r2", 2)
+        a.free("r1")
+        moved = a.reclaim()
+        assert moved == 2
+        assert a.resident("r2")
+        assert a.overflow_pages == 0
+        assert all(pid < a.n_pages for pid in a.table("r2"))
+
+    def test_table_array_pads_and_bounds(self):
+        import numpy as np
+
+        a = PageBlockAllocator(n_pages=8)
+        a.grow_to("r1", 3)
+        a.grow_to("r2", 1)
+        arr = a.table_array(["r1", "r2"], max_pages=4)
+        assert arr.shape == (2, 4) and arr.dtype == np.int32
+        assert list(arr[0][:3]) == list(a.table("r1"))
+        with pytest.raises(ValueError):
+            a.table_array(["r1"], max_pages=2)
+
+
+class TestChunkedPrefill:
+    def test_chunked_matches_monolithic_greedy(self, small_model):
+        """A long prompt split into chunks must generate the same greedy
+        tokens as a monolithic prefill, and a co-resident short request
+        must keep decoding while the long prompt chunks through."""
+        cfg, params = small_model
+        prompt = list(range(5, 25))  # 20 tokens
+        outs = {}
+        for name, chunk in (("mono", 1000), ("chunk", 6)):
+            eng = ServingEngine(
+                cfg, params,
+                EngineConfig(n_slots=2, max_seq=64, hbm_capacity_bytes=1e12,
+                             prefill_chunk_tokens=chunk),
+            )
+            # short FIRST: it finishes its prefill in tick 0 and then
+            # decodes on every tick the long prompt is still chunking —
+            # the decode batch genuinely overlaps an in-flight prefill
+            eng.submit(Request("short", "U", list(range(3, 7)), 8))
+            eng.submit(Request("long", "T", prompt, 8))
+            out = eng.run(max_ticks=100)
+            outs[name] = (
+                eng.requests["long"].generated,
+                eng.requests["short"].generated,
+                out["chunked_prefill_ticks"],
+                eng.requests["short"].finish_tick
+                < eng.requests["long"].finish_tick,
+            )
+        assert outs["mono"][0] == outs["chunk"][0]
+        assert outs["mono"][1] == outs["chunk"][1]
+        assert outs["chunk"][2] > 0 and outs["mono"][2] == 0
+        assert outs["chunk"][3], "short request must finish during/ahead"
+
+
+class TestAdmissionLiveness:
+    def test_impossible_prompt_fails_fast(self, small_model):
+        """A prompt that can never fit the pool must fail at admission
+        (OOM semantics) instead of head-of-line blocking the queue."""
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 32  # 2-page pool
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(n_slots=2, max_seq=64, hbm_capacity_bytes=cap),
+        )
+        eng.submit(Request("huge", "T", list(range(60)), 4))  # 4 pages > pool
+        eng.submit(Request("ok", "U", list(range(4)), 4))
+        eng.run(max_ticks=200)
+        assert eng.requests["huge"].state == "failed"
+        assert eng.requests["ok"].state == "done"
 
 
 class TestEngineUnderPressure:
