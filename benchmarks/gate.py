@@ -1,0 +1,163 @@
+"""Benchmark regression gate: compare BENCH_serve.json against a baseline.
+
+CI's ``benchmark-gate`` job feeds this the record the benchmark-smoke job
+just produced (same-workflow artifact) and the committed
+``BENCH_baseline.json``; the PR fails on a >15% regression of any gated
+metric and the full delta table lands in the job summary
+(``$GITHUB_STEP_SUMMARY``) either way.
+
+Gated metrics, per engine policy (fair / murs / priority):
+
+    p50_ticks_to_finish            lower is better
+    p99_ticks_to_finish            lower is better
+    throughput_tokens_per_tick     higher is better
+
+plus the prefix-cache acceptance bits (hit rate positive, shared peak
+below the no-sharing baseline) as hard pass/fail rows — those are
+correctness claims of the artifact, not noisy timings, so they gate at
+any regression.
+
+A policy that completed nothing reports ``None`` percentiles; ``None``
+where the baseline had a number is a hard failure (the policy stopped
+serving), and a missing baseline file passes with a notice (first run).
+
+Usage:
+    python benchmarks/gate.py [--current BENCH_serve.json]
+                              [--baseline BENCH_baseline.json]
+                              [--threshold 15] [--summary PATH]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+#: (metric key, direction) — direction is which way REGRESSION points
+GATED = [
+    ("p50_ticks_to_finish", "lower_is_better"),
+    ("p99_ticks_to_finish", "lower_is_better"),
+    ("throughput_tokens_per_tick", "higher_is_better"),
+]
+
+
+def _delta_pct(base: float, cur: float) -> float:
+    if base == 0:
+        return 0.0 if cur == 0 else float("inf")
+    return 100.0 * (cur - base) / base
+
+
+def compare(baseline: dict, current: dict, threshold_pct: float):
+    """Returns (rows, failures): one row per policy×metric, failures as
+    human-readable strings."""
+    rows, failures = [], []
+    policies = sorted(
+        set(baseline.get("engine", {})) & set(current.get("engine", {}))
+    )
+    for pol in policies:
+        b_row = baseline["engine"][pol]
+        c_row = current["engine"][pol]
+        for metric, direction in GATED:
+            base, cur = b_row.get(metric), c_row.get(metric)
+            if base is None:
+                rows.append((pol, metric, base, cur, None, "no baseline"))
+                continue
+            if cur is None:
+                rows.append((pol, metric, base, cur, None, "FAIL"))
+                failures.append(
+                    f"{pol}.{metric}: baseline {base}, current None "
+                    "(policy completed nothing)"
+                )
+                continue
+            delta = _delta_pct(base, cur)
+            if direction == "lower_is_better":
+                regressed = delta > threshold_pct
+            else:
+                regressed = delta < -threshold_pct
+            status = "FAIL" if regressed else "ok"
+            rows.append((pol, metric, base, cur, delta, status))
+            if regressed:
+                failures.append(
+                    f"{pol}.{metric}: {base} → {cur} "
+                    f"({delta:+.1f}% vs ±{threshold_pct:.0f}% gate)"
+                )
+    # prefix-cache acceptance bits: hard booleans, no threshold
+    wins = current.get("prefix_cache", {}).get("sharing_wins", {})
+    for bit in ("hit_rate_positive", "peak_pool_lower"):
+        if bit in wins:
+            ok = bool(wins[bit])
+            rows.append(
+                ("prefix_cache", bit, True, wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"prefix_cache.{bit} is False")
+    return rows, failures
+
+
+def markdown_table(rows, threshold_pct: float) -> str:
+    lines = [
+        "## Benchmark gate",
+        "",
+        f"Regression threshold: ±{threshold_pct:.0f}% "
+        "(ticks-to-finish lower-is-better, throughput higher-is-better)",
+        "",
+        "| policy | metric | baseline | current | Δ% | status |",
+        "|---|---|---:|---:|---:|---|",
+    ]
+    for pol, metric, base, cur, delta, status in rows:
+        d = "—" if delta is None else f"{delta:+.1f}%"
+        badge = "❌ FAIL" if status == "FAIL" else (
+            "✅ ok" if status == "ok" else status
+        )
+        lines.append(f"| {pol} | {metric} | {base} | {cur} | {d} | {badge} |")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", default="BENCH_serve.json")
+    ap.add_argument("--baseline", default="BENCH_baseline.json")
+    ap.add_argument(
+        "--threshold", type=float, default=15.0,
+        help="regression threshold in percent (default 15)",
+    )
+    ap.add_argument(
+        "--summary",
+        default=os.environ.get("GITHUB_STEP_SUMMARY", ""),
+        help="markdown summary file to append to "
+        "(default: $GITHUB_STEP_SUMMARY when set)",
+    )
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    if not os.path.exists(args.baseline):
+        msg = (
+            f"## Benchmark gate\n\nNo baseline at `{args.baseline}` — "
+            "first run passes; commit the current record as the baseline.\n"
+        )
+        print(msg)
+        if args.summary:
+            with open(args.summary, "a") as f:
+                f.write(msg)
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    rows, failures = compare(baseline, current, args.threshold)
+    table = markdown_table(rows, args.threshold)
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(table)
+    if failures:
+        print("REGRESSIONS:", file=sys.stderr)
+        for fail in failures:
+            print(f"  {fail}", file=sys.stderr)
+        return 1
+    print(f"gate: {len(rows)} comparisons within ±{args.threshold:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

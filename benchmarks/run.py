@@ -7,7 +7,10 @@ bench trajectory is tracked as an artifact, not just console text.
 
 ``--only SUBSTR`` runs the subset of modules whose name contains SUBSTR
 (the CI benchmark-smoke job uses ``--only serve_pressure``); ``--json
-PATH`` overrides the JSON output path.  The roofline table (§Roofline) is
+PATH`` overrides the JSON output path.  If ANY selected benchmark raises,
+the run exits non-zero and the JSON artifact is NOT written — a partial
+record would silently poison the benchmark trajectory and the CI
+regression gate that consumes it.  The roofline table (§Roofline) is
 produced by ``repro.roofline.analysis`` from the dry-run artifacts and is
 summarized here when those artifacts exist.
 """
@@ -67,7 +70,15 @@ def main(argv=None) -> None:
             failures += 1
             print(f"{name},ERROR,", file=sys.stdout)
             traceback.print_exc()
-    if bench_record is not None:
+    if failures:
+        # a partial artifact would poison the benchmark trajectory (and the
+        # CI regression gate): write NOTHING and exit non-zero below
+        print(
+            f"bench.json,SKIPPED,{failures} benchmark(s) raised — "
+            "refusing to write a partial record",
+            file=sys.stderr,
+        )
+    elif bench_record is not None:
         with open(args.json, "w") as f:
             json.dump(bench_record, f, indent=2, sort_keys=True)
         print(f"bench.json,{args.json},machine-readable serving record")

@@ -120,6 +120,18 @@ class MursPolicy(BasePolicy):
         self.admission_headroom = self.config.red
         self._resumed_at: Dict[str, float] = {}
         self._now: float = 0.0
+        #: per-group (tenant/job) memory-usage-rate EMA — the sampler's §III
+        #: rate aggregated per tenant, feeding the cache_pressure hint.
+        #: Entries for groups not observed within ``_group_rate_horizon``
+        #: seasonal periods are pruned: a long-lived service with churning
+        #: tenant ids must not grow this dict without bound, and a departed
+        #: burst tenant's stale maximum must not compress every live
+        #: tenant's pressure score toward uniform.
+        self._group_rate: Dict[str, float] = {}
+        self._group_seen: Dict[str, float] = {}
+        self._group_rate_horizon: float = 50.0 * max(
+            self.period, self.config.resume_immunity
+        )
 
     def _immune(self, task_id: str) -> bool:
         t0 = self._resumed_at.get(task_id)
@@ -152,6 +164,20 @@ class MursPolicy(BasePolicy):
         ]
         for t in expired:
             del self._resumed_at[t]
+        for t in running:
+            if t.group:
+                prev = self._group_rate.get(t.group)
+                self._group_rate[t.group] = (
+                    t.rate if prev is None else 0.8 * prev + 0.2 * t.rate
+                )
+                self._group_seen[t.group] = now
+        for g in [
+            g
+            for g, seen in self._group_seen.items()
+            if (now - seen) > self._group_rate_horizon
+        ]:
+            del self._group_seen[g]
+            del self._group_rate[g]
         usage = pool.live_fraction
 
         if usage < cfg.yellow:
@@ -307,6 +333,25 @@ class MursPolicy(BasePolicy):
         if t.consumption > fair_share:
             return True
         return t.progress > 1e-9 and t.projected_total > fair_share
+
+    # ----------------------------------------------------------- cache hint
+    def cache_pressure(self, group: str) -> float:
+        """Evictability of ``group``'s cold cached prefixes, in [0, 1].
+
+        MURS reads the memory-usage rate the other way around for CACHED
+        data: a LOW-rate tenant's prefix is cheap to regrow (few bytes per
+        token re-prefilled) and shields little future allocation, so it
+        evicts FIRST; a high-rate tenant's cached prefix spares the pool
+        the most growth and is kept longest.  Unseen groups sit in the
+        middle (0.5) so the hint never starves LRU of a tie-break.
+        """
+        rate = self._group_rate.get(group)
+        if rate is None or not self._group_rate:
+            return 0.5
+        top = max(self._group_rate.values())
+        if top <= 0.0:
+            return 0.5
+        return 1.0 - min(rate / top, 1.0)
 
     # ------------------------------------------------------------ resume API
     def on_task_complete(self, task_id: Optional[str] = None) -> Optional[str]:

@@ -96,6 +96,13 @@ class PriorityPolicy(BasePolicy):
             free -= 1
         return picks
 
+    # ----------------------------------------------------------- cache hint
+    def cache_pressure(self, group: str) -> float:
+        """Weight-ordered eviction: a low-weight tenant's cold cached
+        prefixes evict before a high-weight tenant's (1/(1+w) keeps the
+        score in (0, 1) and monotone in weight)."""
+        return 1.0 / (1.0 + self.weight_of(group))
+
     # -------------------------------------------------------------- pressure
     def propose(
         self,

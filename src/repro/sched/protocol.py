@@ -20,6 +20,15 @@ plus one placement hook:
         how free execution slots are offered to tenants/jobs.  FAIR's
         round-robin cursor lives HERE now, not inlined in the executor.
 
+and one cache-eviction hint:
+
+    cache_pressure(group) → evictability score for the group's COLD cached
+        data (the serving engine's prefix-cache pages).  Higher = evict
+        sooner; ties fall back to LRU.  The base default is 0.0 for every
+        group (pure LRU).  MURS returns high pressure for LOW-usage-rate
+        tenants — their prefixes regrow cheaply, while a heavy tenant's
+        cached prefix spares the pool the most future allocation.
+
 Runtimes interrogate declarative attributes instead of branching on the
 policy's type: ``proactive`` (True → the policy prevents overcommit via
 admission control + suspension; False → stock reactive semantics),
@@ -86,6 +95,8 @@ class SchedulingPolicy(Protocol):
 
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]: ...
 
+    def cache_pressure(self, group: str) -> float: ...
+
     @property
     def suspended_queue(self) -> Sequence[str]: ...
 
@@ -142,6 +153,12 @@ class BasePolicy:
 
     def drop(self, task_id: str) -> None:
         self._suspended = [t for t in self._suspended if t != task_id]
+
+    # ------------------------------------------------------------ cache hint
+    def cache_pressure(self, group: str) -> float:
+        """Evictability of ``group``'s cold cached pages: 0.0 for everyone
+        → the cache falls back to pure LRU (the stock baseline)."""
+        return 0.0
 
     # ------------------------------------------------------------- placement
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]:

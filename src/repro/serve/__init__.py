@@ -1,17 +1,21 @@
 from .engine import EngineConfig, Request, ServingEngine
 from .kv_cache import (
+    CACHE_OWNER,
     PageBlockAllocator,
     PagedKVManager,
+    PrefixCache,
     constant_state_bytes,
     kv_bytes_per_token,
 )
 
 __all__ = [
+    "CACHE_OWNER",
     "EngineConfig",
     "Request",
     "ServingEngine",
     "PageBlockAllocator",
     "PagedKVManager",
+    "PrefixCache",
     "constant_state_bytes",
     "kv_bytes_per_token",
 ]

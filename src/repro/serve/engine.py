@@ -32,12 +32,22 @@ tick with per-slot positions; prefill continuation shares the same cache
 layout through a single-slot jitted step.  KV lives in the paged pool of
 :class:`PagedKVManager` — free-list block allocator, per-request page
 tables, the same tables the Pallas ``paged_decode`` kernel consumes.
+
+PREFIX SHARING: admission matches each prompt against the pool's token
+trie (:class:`repro.serve.kv_cache.PrefixCache`).  Matched pages are
+acquired by reference (refcount + 1, zero new bytes) and their KV is
+installed from a snapshot taken when the prefix was first prefetched —
+prefill compute is SKIPPED for cached tokens; chunked prefill starts at
+the first uncached token.  Any later append into a shared page goes
+through copy-on-write, so a shared page is never mutated.  Cold cached
+prefixes evict under pressure in LRU order crossed with the policy's
+``cache_pressure`` hint (MURS: low-usage-rate tenants first).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,7 +57,7 @@ from repro.core.memory_manager import MemoryPool
 from repro.core.sampler import Sampler
 from repro.sched import FairPolicy, MursConfig, MursPolicy, SchedulingPolicy
 from repro.models import decode_step, init_cache, prefill
-from repro.serve.kv_cache import PagedKVManager
+from repro.serve.kv_cache import CACHE_OWNER, PagedKVManager
 
 #: Request.reload_at sentinel — offloaded while suspended; reload is gated
 #: on the policy resuming the request, not on a timer.
@@ -71,6 +81,15 @@ class Request:
     memory_model: str = "constant"
     reload_at: int = -1  # tick when an offloaded request finishes reloading
     offloads: int = 0
+    #: prompt tokens covered by a prefix-cache match (0 = cold)
+    cached_tokens: int = 0
+    #: KV-snapshot key of the matched prefix (the caching prompt's tokens)
+    snap_key: Optional[Tuple[int, ...]] = None
+    first_token_tick: int = -1  # tick the first generated token appeared
+    #: engine hit counters already incremented for this request — a
+    #: suspend/resume replay re-installs the snapshot but must not
+    #: re-count the dedup'd prefill work
+    hit_counted: bool = False
 
     @property
     def total_tokens(self) -> int:
@@ -116,6 +135,16 @@ class EngineConfig:
     #: overcommits; reloading costs this many ticks per offloaded request
     offload_enabled: bool = True
     offload_reload_ticks: int = 8
+    #: prefix-sharing paged KV cache: admission matches prompts against the
+    #: token trie, cached pages are shared by refcount (COW on append) and
+    #: prefill is skipped up to the first uncached token
+    prefix_cache: bool = True
+    #: host-side KV snapshots backing prefill-skip, LRU-bounded so a
+    #: long-lived engine serving many distinct prompts cannot grow host
+    #: memory without bound (each snapshot is one slot's full cache
+    #: subtree).  Beyond the bound, matches on snapshot-less trie nodes
+    #: still dedup pages — they just recompute the prefill (COW-guarded).
+    max_prefix_snapshots: int = 64
 
     def resolve_policy(self) -> SchedulingPolicy:
         if self.policy is not None and self.scheduler is not None:
@@ -133,8 +162,13 @@ class ServingEngine:
         self.params = params
         self.ecfg = ecfg
         self.pool = MemoryPool(capacity=ecfg.hbm_capacity_bytes)
-        self.kv = PagedKVManager(capacity_bytes=ecfg.hbm_capacity_bytes)
+        self.kv = PagedKVManager(
+            capacity_bytes=ecfg.hbm_capacity_bytes,
+            enable_prefix_cache=ecfg.prefix_cache,
+        )
         self.policy: SchedulingPolicy = ecfg.resolve_policy()
+        # eviction order consults the active policy: LRU × cache_pressure
+        self.kv.cache_pressure_fn = self.policy.cache_pressure
         self.sampler = Sampler()
         self.tick = 0
         self.queue: List[Request] = []
@@ -147,10 +181,22 @@ class ServingEngine:
         self.completed: List[str] = []
         self.suspensions = 0
         self.peak_used_fraction = 0.0
+        #: like peak_used_fraction but net of RECLAIMABLE bytes (cold
+        #: cached prefixes are one evict_cache() from free — the page-cache
+        #: notion of available memory); this is the dedup'd live demand
+        self.peak_demand_fraction = 0.0
         self.chunked_prefill_ticks = 0
         self.reactive_offloads = 0  # forced spill of RUNNING work (stock path)
         self.swap_outs = 0  # suspended-KV swapped to host to free pages
         self.stall_ticks = 0  # request-ticks lost to non-resident KV
+        self.prefix_hits = 0  # requests that skipped prefill via the trie
+        self.prefix_hit_tokens = 0  # prompt tokens whose prefill was skipped
+        #: KV snapshots backing cached prefixes: snap_key (the caching
+        #: prompt's token tuple) → (slot cache subtree, first greedy token,
+        #: snapshot length).  Pruned when the trie evicts the last node
+        #: referencing a snapshot.
+        self._snaps: Dict[Tuple[int, ...], Tuple[Any, int, int]] = {}
+        self._pruned_at_evictions = 0
 
         # slot-batched decode state.  Cache layout quirk: "unit" leaves are
         # scan-stacked [reps, batch, ...] (batch on axis 1) while "suffix"
@@ -288,9 +334,18 @@ class ServingEngine:
         for rid, req in self._live.items():
             if req.state in ("prefill", "decoding", "suspended"):
                 self.pool.set_live(rid, self.kv.request_bytes(rid))
+        if self.ecfg.prefix_cache:
+            # cold cached prefixes are live pool bytes too — the policy
+            # must see them (and eviction must relieve them)
+            self.pool.set_live(CACHE_OWNER, self.kv.cache_bytes)
         self.peak_used_fraction = max(
             self.peak_used_fraction, self.pool.used_fraction
         )
+        if self.pool.capacity > 0:
+            demand = (
+                self.pool.used_bytes - self.kv.reclaimable_bytes
+            ) / self.pool.capacity
+            self.peak_demand_fraction = max(self.peak_demand_fraction, demand)
 
     def _active(self) -> List[Request]:
         return [
@@ -318,6 +373,24 @@ class ServingEngine:
             req = self.requests[self._restore.pop(0)]
             if req.state == "offloaded":
                 self.kv.register(req.request_id, self.cfg)
+            if self.ecfg.prefix_cache:
+                # replay can skip prefill too: a reloaded request re-shares
+                # cached pages; a suspended one (pages retained) just reuses
+                # the snapshot for the covered positions.  Neither counts
+                # as a cache HIT — re-matching your own published prefix is
+                # not cross-request sharing (count_stats/hit_counted)
+                if self.kv.request_pages(req.request_id) == 0:
+                    req.cached_tokens, req.snap_key = self.kv.match_prefix(
+                        req.request_id,
+                        req.feed_tokens,
+                        float(self.tick),
+                        count_stats=False,
+                    )
+                else:
+                    req.cached_tokens, req.snap_key = self.kv.peek_prefix(
+                        req.feed_tokens
+                    )
+                req.hit_counted = True
             slot = free_slots.pop(0)
             req.slot = slot
             self._slot_req[slot] = req.request_id
@@ -355,7 +428,11 @@ class ServingEngine:
             # capacity check: would this request's prompt fit below the
             # policy's admission line right now?  Pure arithmetic — no
             # allocator churn for a request that just waits at the door.
-            prompt_bytes = self.kv.bytes_for(self.cfg, len(req.prompt))
+            # Pages a prefix-cache match would share cost nothing new;
+            # ``protected`` shields them from this pass's own evictions.
+            prompt_bytes, protected = self.kv.admission_probe(
+                self.cfg, req.prompt
+            )
             if prompt_bytes > headroom:
                 # can never fit, even into an empty pool: fail fast
                 # (OOM semantics) instead of blocking the queue forever
@@ -366,6 +443,13 @@ class ServingEngine:
                 self.failed.append(req.request_id)
                 self._live.pop(req.request_id, None)
                 continue
+            # cold cached prefixes are the cheapest bytes to shed — drop
+            # them (policy-ordered) before touching anyone's frozen KV,
+            # but never the pages the probe above counted as shareable
+            while self.pool.used_bytes + prompt_bytes > headroom:
+                if not self.kv.evict_cache(1, protect=protected):
+                    break
+                self._update_pool()
             # frozen suspended KV pins the pool while slots idle — swap
             # victims to host while that can actually open the door
             while (
@@ -380,6 +464,13 @@ class ServingEngine:
             self.queue.remove(req)
             by_tenant[tenant].pop(0)
             self.kv.register(req.request_id, self.cfg)
+            if self.ecfg.prefix_cache:
+                # the trie hands over every page of the longest cached
+                # prefix by reference — prefill will start at the first
+                # uncached token
+                req.cached_tokens, req.snap_key = self.kv.match_prefix(
+                    req.request_id, req.feed_tokens, float(self.tick)
+                )
             self.kv.grow_to(req.request_id, len(req.prompt))
             slot = free_slots.pop(0)
             req.slot = slot
@@ -387,6 +478,54 @@ class ServingEngine:
             req.state = "prefill"
             req.pos = 0
             self._update_pool()
+
+    # --------------------------------------------------------- slot caches
+    def _extract_slot(self, slot: int) -> Dict[str, Any]:
+        """Copy one slot's cache subtree (the KV snapshot a cached prefix
+        is installed from)."""
+        sub = {
+            "unit": jax.tree_util.tree_map(
+                lambda x: x[:, slot], self._caches["unit"]
+            ),
+            "suffix": jax.tree_util.tree_map(
+                lambda x: x[slot], self._caches["suffix"]
+            ),
+        }
+        if "cross_kv" in self._caches:
+            sub["cross_kv"] = jax.tree_util.tree_map(
+                lambda x: x[slot], self._caches["cross_kv"]
+            )
+        return sub
+
+    def _install_slot(self, slot: int, sub: Dict[str, Any]) -> None:
+        """Write a snapshot subtree into ``slot`` of the batched caches."""
+        new = dict(self._caches)
+        new["unit"] = jax.tree_util.tree_map(
+            lambda s, o: s.at[:, slot].set(o), self._caches["unit"], sub["unit"]
+        )
+        new["suffix"] = jax.tree_util.tree_map(
+            lambda s, o: s.at[slot].set(o),
+            self._caches["suffix"],
+            sub["suffix"],
+        )
+        if "cross_kv" in self._caches:
+            new["cross_kv"] = jax.tree_util.tree_map(
+                lambda s, o: s.at[slot].set(o),
+                self._caches["cross_kv"],
+                sub["cross_kv"],
+            )
+        self._caches = new
+
+    # ---------------------------------------------------------- prefix COW
+    def _cow_range(self, req: Request, start_pos: int, end_pos: int) -> None:
+        """Copy-on-write guard before writing tokens [start_pos, end_pos):
+        any shared page in that span is split so the shared copy is never
+        mutated.  No-op over private pages."""
+        if end_pos <= start_pos:
+            return
+        page = self.kv.page_tokens
+        for idx in range(start_pos // page, (end_pos - 1) // page + 1):
+            self.kv.make_private(req.request_id, idx)
 
     # -------------------------------------------------------------- prefill
     def _install_prefill(self, req: Request, tokens: List[int]) -> Any:
@@ -425,8 +564,71 @@ class ServingEngine:
             req.state = "decoding"
             return
         next_tok = int(jnp.argmax(last_logits))
+        self._publish_prefix(req, next_tok)
         req.generated.append(next_tok)
+        req.first_token_tick = self.tick
         req.state = "decoding"
+
+    def _publish_prefix(self, req: Request, first_tok: int) -> None:
+        """Insert a freshly prefilled prompt's pages into the trie and
+        snapshot its slot KV so later identical/overlapping prompts skip
+        prefill.  The request keeps decoding into its own pages: its first
+        append into the now-shared terminal page copy-on-writes."""
+        if not self.ecfg.prefix_cache or req.slot < 0:
+            return
+        feed = tuple(req.feed_tokens)
+        inserted = self.kv.insert_prefix(
+            req.request_id, feed, req.tenant, feed, float(self.tick)
+        )
+        if inserted and feed not in self._snaps:
+            while len(self._snaps) >= self.ecfg.max_prefix_snapshots:
+                # LRU: dict order is maintained by the touch in
+                # _install_cached_prefix, so the head is the coldest
+                self._snaps.pop(next(iter(self._snaps)))
+            self._snaps[feed] = (
+                self._extract_slot(req.slot),
+                first_tok,
+                len(feed),
+            )
+
+    def _install_cached_prefix(self, req: Request) -> None:
+        """Skip prefill for trie-matched tokens: install the prefix's KV
+        snapshot into the request's slot and continue from the first
+        uncached token.  An exact-prompt hit finishes prefill outright —
+        zero prefill compute, first token this tick."""
+        snap = self._snaps.get(req.snap_key) if req.snap_key else None
+        feed = req.feed_tokens
+        if snap is None:
+            # snapshot pruned between match and slot assignment: recompute
+            # from scratch — writes into the still-shared pages COW first
+            req.cached_tokens = 0
+            req.snap_key = None
+            return
+        self._snaps[req.snap_key] = self._snaps.pop(req.snap_key)  # LRU touch
+        caches_sub, first_tok, snap_len = snap
+        self._install_slot(req.slot, caches_sub)
+        matched = min(req.cached_tokens, len(feed))
+        count = not req.hit_counted  # replays must not re-count dedup work
+        if count:
+            self.prefix_hits += 1
+            req.hit_counted = True
+        if matched >= len(feed) and snap_len == len(feed):
+            req.pos = len(feed)
+            if count:
+                self.prefix_hit_tokens += len(feed)
+            if req.generated:
+                req.state = "decoding"  # replay: next decode feeds last tok
+            else:
+                req.generated.append(first_tok)
+                req.first_token_tick = self.tick
+                req.state = "decoding"
+        else:
+            # partial hit (or full-page hit needing last-position logits):
+            # chunked prefill resumes at the first position whose logits or
+            # KV the snapshot cannot provide
+            req.pos = min(matched, len(feed) - 1)
+            if count:
+                self.prefix_hit_tokens += req.pos
 
     def _prefill_tick(self) -> None:
         """Consume up to ``prefill_chunk_tokens`` prompt tokens this tick.
@@ -440,8 +642,6 @@ class ServingEngine:
         budget = self.ecfg.prefill_chunk_tokens
         chunked = False
         for rid in list(self._slot_req):
-            if budget <= 0:
-                break
             if rid is None:
                 continue
             req = self.requests[rid]
@@ -450,9 +650,21 @@ class ServingEngine:
             if not self.kv.resident(rid):
                 self.stall_ticks += 1  # KV partly in host memory: wait
                 continue
+            if req.pos == 0 and req.cached_tokens > 0:
+                # prefix-cache hit: KV for the matched tokens installs
+                # from the snapshot — no prefill compute, no budget, so
+                # this runs even when a long cold prefill drained the
+                # budget (an exact hit must never queue behind compute)
+                self._install_cached_prefix(req)
+                if req.state != "prefill":
+                    continue  # exact hit: first token already sampled
+            if budget <= 0:
+                continue  # compute paths below need budget; hits don't
             feed = req.feed_tokens
             if req.pos == 0:
                 if len(feed) <= budget:
+                    self.kv.grow_to(rid, len(feed))
+                    self._cow_range(req, 0, len(feed))
                     logits = self._install_prefill(req, feed)
                     budget -= len(feed)
                     self._finish_prefill(req, logits)
@@ -461,6 +673,8 @@ class ServingEngine:
                     # still starts the prompt (no starvation behind short
                     # traffic) while keeping the compiled shapes bounded
                     w = 1 << (budget.bit_length() - 1)
+                    self.kv.grow_to(rid, w)
+                    self._cow_range(req, 0, w)
                     self._install_prefill(req, feed[:w])
                     budget -= w
                     chunked = True
@@ -468,6 +682,9 @@ class ServingEngine:
                 take = min(budget, len(feed) - req.pos)
                 budget -= take
                 last = None
+                if take > 0:
+                    self.kv.grow_to(rid, req.pos + take)
+                    self._cow_range(req, req.pos, req.pos + take)
                 # power-of-two buckets: O(log chunk) dispatches per tick
                 # and a bounded set of compiled scan widths
                 while take > 0:
@@ -514,6 +731,12 @@ class ServingEngine:
         for i, req in active:
             req.pos += 1
             self.kv.grow_to(req.request_id, req.pos)
+            # the KV write landed at position pos-1: if that page is shared
+            # (an exact-prompt hit decoding past its cached terminal page),
+            # split it first — shared pages are never mutated
+            self.kv.make_private(
+                req.request_id, (req.pos - 1) // self.kv.page_tokens
+            )
             nxt = int(jnp.argmax(logits[i, 0]))
             req.generated.append(nxt)
             if req.done:
@@ -610,6 +833,14 @@ class ServingEngine:
             ):
                 self._restore.append(r.request_id)
         self.kv.reclaim()
+        if (
+            self.ecfg.prefix_cache
+            and self.kv.cache_evictions != self._pruned_at_evictions
+        ):
+            # drop KV snapshots no trie node references anymore
+            live = self.kv.live_snap_keys()
+            self._snaps = {k: v for k, v in self._snaps.items() if k in live}
+            self._pruned_at_evictions = self.kv.cache_evictions
         self.tick += 1
 
     def _frozen_bytes(self) -> float:
@@ -662,6 +893,13 @@ class ServingEngine:
              fail) the fattest ACTIVE request — the paper's Table III
              reactive path, which is all a pressure-oblivious policy has.
         """
+        while (
+            self.kv.overflow_pages > 0 or self.pool.used_fraction > 1.0
+        ) and self.kv.evict_cache(1):
+            # cold cached prefixes go first: dropping them stalls nobody
+            # and frees pages an overflow entry can reclaim into
+            self.kv.reclaim()
+            self._update_pool()
         if not (self.kv.overflow_pages > 0 or self.pool.used_fraction > 1.0):
             return
         if self._swap_out_frozen():
@@ -708,18 +946,29 @@ class ServingEngine:
             for r in self.requests.values()
             if r.state == "done"
         ]
+        ttft = [
+            r.first_token_tick - r.submit_tick
+            for r in self.requests.values()
+            if r.first_token_tick >= 0
+        ]
+        prefix = dict(self.kv.prefix_stats())
+        prefix["requests_hit"] = self.prefix_hits
+        prefix["prefill_tokens_skipped"] = self.prefix_hit_tokens
         return {
             "policy": self.policy.name,
             "completed": len(self.completed),
             "failed": len(self.failed),
             "suspensions": self.suspensions,
             "peak_used_fraction": self.peak_used_fraction,
+            "peak_demand_fraction": self.peak_demand_fraction,
             "offload_events": self.reactive_offloads,
             "swap_events": self.swap_outs,
             "host_transfers": self.kv.offload_events,
             "stall_ticks": self.stall_ticks,
             "mean_latency_ticks": sum(lat) / len(lat) if lat else None,
             "latency_ticks": sorted(lat),
+            "ttft_ticks": sorted(ttft),
+            "prefix_cache": prefix,
             "ticks": self.tick,
             "chunked_prefill_ticks": self.chunked_prefill_ticks,
             "tokens_generated": sum(

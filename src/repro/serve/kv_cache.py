@@ -9,11 +9,24 @@ byte accounting and the attention kernel's indirection consume one memory
 model, instead of bytes-only bookkeeping on one side and dense caches on
 the other.
 
+Pages are REFCOUNTED: more than one page table may point at the same
+physical page.  :class:`PrefixCache` exploits this — a token trie at page
+granularity maps prompt prefixes onto already-materialized pages, so a
+hundred tenants sharing one system prompt pin ONE copy of its KV, not a
+hundred.  Writes into a shared page go through copy-on-write
+(:meth:`PageBlockAllocator.ensure_private`); cold cached prefixes are
+evicted under pressure by LRU crossed with the scheduling policy's
+``cache_pressure`` hint (MURS: low-usage-rate tenants' cold prefixes go
+first).  Fewer live bytes is the same lever the MURS scheduler pulls —
+dedup attacks the pressure at its source (DESIGN.md §6).
+
 The manager tracks the byte-exact HBM footprint of every request — this is
 what the MURS sampler reads as the request's *live* bytes, and what decides
-spill-to-host (offload) and OOM.  Pages past pool capacity are OVERFLOW
-pages (ids ≥ ``n_pages``): the pool is overcommitted, ``used_fraction``
-exceeds 1.0, and the runtime's reactive path (offload / fail) fires.
+spill-to-host (offload) and OOM.  A shared page is charged fractionally
+(1/refcount) to each holder so the per-owner shares sum to the physical
+total.  Pages past pool capacity are OVERFLOW pages (ids ≥ ``n_pages``):
+the pool is overcommitted, ``used_fraction`` exceeds 1.0, and the
+runtime's reactive path (offload / fail) fires.
 
 Byte model per architecture (the MURS memory-usage classification of
 DESIGN.md §4 falls out of these):
@@ -27,18 +40,24 @@ DESIGN.md §4 falls out of these):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 
 __all__ = [
+    "CACHE_OWNER",
     "PageBlockAllocator",
     "PagedKVManager",
+    "PrefixCache",
     "constant_state_bytes",
     "kv_bytes_per_token",
 ]
+
+#: allocator owner id under which :class:`PrefixCache` holds its pages —
+#: a cached page with no request reference has refcount 1 (the cache's)
+CACHE_OWNER = "__prefix_cache__"
 
 
 def _block_counts(cfg: ArchConfig) -> Dict[str, int]:
@@ -83,14 +102,21 @@ def constant_state_bytes(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
 
 
 class PageBlockAllocator:
-    """Fixed-size HBM page pool: free list + per-owner page tables.
+    """Fixed-size HBM page pool: free list + refcounted per-owner tables.
 
     ``n_pages`` physical pages exist; allocation pops the free list (lowest
-    id first on a fresh pool, then LIFO reuse for locality).  When the free
-    list is empty, allocation hands out OVERFLOW page ids (≥ ``n_pages``) —
-    the pool is overcommitted; callers detect this via
+    id first on a fresh pool, then LIFO reuse for locality).  A page may be
+    held by MULTIPLE owners (prefix sharing): :meth:`share` bumps its
+    refcount, and the page returns to the free list only when the last
+    holder releases it.  :meth:`ensure_private` is the copy-on-write
+    primitive — an owner about to append into a shared page gets a private
+    replacement; the shared page is never mutated.
+
+    When the free list is empty, allocation hands out OVERFLOW page ids
+    (≥ ``n_pages``) — the pool is overcommitted; callers detect this via
     :attr:`overflow_pages` / byte accounting and react (offload, fail,
-    or — under a proactive policy — never get here).
+    evict cached prefixes, or — under a proactive policy — never get here).
+    Overflow pages are never shared: only HBM-resident pages are cacheable.
     """
 
     def __init__(self, n_pages: int) -> None:
@@ -100,8 +126,10 @@ class PageBlockAllocator:
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._free_overflow: List[int] = []  # recycled overflow ids
         self._tables: Dict[str, List[int]] = {}
+        self._ref: Dict[int, int] = {}  # page id → number of holders
         self._next_overflow = n_pages
         self.overflow_pages = 0  # overflow pages currently held
+        self.cow_events = 0  # copy-on-write page splits
 
     # ------------------------------------------------------------- queries
     @property
@@ -110,7 +138,8 @@ class PageBlockAllocator:
 
     @property
     def pages_in_use(self) -> int:
-        return sum(len(t) for t in self._tables.values())
+        """Distinct pages currently held (a shared page counts once)."""
+        return len(self._ref)
 
     @property
     def page_id_bound(self) -> int:
@@ -125,6 +154,14 @@ class PageBlockAllocator:
 
     def pages_held(self, owner: str) -> int:
         return len(self._tables.get(owner, ()))
+
+    def refcount(self, pid: int) -> int:
+        return self._ref.get(pid, 0)
+
+    def owner_share(self, owner: str) -> float:
+        """Fractionally attributed page count: a page shared by k holders
+        charges 1/k to each, so shares sum to the physical page count."""
+        return sum(1.0 / self._ref[pid] for pid in self._tables.get(owner, ()))
 
     def table_array(
         self, owners: Sequence[str], max_pages: Optional[int] = None
@@ -147,6 +184,33 @@ class PageBlockAllocator:
         return out
 
     # ---------------------------------------------------------- allocation
+    def _alloc_page(self) -> int:
+        if self._free:
+            pid = self._free.pop()
+        elif self._free_overflow:
+            pid = self._free_overflow.pop()
+            self.overflow_pages += 1
+        else:
+            pid = self._next_overflow
+            self._next_overflow += 1
+            self.overflow_pages += 1
+        self._ref[pid] = 1
+        return pid
+
+    def _decref(self, pid: int) -> bool:
+        """Drop one reference; returns True iff the page became free."""
+        n = self._ref[pid] - 1
+        if n > 0:
+            self._ref[pid] = n
+            return False
+        del self._ref[pid]
+        if pid < self.n_pages:
+            self._free.append(pid)
+        else:
+            self._free_overflow.append(pid)
+            self.overflow_pages -= 1
+        return True
+
     def grow_to(self, owner: str, n_pages_needed: int) -> int:
         """Extend ``owner``'s table to ``n_pages_needed``; returns #new pages."""
         table = self._tables.setdefault(owner, [])
@@ -154,27 +218,58 @@ class PageBlockAllocator:
         if new <= 0:
             return 0
         for _ in range(new):
-            if self._free:
-                table.append(self._free.pop())
-            elif self._free_overflow:
-                table.append(self._free_overflow.pop())
-                self.overflow_pages += 1
-            else:
-                table.append(self._next_overflow)
-                self._next_overflow += 1
-                self.overflow_pages += 1
+            table.append(self._alloc_page())
+        return new
+
+    def share(self, owner: str, pages: Sequence[int]) -> None:
+        """Append existing live pages to ``owner``'s table (refcount +1 each).
+
+        This is the prefix-sharing primitive: the pages stay owned by every
+        current holder; ``owner`` must treat them as read-only until
+        :meth:`ensure_private` splits them.
+        """
+        table = self._tables.setdefault(owner, [])
+        for pid in pages:
+            if pid not in self._ref:
+                raise ValueError(f"page {pid} is not live; cannot share")
+            if pid >= self.n_pages:
+                raise ValueError(f"overflow page {pid} cannot be shared")
+            self._ref[pid] += 1
+            table.append(pid)
+
+    def ensure_private(self, owner: str, index: int) -> int:
+        """Copy-on-write: make ``owner``'s page at table ``index`` private.
+
+        If the page is shared (refcount > 1) the owner receives a freshly
+        allocated replacement (the copy) and drops its reference to the
+        shared original — which is NEVER mutated.  Returns the (possibly
+        new) page id.
+        """
+        table = self._tables[owner]
+        pid = table[index]
+        if self._ref.get(pid, 0) <= 1:
+            return pid
+        new = self._alloc_page()
+        table[index] = new
+        self._ref[pid] -= 1
+        self.cow_events += 1
         return new
 
     def free(self, owner: str) -> int:
-        """Release every page ``owner`` holds; returns the page count."""
+        """Release every page reference ``owner`` holds; returns the count
+        of table entries released (shared pages stay live for others)."""
         table = self._tables.pop(owner, [])
         for pid in table:
-            if pid < self.n_pages:
-                self._free.append(pid)
-            else:
-                self._free_overflow.append(pid)
-                self.overflow_pages -= 1
+            self._decref(pid)
         return len(table)
+
+    def release_pages(self, owner: str, pages: Sequence[int]) -> None:
+        """Release specific page references from ``owner``'s table (one
+        table entry per listed id) — the prefix cache's eviction path."""
+        table = self._tables.get(owner, [])
+        for pid in pages:
+            table.remove(pid)
+            self._decref(pid)
 
     # ------------------------------------------------------------ residency
     def resident(self, owner: str) -> bool:
@@ -193,11 +288,294 @@ class PageBlockAllocator:
         for table in self._tables.values():
             for i, pid in enumerate(table):
                 if pid >= self.n_pages and self._free:
+                    # overflow pages are never shared → refcount is 1
                     self._free_overflow.append(pid)
-                    table[i] = self._free.pop()
+                    del self._ref[pid]
+                    new = self._free.pop()
+                    self._ref[new] = 1
+                    table[i] = new
                     self.overflow_pages -= 1
                     moved += 1
         return moved
+
+
+@dataclass
+class _PrefixNode:
+    """One cached page: the trie node for a (page-aligned) token prefix."""
+
+    page_id: int
+    n_tokens: int  # valid tokens in this page (< page_tokens ⇒ terminal)
+    group: str  # tenant that materialized it (cache_pressure key)
+    snap_key: Tuple[int, ...]  # engine-side KV snapshot this page came from
+    last_use: float
+
+
+class PrefixCache:
+    """Token trie over the page pool: prompt prefix → shared pages.
+
+    Nodes live at page-granular depths — the node for ``tokens[:d·P]``
+    records the physical page holding tokens ``[(d−1)·P, d·P)`` of that
+    prefix.  A cached prompt's final PARTIAL page is stored as a terminal
+    node keyed by the full prompt, so an exact-prompt repeat shares every
+    page (its first append then triggers copy-on-write).  The cache holds
+    one allocator reference per node (owner :data:`CACHE_OWNER`); a node
+    whose page refcount is 1 is COLD — no live request uses it — and is
+    the only kind eviction may touch.
+
+    Eviction order is LRU crossed with the scheduling policy's
+    ``cache_pressure(group)`` hint: highest pressure first, then least
+    recently used, deepest leaf first; inner nodes are never evicted
+    before their descendants (the trie stays connected).
+    """
+
+    def __init__(self, alloc: PageBlockAllocator, page_tokens: int) -> None:
+        self.alloc = alloc
+        self.page_tokens = page_tokens
+        self._nodes: Dict[Tuple[int, ...], _PrefixNode] = {}
+        self._children: Dict[Tuple[int, ...], int] = {}  # key → child nodes
+        # parent full-page key → terminal (partial-page) keys beneath it
+        self._terminals: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+        self.lookups = 0
+        self.hits = 0
+        self.hit_tokens = 0
+        self.lookup_tokens = 0
+        self.shared_pages_acquired = 0
+        self.insertions = 0
+        self.evictions = 0
+
+    # ------------------------------------------------------------- queries
+    @property
+    def cached_pages(self) -> int:
+        return len(self._nodes)
+
+    @property
+    def evictable_pages(self) -> int:
+        """Pages eviction could free by cascading leaf-first: COLD nodes
+        (refcount 1) with no warm descendant.  A single ``evict`` step
+        only takes leaves, but evicting a leaf exposes its parent — this
+        counts the whole reclaimable chain, which is what "reclaimable
+        bytes" means for the demand metric."""
+        blocked = set()
+        for key, node in self._nodes.items():
+            if self.alloc.refcount(node.page_id) != 1:
+                k = key
+                while k:
+                    blocked.add(k)
+                    k = self._parent(k)
+        return sum(1 for key in self._nodes if key not in blocked)
+
+    def live_snap_keys(self) -> set:
+        return {node.snap_key for node in self._nodes.values()}
+
+    def _parent(self, key: Tuple[int, ...]) -> Tuple[int, ...]:
+        return key[: ((len(key) - 1) // self.page_tokens) * self.page_tokens]
+
+    def _evictable(self, key: Tuple[int, ...]) -> bool:
+        if self._children.get(key, 0) > 0:
+            return False  # inner node: descendants would be orphaned
+        return self.alloc.refcount(self._nodes[key].page_id) == 1
+
+    # --------------------------------------------------------------- match
+    def _walk(self, tokens: Sequence[int]) -> List[Tuple[int, ...]]:
+        """Longest chain of cached nodes covering a prefix of ``tokens``."""
+        toks = tuple(tokens)
+        keys: List[Tuple[int, ...]] = []
+        d = self.page_tokens
+        while d <= len(toks):
+            key = toks[:d]
+            if key not in self._nodes:
+                break
+            keys.append(key)
+            d += self.page_tokens
+        base = keys[-1] if keys else ()
+        best: Optional[Tuple[int, ...]] = None
+        for term in self._terminals.get(base, ()):
+            if len(term) <= len(toks) and toks[: len(term)] == term:
+                if best is None or len(term) > len(best):
+                    best = term
+        if best is not None:
+            keys.append(best)
+        return keys
+
+    def probe(
+        self, tokens: Sequence[int]
+    ) -> Tuple[int, Optional[Tuple[int, ...]], Tuple[int, ...]]:
+        """(matched token count, snapshot key, matched page ids) without
+        acquiring pages — the admission arithmetic, plus the page set an
+        admission-time eviction must not victimize (the pages it is about
+        to count as free-to-share)."""
+        keys = self._walk(tokens)
+        if not keys:
+            return 0, None, ()
+        pages = tuple(self._nodes[k].page_id for k in keys)
+        return len(keys[-1]), self._nodes[keys[-1]].snap_key, pages
+
+    def peek(self, tokens: Sequence[int]) -> Tuple[int, Optional[Tuple[int, ...]]]:
+        """(matched token count, snapshot key) without acquiring pages."""
+        matched, snap_key, _ = self.probe(tokens)
+        return matched, snap_key
+
+    def match(
+        self,
+        owner: str,
+        tokens: Sequence[int],
+        now: float = 0.0,
+        count_stats: bool = True,
+    ) -> Tuple[int, Optional[Tuple[int, ...]]]:
+        """Longest-prefix match that ACQUIRES the cached pages for ``owner``
+        (refcount +1 each, appended to its page table, LRU refreshed).
+        Returns (matched token count, snapshot key).
+
+        ``count_stats=False`` keeps the hit/dedup counters untouched — an
+        offload-reload re-matching the request's OWN published prefix is
+        a real page re-share but not evidence of cross-request sharing,
+        and must not satisfy the benchmark's hit-rate acceptance bit."""
+        if count_stats:
+            self.lookups += 1
+            self.lookup_tokens += len(tokens)
+        keys = self._walk(tokens)
+        if not keys:
+            return 0, None
+        pages = [self._nodes[k].page_id for k in keys]
+        self.alloc.share(owner, pages)
+        for k in keys:
+            self._nodes[k].last_use = now
+        matched = len(keys[-1])
+        if count_stats:
+            self.hits += 1
+            self.hit_tokens += matched
+            self.shared_pages_acquired += len(pages)
+        return matched, self._nodes[keys[-1]].snap_key
+
+    # -------------------------------------------------------------- insert
+    def insert(
+        self,
+        owner_table: Sequence[int],
+        tokens: Sequence[int],
+        group: str,
+        snap_key: Tuple[int, ...],
+        now: float = 0.0,
+    ) -> int:
+        """Record ``tokens``'s pages (from a finished prefill) in the trie.
+
+        Full pages first, then the trailing partial page as a terminal
+        node.  Pages already cached (by an identical earlier prompt) are
+        skipped; overflow (host-resident) pages are never cached.  Returns
+        the number of nodes inserted.
+        """
+        toks = tuple(tokens)
+        P = self.page_tokens
+        inserted = 0
+        full = len(toks) // P
+        for d in range(1, full + 1):
+            key = toks[: d * P]
+            if key in self._nodes:
+                self._nodes[key].last_use = now
+                continue
+            parent = toks[: (d - 1) * P]
+            if parent and parent not in self._nodes:
+                break  # keep the trie connected
+            if d - 1 >= len(owner_table):
+                break
+            pid = owner_table[d - 1]
+            if pid >= self.alloc.n_pages:
+                break  # never cache overflow pages
+            self.alloc.share(CACHE_OWNER, [pid])
+            self._nodes[key] = _PrefixNode(pid, P, group, snap_key, now)
+            self._children[parent] = self._children.get(parent, 0) + 1
+            inserted += 1
+        rem = len(toks) % P
+        if rem:
+            key = toks
+            parent = toks[: full * P]
+            if (
+                key not in self._nodes
+                and (full == 0 or parent in self._nodes)
+                and full < len(owner_table)
+                and owner_table[full] < self.alloc.n_pages
+            ):
+                self.alloc.share(CACHE_OWNER, [owner_table[full]])
+                self._nodes[key] = _PrefixNode(
+                    owner_table[full], rem, group, snap_key, now
+                )
+                self._children[parent] = self._children.get(parent, 0) + 1
+                self._terminals.setdefault(parent, []).append(key)
+                inserted += 1
+        if inserted:
+            self.insertions += 1
+        return inserted
+
+    # ------------------------------------------------------------ eviction
+    def evict(
+        self,
+        n_pages: int,
+        pressure: Optional[Callable[[str], float]] = None,
+        protect: Sequence[int] = (),
+    ) -> int:
+        """Evict up to ``n_pages`` COLD cached pages; returns #evicted.
+
+        Victim order: highest ``pressure(group)`` first (the policy's
+        hint — MURS returns high pressure for low-usage-rate tenants),
+        then least-recently-used, then deepest leaf.  Pages referenced by
+        any live request (refcount > 1), inner nodes, and ``protect``-ed
+        page ids (pages an in-flight admission probe just counted as
+        free-to-share) are untouchable.
+        """
+        freed = 0
+        protected = frozenset(protect)
+        while freed < n_pages:
+            victim = self._pick_victim(pressure, protected)
+            if victim is None:
+                break
+            self._evict_node(victim)
+            freed += 1
+        return freed
+
+    def _pick_victim(
+        self,
+        pressure: Optional[Callable[[str], float]],
+        protected: frozenset = frozenset(),
+    ) -> Optional[Tuple[int, ...]]:
+        best_key, best_rank = None, None
+        for key, node in self._nodes.items():
+            if node.page_id in protected or not self._evictable(key):
+                continue
+            p = float(pressure(node.group)) if pressure is not None else 0.0
+            rank = (-p, node.last_use, -len(key))
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = key, rank
+        return best_key
+
+    def evict_node_for_page(self, pid: int) -> bool:
+        """Drop the (leaf) node holding ``pid`` regardless of its warmth —
+        the copy-on-write ownership transfer: when a writer needs the page
+        private and the cache is the only other holder, releasing the
+        cache's reference makes the page private IN PLACE, with no
+        allocation at all.  Returns True if a node was dropped."""
+        for key, node in self._nodes.items():
+            if node.page_id == pid and self._children.get(key, 0) == 0:
+                self._evict_node(key)
+                return True
+        return False
+
+    def _evict_node(self, key: Tuple[int, ...]) -> None:
+        node = self._nodes.pop(key)
+        parent = self._parent(key)
+        remaining = self._children.get(parent, 1) - 1
+        if remaining > 0:
+            self._children[parent] = remaining
+        else:
+            # zero-count entries must go: their keys are full token tuples
+            # and a long-lived engine churns through unboundedly many
+            self._children.pop(parent, None)
+        if node.n_tokens < self.page_tokens:
+            terms = self._terminals.get(parent)
+            if terms and key in terms:
+                terms.remove(key)
+                if not terms:
+                    del self._terminals[parent]
+        self.alloc.release_pages(CACHE_OWNER, [node.page_id])
+        self.evictions += 1
 
 
 @dataclass
@@ -208,13 +586,23 @@ class PagedKVManager:
     byte size depends on the architecture): ``n_pages = ⌊capacity /
     page_bytes⌋``.  Architectures with zero marginal KV bytes (mamba:
     constant state) hold no pages at all.
+
+    With ``enable_prefix_cache`` a :class:`PrefixCache` trie is attached:
+    :meth:`match_prefix` / :meth:`insert_prefix` are the serving engine's
+    admission hooks, and page shortage triggers cold-prefix eviction
+    ordered by ``cache_pressure_fn`` (the active scheduling policy's
+    hint) before the allocator falls back to overflow ids.
     """
 
     capacity_bytes: float
     page_tokens: int = 16
+    enable_prefix_cache: bool = False
+    cache_pressure_fn: Optional[Callable[[str], float]] = None
     _page_bytes: Dict[str, float] = field(default_factory=dict)
     _state_bytes: Dict[str, float] = field(default_factory=dict)
     _alloc: Optional[PageBlockAllocator] = None
+    _prefix: Optional[PrefixCache] = None
+    _pool_page_bytes: float = 0.0
     offloaded_bytes: float = 0.0
     offload_events: int = 0
 
@@ -227,15 +615,28 @@ class PagedKVManager:
             self._alloc = PageBlockAllocator(
                 int(self.capacity_bytes // page_bytes)
             )
+            self._pool_page_bytes = page_bytes
+            if self.enable_prefix_cache:
+                self._prefix = PrefixCache(self._alloc, self.page_tokens)
         if self._alloc is not None and page_bytes > 0:
             self._alloc.grow_to(request_id, 0)  # materialize an empty table
 
     def grow_to(self, request_id: str, n_tokens: int) -> float:
-        """Ensure pages cover ``n_tokens``; returns newly allocated bytes."""
+        """Ensure pages cover ``n_tokens``; returns newly allocated bytes.
+
+        When the free list cannot cover the growth, cold cached prefixes
+        are evicted first (policy-ordered) — overflow ids are the last
+        resort, not the first response to a warm cache.
+        """
         page_bytes = self._page_bytes.get(request_id, 0.0)
         if page_bytes <= 0.0 or self._alloc is None:
             return 0.0
         need = (n_tokens + self.page_tokens - 1) // self.page_tokens
+        new = need - self._alloc.pages_held(request_id)
+        if new > 0 and self._prefix is not None:
+            short = new - self._alloc.free_pages
+            if short > 0:
+                self._prefix.evict(short, self.cache_pressure_fn)
         return self._alloc.grow_to(request_id, need) * page_bytes
 
     def bytes_for(self, cfg: ArchConfig, n_tokens: int) -> float:
@@ -244,11 +645,168 @@ class PagedKVManager:
         pages = (n_tokens + self.page_tokens - 1) // self.page_tokens
         return pages * kv_bytes_per_token(cfg) * self.page_tokens
 
+    def admission_probe(
+        self, cfg: ArchConfig, tokens: Sequence[int]
+    ) -> Tuple[float, Tuple[int, ...]]:
+        """Admission arithmetic net of prefix-cache hits: (bytes the NEW
+        pages for ``tokens`` would occupy, the matched page ids).  The
+        caller must pass the page ids as ``protect`` to any eviction it
+        runs before acquiring the match — otherwise the eviction can
+        victimize exactly the cold pages this probe just counted as
+        free-to-share, and the later allocation overshoots the line that
+        was checked."""
+        total = (len(tokens) + self.page_tokens - 1) // self.page_tokens
+        page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
+        if self._prefix is None:
+            return total * page_bytes, ()
+        matched, _, pages = self._prefix.probe(tokens)
+        new = max(total - len(pages), 0)
+        if pages and matched % self.page_tokens:
+            # the match ends in a shared PARTIAL page: the request's first
+            # append into it copy-on-writes onto a fresh page — count that
+            # page now or admission admits one page more than it checked
+            new += 1
+        return new * page_bytes, pages
+
     def release(self, request_id: str) -> float:
         pages = self._alloc.free(request_id) if self._alloc is not None else 0
         pb = self._page_bytes.pop(request_id, 0.0)
         sb = self._state_bytes.pop(request_id, 0.0)
         return pages * pb + sb
+
+    # -------------------------------------------------------- prefix cache
+    def peek_prefix(
+        self, tokens: Sequence[int]
+    ) -> Tuple[int, Optional[Tuple[int, ...]]]:
+        """(matched token count, snapshot key) — no pages acquired."""
+        if self._prefix is None:
+            return 0, None
+        return self._prefix.peek(tokens)
+
+    def match_prefix(
+        self,
+        request_id: str,
+        tokens: Sequence[int],
+        now: float = 0.0,
+        count_stats: bool = True,
+    ) -> Tuple[int, Optional[Tuple[int, ...]]]:
+        """Acquire the longest cached prefix of ``tokens`` for
+        ``request_id`` (its page table must be empty).  Returns (matched
+        token count, snapshot key).  ``count_stats=False`` for replays —
+        re-sharing your own published prefix is not a cache hit."""
+        if self._prefix is None or self._alloc is None:
+            return 0, None
+        if self._alloc.pages_held(request_id) > 0:
+            raise ValueError(
+                f"match_prefix needs an empty table for {request_id!r}"
+            )
+        return self._prefix.match(request_id, tokens, now, count_stats)
+
+    def insert_prefix(
+        self,
+        request_id: str,
+        tokens: Sequence[int],
+        group: str,
+        snap_key: Tuple[int, ...],
+        now: float = 0.0,
+    ) -> int:
+        """Publish a finished prefill's pages into the trie; returns the
+        number of newly cached pages."""
+        if self._prefix is None or self._alloc is None:
+            return 0
+        return self._prefix.insert(
+            self._alloc.table(request_id), tokens, group, snap_key, now
+        )
+
+    def make_private(self, request_id: str, page_index: int) -> None:
+        """Copy-on-write guard: call before writing tokens into the page at
+        ``page_index`` of the request's table.  No-op for private pages.
+
+        Like :meth:`grow_to`, a COW under a drained free list sheds cache
+        before handing out overflow ids: first by OWNERSHIP TRANSFER —
+        if the cache is the only other holder of the page, dropping its
+        node makes the page private in place with no allocation — then by
+        evicting some other cold page to back the copy."""
+        if self._alloc is None:
+            return
+        if page_index >= self._alloc.pages_held(request_id):
+            return
+        pid = self._alloc.table(request_id)[page_index]
+        if (
+            self._alloc.refcount(pid) > 1
+            and self._alloc.free_pages == 0
+            and self._prefix is not None
+        ):
+            if (
+                self._alloc.refcount(pid) == 2
+                and self._prefix.evict_node_for_page(pid)
+                and self._alloc.refcount(pid) <= 1
+            ):
+                return  # transferred: already private, nothing to copy
+            self._prefix.evict(1, self.cache_pressure_fn, protect=(pid,))
+        self._alloc.ensure_private(request_id, page_index)
+
+    def evict_cache(self, n_pages: int, protect: Sequence[int] = ()) -> int:
+        """Evict up to ``n_pages`` cold cached pages (policy-ordered);
+        ``protect`` shields pages an admission probe just counted."""
+        if self._prefix is None:
+            return 0
+        return self._prefix.evict(n_pages, self.cache_pressure_fn, protect)
+
+    def live_snap_keys(self) -> set:
+        return self._prefix.live_snap_keys() if self._prefix else set()
+
+    @property
+    def evictable_cache_pages(self) -> int:
+        return self._prefix.evictable_pages if self._prefix else 0
+
+    @property
+    def reclaimable_bytes(self) -> float:
+        """Bytes of COLD cached pages (held by the cache alone) — memory
+        that one :meth:`evict_cache` call away from being free, the OS
+        page-cache notion of "available".  Pool demand = used −
+        reclaimable."""
+        return self.evictable_cache_pages * self._pool_page_bytes
+
+    @property
+    def cache_bytes(self) -> float:
+        """Pool bytes attributed to the prefix cache (its fractional share
+        of the pages it holds — a page also held by a request is mostly
+        charged to the request)."""
+        if self._alloc is None or self._prefix is None:
+            return 0.0
+        return self._alloc.owner_share(CACHE_OWNER) * self._pool_page_bytes
+
+    @property
+    def cow_events(self) -> int:
+        return self._alloc.cow_events if self._alloc is not None else 0
+
+    @property
+    def cache_evictions(self) -> int:
+        return self._prefix.evictions if self._prefix is not None else 0
+
+    def prefix_stats(self) -> Dict[str, float]:
+        """Machine-readable prefix-cache trajectory for BENCH_serve.json."""
+        p = self._prefix
+        if p is None:
+            return {"enabled": False}
+        return {
+            "enabled": True,
+            "lookups": p.lookups,
+            "hits": p.hits,
+            "hit_rate": p.hits / p.lookups if p.lookups else 0.0,
+            "hit_tokens": p.hit_tokens,
+            "lookup_tokens": p.lookup_tokens,
+            "token_hit_rate": (
+                p.hit_tokens / p.lookup_tokens if p.lookup_tokens else 0.0
+            ),
+            "shared_pages_acquired": p.shared_pages_acquired,
+            "dedup_bytes": p.shared_pages_acquired * self._pool_page_bytes,
+            "cached_pages": p.cached_pages,
+            "insertions": p.insertions,
+            "evictions": p.evictions,
+            "cow_events": self.cow_events,
+        }
 
     # ------------------------------------------------------------- queries
     def page_table(self, request_id: str) -> Tuple[int, ...]:
@@ -273,12 +831,23 @@ class PagedKVManager:
         return self._alloc.resident(request_id) if self._alloc else True
 
     def reclaim(self) -> int:
-        """Page overflow entries back in; returns pages moved."""
-        return self._alloc.reclaim() if self._alloc is not None else 0
+        """Page overflow entries back in; returns pages moved.  Cold cached
+        prefixes are evicted first when they are what stands between an
+        overflow page and residency."""
+        if self._alloc is None:
+            return 0
+        if self._prefix is not None:
+            short = self._alloc.overflow_pages - self._alloc.free_pages
+            if short > 0:
+                self._prefix.evict(short, self.cache_pressure_fn)
+        return self._alloc.reclaim()
 
     def request_bytes(self, request_id: str) -> float:
+        """The request's attributed HBM bytes (shared pages fractionally)."""
+        if self._alloc is None:
+            return self._state_bytes.get(request_id, 0.0)
         return (
-            self.request_pages(request_id)
+            self._alloc.owner_share(request_id)
             * self._page_bytes.get(request_id, 0.0)
             + self._state_bytes.get(request_id, 0.0)
         )
@@ -303,18 +872,34 @@ class PagedKVManager:
 
     @property
     def used_bytes(self) -> float:
-        return sum(
-            self.request_pages(r) * self._page_bytes[r] + self._state_bytes[r]
-            for r in self._page_bytes
+        """Physical bytes held: per-request fractional shares + the prefix
+        cache's share — a page shared k ways is counted exactly once."""
+        total = sum(
+            self.request_bytes(r) for r in self._page_bytes
         )
+        return total + self.cache_bytes
 
     @property
     def used_fraction(self) -> float:
         return self.used_bytes / self.capacity_bytes if self.capacity_bytes else 1.0
 
     def offload(self, request_id: str) -> float:
-        """Spill a request's pages to host DRAM (the TPU 'spill')."""
+        """Spill a request's pages to host DRAM (the TPU 'spill').  Pages
+        shared with the prefix cache survive in the cache — only the
+        request's references move, so ``offloaded_bytes`` (host transfer
+        volume) counts ONLY the pages that actually leave HBM (refcount
+        hit zero) plus the constant state; a later reload re-shares the
+        surviving pages."""
+        pb = self._page_bytes.get(request_id, 0.0)
+        sb = self._state_bytes.get(request_id, 0.0)
+        moved = 0
+        if self._alloc is not None:
+            moved = sum(
+                1
+                for pid in self._alloc.table(request_id)
+                if self._alloc.refcount(pid) == 1
+            )
         freed = self.release(request_id)
-        self.offloaded_bytes += freed
+        self.offloaded_bytes += moved * pb + sb
         self.offload_events += 1
         return freed

@@ -1,0 +1,115 @@
+"""Benchmark tooling contracts: the regression gate and the runner's
+refusal to write partial artifacts (a partial BENCH_serve.json would
+silently poison the trajectory the gate trusts)."""
+
+import json
+import sys
+import types
+
+import pytest
+
+from benchmarks import run as bench_run
+from benchmarks.gate import compare, main as gate_main
+
+
+def _record(p50=10, p99=20, thr=1.5, wins=True):
+    return {
+        "engine": {
+            "murs": {
+                "p50_ticks_to_finish": p50,
+                "p99_ticks_to_finish": p99,
+                "throughput_tokens_per_tick": thr,
+            }
+        },
+        "prefix_cache": {
+            "sharing_wins": {
+                "hit_rate_positive": wins,
+                "peak_pool_lower": wins,
+            }
+        },
+    }
+
+
+class TestGateCompare:
+    def test_within_threshold_passes(self):
+        rows, failures = compare(_record(), _record(p50=11), 15.0)
+        assert not failures
+        assert any(r[1] == "p50_ticks_to_finish" for r in rows)
+
+    def test_latency_regression_fails(self):
+        _, failures = compare(_record(p50=10), _record(p50=12), 15.0)
+        assert any("p50" in f for f in failures)
+
+    def test_throughput_regression_fails_downward_only(self):
+        _, failures = compare(_record(thr=1.0), _record(thr=0.8), 15.0)
+        assert any("throughput" in f for f in failures)
+        _, ok = compare(_record(thr=1.0), _record(thr=2.0), 15.0)
+        assert not ok  # faster is never a regression
+
+    def test_none_current_with_numeric_baseline_fails(self):
+        _, failures = compare(_record(p50=10), _record(p50=None), 15.0)
+        assert any("completed nothing" in f for f in failures)
+
+    def test_sharing_wins_are_hard_gates(self):
+        _, failures = compare(_record(), _record(wins=False), 15.0)
+        assert any("hit_rate_positive" in f for f in failures)
+        assert any("peak_pool_lower" in f for f in failures)
+
+    def test_missing_baseline_passes_with_notice(self, tmp_path, capsys):
+        cur = tmp_path / "cur.json"
+        cur.write_text(json.dumps(_record()))
+        rc = gate_main(
+            ["--current", str(cur), "--baseline", str(tmp_path / "nope.json"),
+             "--summary", str(tmp_path / "summary.md")]
+        )
+        assert rc == 0
+        assert "No baseline" in (tmp_path / "summary.md").read_text()
+
+    def test_summary_table_written(self, tmp_path):
+        cur = tmp_path / "cur.json"
+        base = tmp_path / "base.json"
+        cur.write_text(json.dumps(_record(p50=30)))
+        base.write_text(json.dumps(_record(p50=10)))
+        summary = tmp_path / "summary.md"
+        rc = gate_main(
+            ["--current", str(cur), "--baseline", str(base),
+             "--summary", str(summary)]
+        )
+        assert rc == 1
+        text = summary.read_text()
+        assert "| murs | p50_ticks_to_finish | 10 | 30 |" in text
+        assert "FAIL" in text
+
+
+class TestRunnerPartialArtifacts:
+    def test_failure_skips_json_and_exits_nonzero(self, tmp_path, monkeypatch):
+        """A raising benchmark must exit non-zero WITHOUT writing the
+        artifact, even when the serving record itself was produced."""
+        fake = types.ModuleType("benchmarks.fake_serve_pressure")
+        fake.main = lambda: {"engine": {}}
+        monkeypatch.setitem(
+            sys.modules, "benchmarks.fake_serve_pressure", fake
+        )
+        monkeypatch.setattr(
+            bench_run,
+            "MODULES",
+            ["benchmarks.fake_serve_pressure", "benchmarks.does_not_exist"],
+        )
+        out = tmp_path / "BENCH.json"
+        with pytest.raises(SystemExit) as exc:
+            bench_run.main(["--json", str(out)])
+        assert exc.value.code == 1
+        assert not out.exists(), "partial artifact must never be written"
+
+    def test_success_writes_json(self, tmp_path, monkeypatch):
+        fake = types.ModuleType("benchmarks.fake_serve_pressure")
+        fake.main = lambda: {"engine": {"murs": {}}}
+        monkeypatch.setitem(
+            sys.modules, "benchmarks.fake_serve_pressure", fake
+        )
+        monkeypatch.setattr(
+            bench_run, "MODULES", ["benchmarks.fake_serve_pressure"]
+        )
+        out = tmp_path / "BENCH.json"
+        bench_run.main(["--json", str(out)])
+        assert json.loads(out.read_text()) == {"engine": {"murs": {}}}

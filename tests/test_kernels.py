@@ -236,3 +236,83 @@ class TestPagedDecode:
             p = np.exp(s - s.max())
             p /= p.sum()
             np.testing.assert_allclose(out[i], p @ vv, atol=1e-4)
+
+    def test_shared_prefix_pages_numerics(self):
+        """Prefix sharing is a PAGE-TABLE property: requests whose tables
+        alias the same prefix pages must read identical K/V through the
+        kernel's indirection — no new kernel needed.  The tables come from
+        a real prefix-cache match plus the engine's copy-on-write guard
+        (the shared terminal page splits before request b's first write),
+        and numerics are checked against per-request dense oracles and a
+        physically-duplicated (no aliasing) layout."""
+        from repro.configs import ARCHS
+        from repro.serve.kv_cache import PagedKVManager, kv_bytes_per_token
+
+        cfg = ARCHS["internlm2-1.8b"]
+        page, hd = 16, 64
+        page_bytes = kv_bytes_per_token(cfg) * page
+        mgr = PagedKVManager(
+            capacity_bytes=page_bytes * 16,
+            page_tokens=page,
+            enable_prefix_cache=True,
+        )
+        shared_prompt = list(range(40))  # 2 full pages + 8-token terminal
+        mgr.register("a", cfg)
+        mgr.grow_to("a", 64)  # prompt + decoded tokens: 4 pages
+        mgr.insert_prefix("a", shared_prompt, "T", tuple(shared_prompt))
+        mgr.register("b", cfg)
+        matched, _ = mgr.match_prefix("b", shared_prompt)
+        assert matched == 40
+        # the engine's COW guard before b writes position 40 (which lands
+        # in the shared terminal page): b gets a private copy
+        mgr.make_private("b", 2)
+        mgr.grow_to("b", 64)
+        ta, tb = mgr.page_table("a"), mgr.page_table("b")
+        assert ta[:2] == tb[:2], "full prefix pages must alias, not copy"
+        assert not set(ta[2:]) & set(tb[2:]), "suffix pages must be private"
+
+        # per-request dense K/V streams sharing the first 40 positions
+        n_pool = mgr.page_id_bound
+        q = jax.random.normal(jax.random.PRNGKey(3), (2, hd), jnp.float32)
+        sa_k = np.asarray(jax.random.normal(jax.random.PRNGKey(11), (64, hd)))
+        sa_v = np.asarray(jax.random.normal(jax.random.PRNGKey(12), (64, hd)))
+        sb_k = np.concatenate(
+            [sa_k[:40],
+             np.asarray(jax.random.normal(jax.random.PRNGKey(13), (24, hd)))]
+        )
+        sb_v = np.concatenate(
+            [sa_v[:40],
+             np.asarray(jax.random.normal(jax.random.PRNGKey(14), (24, hd)))]
+        )
+        k_pool = np.zeros((n_pool, page, hd), np.float32)
+        v_pool = np.zeros_like(k_pool)
+        for table_ids, sk, sv in ((ta, sa_k, sa_v), (tb, sb_k, sb_v)):
+            for j, pid in enumerate(table_ids):
+                k_pool[pid] = sk[j * page:(j + 1) * page]
+                v_pool[pid] = sv[j * page:(j + 1) * page]
+        table = jnp.asarray(mgr.table_array(["a", "b"], max_pages=4))
+        lens = jnp.asarray([50, 46], jnp.int32)
+        out = np.asarray(
+            ops.paged_decode_attention(
+                q, jnp.asarray(k_pool), jnp.asarray(v_pool), table, lens
+            )
+        )
+        # oracle 1: dense per-request softmax over the contiguous prefix
+        for i, (sk, sv, n) in enumerate(((sa_k, sa_v, 50), (sb_k, sb_v, 46))):
+            s = np.asarray(q)[i] @ sk[:n].T / np.sqrt(hd)
+            p = np.exp(s - s.max())
+            p /= p.sum()
+            np.testing.assert_allclose(out[i], p @ sv[:n], atol=1e-4)
+        # oracle 2: physically duplicate b's shared pages into fresh pool
+        # slots — aliased and duplicated layouts must agree exactly
+        k2 = np.concatenate([k_pool, k_pool[np.asarray(ta[:2])]], axis=0)
+        v2 = np.concatenate([v_pool, v_pool[np.asarray(ta[:2])]], axis=0)
+        table_dup = np.asarray(table).copy()
+        table_dup[1, :2] = np.arange(n_pool, n_pool + 2)
+        out_dup = np.asarray(
+            ops.paged_decode_attention(
+                q, jnp.asarray(k2), jnp.asarray(v2),
+                jnp.asarray(table_dup), lens,
+            )
+        )
+        np.testing.assert_allclose(out, out_dup, atol=1e-6)

@@ -1,0 +1,463 @@
+"""Prefix-sharing paged KV cache: refcounts, COW, trie, eviction, engine.
+
+The allocator invariants here are the safety contract of the tentpole:
+
+    * no page is ever freed (back on the free list) while referenced,
+    * copy-on-write never mutates a shared page — the writer gets a fresh
+      page; every other holder's table is untouched,
+    * eviction only ever touches COLD pages (held by the cache alone) —
+      a page referenced by an active request is untouchable.
+
+A hypothesis property test drives a random op stream (admit / publish /
+append / release / evict / COW) through :class:`PagedKVManager` with the
+trie enabled and checks the refcount bookkeeping after every step.
+"""
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.models import init_model
+from repro.sched import MursConfig, MursPolicy
+from repro.serve import EngineConfig, Request, ServingEngine
+from repro.serve.kv_cache import (
+    CACHE_OWNER,
+    PageBlockAllocator,
+    PagedKVManager,
+    PrefixCache,
+    kv_bytes_per_token,
+)
+
+CFG = ARCHS["internlm2-1.8b"]
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["internlm2-1.8b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class TestAllocatorRefcounts:
+    def test_share_and_staged_free(self):
+        a = PageBlockAllocator(n_pages=4)
+        a.grow_to("r1", 2)
+        a.share("r2", [0, 1])
+        assert a.refcount(0) == 2 and a.refcount(1) == 2
+        assert a.pages_in_use == 2  # distinct pages, not table entries
+        a.free("r1")
+        # still referenced by r2: nothing returns to the free list
+        assert a.free_pages == 2 and a.refcount(0) == 1
+        a.free("r2")
+        assert a.free_pages == 4 and a.pages_in_use == 0
+
+    def test_owner_share_sums_to_physical(self):
+        a = PageBlockAllocator(n_pages=8)
+        a.grow_to("r1", 3)
+        a.share("r2", [0, 1])
+        a.grow_to("r2", 4)  # two private pages on top of the shared ones
+        total = a.owner_share("r1") + a.owner_share("r2")
+        assert total == pytest.approx(a.pages_in_use)
+
+    def test_cow_never_mutates_shared_page(self):
+        a = PageBlockAllocator(n_pages=4)
+        a.grow_to("r1", 1)
+        a.share("r2", [0])
+        new = a.ensure_private("r2", 0)
+        assert new != 0
+        assert a.table("r1") == (0,)  # the shared page is untouched
+        assert a.table("r2") == (new,)
+        assert a.refcount(0) == 1 and a.refcount(new) == 1
+        assert a.cow_events == 1
+        # private page: COW is a no-op
+        assert a.ensure_private("r2", 0) == new
+        assert a.cow_events == 1
+
+    def test_share_rejects_dead_and_overflow_pages(self):
+        a = PageBlockAllocator(n_pages=1)
+        a.grow_to("r1", 2)  # second page overflows
+        with pytest.raises(ValueError):
+            a.share("r2", [a.table("r1")[1]])  # overflow: never shared
+        with pytest.raises(ValueError):
+            a.share("r2", [7])  # not live
+
+    def test_release_pages_partial(self):
+        a = PageBlockAllocator(n_pages=4)
+        a.grow_to("r1", 3)
+        a.release_pages("r1", [a.table("r1")[1]])
+        assert a.pages_held("r1") == 2
+        assert a.free_pages == 2
+
+
+class TestPrefixCacheTrie:
+    def _mk(self, n_pages=8, page_tokens=4):
+        a = PageBlockAllocator(n_pages)
+        return a, PrefixCache(a, page_tokens)
+
+    def test_insert_then_exact_and_partial_match(self):
+        a, c = self._mk()
+        a.grow_to("r1", 3)  # 10 tokens @ page 4 → 2 full + 1 partial
+        toks = list(range(10))
+        assert c.insert(a.table("r1"), toks, "t", tuple(toks)) == 3
+        # exact match shares every page, including the partial terminal
+        m, snap = c.match("r2", toks, now=1.0)
+        assert m == 10 and snap == tuple(toks)
+        assert a.table("r2") == a.table("r1")
+        # a longer prompt still matches the full cached feed as its prefix
+        m2, _ = c.match("r3", toks + [99, 98], now=2.0)
+        assert m2 == 10
+        # diverging after one page matches only the page-aligned prefix
+        m3, _ = c.match("r4", toks[:4] + [77, 77, 77, 77], now=3.0)
+        assert m3 == 4
+        assert c.hits == 3 and c.lookups == 3
+
+    def test_eviction_only_touches_cold_leaves(self):
+        a, c = self._mk(n_pages=8)
+        a.grow_to("r1", 2)
+        toks = list(range(8))  # two full pages
+        c.insert(a.table("r1"), toks, "t", tuple(toks))
+        a.free("r1")  # cache is now the only holder (cold)
+        m, _ = c.match("r2", toks[:4], now=1.0)  # re-warm page 0
+        assert m == 4
+        # page 0 is referenced by r2 → only the depth-2 leaf is evictable
+        assert c.evictable_pages == 1
+        assert c.evict(5) == 1
+        assert a.pages_held("r2") == 1  # request tables never touched
+        a.free("r2")
+        assert c.evict(5) == 1  # now the root page is a cold leaf
+        assert c.cached_pages == 0
+        assert a.free_pages == a.n_pages
+
+    def test_uncounted_match_for_replays(self):
+        """count_stats=False re-shares pages without moving the hit/dedup
+        counters — an offload-reload re-matching its OWN prefix must not
+        satisfy the benchmark's hit-rate acceptance bit."""
+        a, c = self._mk()
+        a.grow_to("r1", 1)
+        c.insert(a.table("r1"), [1, 2, 3, 4], "t", (1, 2, 3, 4))
+        a.free("r1")
+        m, _ = c.match("r1b", [1, 2, 3, 4], count_stats=False)
+        assert m == 4 and a.pages_held("r1b") == 1
+        assert c.hits == 0 and c.lookups == 0 and c.hit_tokens == 0
+        assert c.shared_pages_acquired == 0
+
+    def test_protected_pages_survive_eviction(self):
+        """The admission probe's matched pages must be shielded from the
+        admission pass's own evictions — otherwise the probe's arithmetic
+        is invalidated by the eviction it triggers."""
+        a, c = self._mk()
+        a.grow_to("r1", 1)
+        c.insert(a.table("r1"), [1, 2, 3, 4], "t", (1, 2, 3, 4))
+        pid = a.table("r1")[0]
+        a.free("r1")  # cold: cache is the only holder
+        assert c.evict(1, protect=[pid]) == 0
+        assert c.evict(1) == 1
+
+    def test_eviction_order_lru_then_pressure(self):
+        a, c = self._mk(n_pages=8)
+        a.grow_to("r1", 1)
+        a.grow_to("r2", 1)
+        c.insert(a.table("r1"), [1, 2, 3, 4], "light", (1, 2, 3, 4), now=0.0)
+        c.insert(a.table("r2"), [5, 6, 7, 8], "heavy", (5, 6, 7, 8), now=5.0)
+        p1 = a.table("r1")[0]
+        p2 = a.table("r2")[0]
+        a.free("r1")
+        a.free("r2")
+        # pure LRU: the older (r1's) page goes first
+        assert c.evict(1) == 1
+        assert a.refcount(p1) == 0 and a.refcount(p2) == 1
+        # policy pressure outranks LRU: re-insert both, mark "heavy" hot
+        a.grow_to("r3", 1)
+        c.insert(a.table("r3"), [1, 2, 3, 4], "light", (1, 2, 3, 4), now=0.0)
+        a.free("r3")
+        pressure = {"light": 0.1, "heavy": 0.9}.get
+        assert c.evict(1, pressure) == 1
+        assert a.refcount(p2) == 0  # heavy-pressure group evicted first
+
+
+class TestAdmissionArithmetic:
+    P = 16
+    PB = kv_bytes_per_token(CFG) * 16
+
+    def _cold_prefix_pool(self, n_pages):
+        kv = PagedKVManager(
+            capacity_bytes=self.PB * n_pages,
+            page_tokens=self.P,
+            enable_prefix_cache=True,
+        )
+        kv.register("warm", CFG)
+        kv.grow_to("warm", 48)
+        kv.insert_prefix("warm", list(range(40)), "T", tuple(range(40)))
+        kv.release("warm")  # 3 cold cached pages (2 full + terminal)
+        return kv
+
+    def test_probe_counts_terminal_cow_page(self):
+        """A match ending in a shared PARTIAL page costs one extra page
+        the moment the request appends (COW) — admission must count it,
+        or it admits one page more than it checked."""
+        kv = self._cold_prefix_pool(8)
+        new_bytes, protected = kv.admission_probe(CFG, list(range(50)))
+        # 4 pages total, 3 cached, 1 genuinely new + 1 COW split
+        assert new_bytes == pytest.approx(2 * self.PB)
+        assert len(protected) == 3
+
+    def test_cow_under_drained_pool_transfers_ownership(self):
+        """With the free list empty and the cache the only other holder,
+        COW must hand the page over (evict the cache node) instead of
+        allocating an overflow id."""
+        kv = self._cold_prefix_pool(4)  # 3 cold pages + 1 free
+        kv.register("b", CFG)
+        matched, _ = kv.match_prefix("b", list(range(50)))
+        assert matched == 40
+        kv.grow_to("b", 50)  # takes the last free page
+        kv.make_private("b", 2)  # COW guard before writing position 40
+        assert kv.overflow_pages == 0
+        assert kv.resident("b")
+
+
+PAGE_BYTES = kv_bytes_per_token(CFG) * 4
+
+
+def _check_refcounts(kv: PagedKVManager) -> None:
+    a = kv._alloc
+    held = {}
+    for table in a._tables.values():
+        for pid in table:
+            held[pid] = held.get(pid, 0) + 1
+    assert held == a._ref, "refcounts must equal table references"
+    assert not set(a._free) & set(held), "free page still referenced"
+    assert not set(a._free_overflow) & set(held)
+    # the trie's holdings are exactly its nodes' pages
+    if kv._prefix is not None:
+        assert sorted(a._tables.get(CACHE_OWNER, [])) == sorted(
+            n.page_id for n in kv._prefix._nodes.values()
+        )
+
+
+class TestRefcountInvariantsProperty:
+    @given(
+        ops=st.lists(
+            st.tuples(
+                st.integers(0, 5), st.integers(0, 3), st.integers(1, 30)
+            ),
+            min_size=1,
+            max_size=40,
+        )
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_random_op_stream(self, ops):
+        kv = PagedKVManager(
+            capacity_bytes=PAGE_BYTES * 6,
+            page_tokens=4,
+            enable_prefix_cache=True,
+        )
+        live = {}
+        serial = 0
+        for kind, tenant, x in ops:
+            if kind == 0:  # admit: register, longest-prefix match, grow
+                rid = f"r{serial}"
+                serial += 1
+                tokens = [(x + i) % 5 for i in range((x % 9) + 1)]
+                kv.register(rid, CFG)
+                kv.match_prefix(rid, tokens)
+                kv.grow_to(rid, len(tokens))
+                live[rid] = tokens
+            elif kind == 1 and live:  # publish prompt pages into the trie
+                rid = sorted(live)[x % len(live)]
+                kv.insert_prefix(
+                    rid, live[rid], f"t{tenant}", tuple(live[rid])
+                )
+            elif kind == 2 and live:  # decode append: grow + COW guard
+                rid = sorted(live)[x % len(live)]
+                live[rid].append(x % 5)
+                kv.grow_to(rid, len(live[rid]))
+                kv.make_private(
+                    rid, (len(live[rid]) - 1) // kv.page_tokens
+                )
+            elif kind == 3 and live:  # completion: release every reference
+                rid = sorted(live)[x % len(live)]
+                others = {
+                    o: list(t)
+                    for o, t in kv._alloc._tables.items()
+                    if o != rid
+                }
+                kv.release(rid)
+                del live[rid]
+                for o, t in others.items():
+                    assert list(kv._alloc._tables.get(o, [])) == t
+            elif kind == 4 and kv._alloc is not None:  # pressure: evict
+                requests_before = {
+                    o: list(t)
+                    for o, t in kv._alloc._tables.items()
+                    if o != CACHE_OWNER
+                }
+                kv.evict_cache((x % 4) + 1)
+                # eviction never touches a page an active request holds
+                for o, t in requests_before.items():
+                    assert list(kv._alloc._tables.get(o, [])) == t
+            elif kind == 5 and live:  # explicit COW on an arbitrary page
+                rid = sorted(live)[x % len(live)]
+                pages = kv.page_table(rid)
+                if pages:
+                    idx = x % len(pages)
+                    old = pages[idx]
+                    ref = kv._alloc.refcount(old)
+                    new = kv._alloc.ensure_private(rid, idx)
+                    if ref > 1:
+                        assert new != old
+                        assert kv._alloc.refcount(old) == ref - 1
+                    else:
+                        assert new == old
+            if kv._alloc is not None:
+                _check_refcounts(kv)
+
+
+class TestEnginePrefixSharing:
+    def test_exact_hit_skips_prefill_same_tokens(self, small_model):
+        """A repeated prompt must generate bit-identical greedy tokens
+        while skipping its entire prefill (the tentpole's correctness +
+        win condition in one)."""
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 400
+        eng = ServingEngine(
+            cfg,
+            params,
+            EngineConfig(n_slots=2, max_seq=64, hbm_capacity_bytes=cap),
+        )
+        prompt = list(range(10, 30))
+        eng.submit(Request("cold", "T", prompt, 6))
+        eng.run(max_ticks=100)
+        eng.submit(Request("warm", "T", prompt, 6))
+        out = eng.run(max_ticks=200)
+        assert (
+            eng.requests["warm"].generated == eng.requests["cold"].generated
+        )
+        assert out["prefix_cache"]["requests_hit"] == 1
+        assert out["prefix_cache"]["prefill_tokens_skipped"] == len(prompt)
+        assert out["prefix_cache"]["hit_tokens"] == len(prompt)
+        # decoding past the shared terminal page split it, mutating nothing
+        assert out["prefix_cache"]["cow_events"] > 0
+
+    def test_partial_hit_matches_cold_engine(self, small_model):
+        """Chunked prefill must start at the first uncached token and end
+        with the same tokens a cache-less engine produces."""
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 400
+        base = list(range(10, 30))
+        longer = base + list(range(50, 60))
+        outs = {}
+        for mode, enabled in (("cache", True), ("nocache", False)):
+            eng = ServingEngine(
+                cfg,
+                params,
+                EngineConfig(
+                    n_slots=2,
+                    max_seq=64,
+                    hbm_capacity_bytes=cap,
+                    prefill_chunk_tokens=8,
+                    prefix_cache=enabled,
+                ),
+            )
+            eng.submit(Request("a", "T", base, 4))
+            eng.run(max_ticks=100)
+            eng.submit(Request("b", "T", longer, 4))
+            out = eng.run(max_ticks=200)
+            outs[mode] = (eng.requests["b"].generated, out)
+        assert outs["cache"][0] == outs["nocache"][0]
+        assert outs["cache"][1]["prefix_cache"]["hit_tokens"] >= len(base)
+        assert outs["nocache"][1]["prefix_cache"]["enabled"] is False
+
+    def test_shared_prompt_lowers_peak_pool(self, small_model):
+        """Equal tenant load, one shared system prompt: dedup must show a
+        hit rate > 0 and a lower pool peak than the no-sharing baseline —
+        the ISSUE's acceptance criterion, as a test."""
+        cfg, params = small_model
+        system = list(range(10, 42))  # 32-token shared system prompt
+        cap = kv_bytes_per_token(cfg) * 16 * 12  # 12-page pool
+        peaks, rates = {}, {}
+        for mode, enabled in (("shared", True), ("baseline", False)):
+            eng = ServingEngine(
+                cfg,
+                params,
+                EngineConfig(
+                    n_slots=4,
+                    max_seq=64,
+                    hbm_capacity_bytes=cap,
+                    prefix_cache=enabled,
+                ),
+            )
+            # one request warms the cache; the rest of the stream arrives
+            # two ticks later (identical schedule for both engines)
+            eng.submit(Request("u0", "tenant0", system + [100], 4))
+            eng.step()
+            eng.step()
+            for i in range(1, 4):
+                eng.submit(
+                    Request(f"u{i}", f"tenant{i}", system + [100 + i], 4)
+                )
+            out = eng.run(max_ticks=300)
+            assert out["failed"] == 0 and out["completed"] == 4
+            peaks[mode] = out["peak_used_fraction"]
+            rates[mode] = out["prefix_cache"].get("token_hit_rate", 0.0)
+        assert rates["shared"] > 0.0
+        assert peaks["shared"] < peaks["baseline"]
+
+    def test_eviction_under_pressure_stays_correct(self, small_model):
+        """A pool far smaller than the distinct-prompt working set forces
+        policy-ordered cold-prefix eviction; everything still completes
+        with zero failures and zero lingering overflow."""
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 16 * 4  # 4-page pool
+        eng = ServingEngine(
+            cfg,
+            params,
+            EngineConfig(
+                n_slots=2,
+                max_seq=64,
+                hbm_capacity_bytes=cap,
+                policy=MursPolicy(MursConfig.for_serving(period=1.0)),
+            ),
+        )
+        for i in range(4):
+            eng.submit(
+                Request(
+                    f"r{i}",
+                    f"T{i}",
+                    list(range(100 + 20 * i, 120 + 20 * i)),
+                    4,
+                )
+            )
+        out = eng.run(max_ticks=400)
+        assert out["failed"] == 0 and out["completed"] == 4
+        assert out["prefix_cache"]["evictions"] > 0
+        assert eng.kv.overflow_pages == 0
+
+    def test_ttft_improves_on_warm_long_prompt(self, small_model):
+        """Skipping prefill must show up as time-to-first-token: the warm
+        repeat of a long prompt beats the cold run."""
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 1000
+        eng = ServingEngine(
+            cfg,
+            params,
+            EngineConfig(
+                n_slots=2,
+                max_seq=64,
+                hbm_capacity_bytes=cap,
+                prefill_chunk_tokens=4,  # long prompt → many chunk ticks
+            ),
+        )
+        prompt = list(range(5, 37))  # 32 tokens, 8 ticks of prefill
+        eng.submit(Request("cold", "T", prompt, 3))
+        eng.run(max_ticks=100)
+        cold_ttft = eng.requests["cold"].first_token_tick - eng.requests[
+            "cold"
+        ].submit_tick
+        eng.submit(Request("warm", "T", prompt, 3))
+        eng.run(max_ticks=200)
+        warm_ttft = eng.requests["warm"].first_token_tick - eng.requests[
+            "warm"
+        ].submit_tick
+        assert warm_ttft < cold_ttft

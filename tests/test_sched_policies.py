@@ -281,3 +281,66 @@ class TestShimCompatibility:
         assert not cfg.fair_share_guard
         assert cfg.exec_fraction == 0.95
         assert cfg.period == 2.0
+
+
+class TestCachePressureHint:
+    """The prefix-cache eviction hint every policy now exposes."""
+
+    def test_base_and_fair_default_to_pure_lru(self):
+        assert BasePolicy().cache_pressure("anyone") == 0.0
+        assert FairPolicy().cache_pressure("anyone") == 0.0
+
+    def test_murs_low_rate_tenants_evict_first(self):
+        pol = MursPolicy(MursConfig.for_serving(period=1.0))
+        pool = MemoryPool(capacity=1e9)  # light pool: propose is a no-op
+        running = [
+            _stats(0, rate=300.0, group="heavy"),
+            _stats(1, rate=10.0, group="light"),
+        ]
+        pol.propose(pool, running, now=0.0)
+        light, heavy = pol.cache_pressure("light"), pol.cache_pressure("heavy")
+        assert light > heavy, "low-usage-rate prefixes must evict first"
+        assert 0.0 <= heavy <= light <= 1.0
+        # unseen groups sit mid-scale so LRU still tie-breaks
+        assert pol.cache_pressure("nobody") == 0.5
+
+    def test_murs_rate_ema_tracks_groups(self):
+        pol = MursPolicy(MursConfig.for_serving(period=1.0))
+        pool = MemoryPool(capacity=1e9)
+        for _ in range(5):
+            pol.propose(pool, [_stats(0, rate=100.0, group="g")], now=0.0)
+        p_before = pol.cache_pressure("g")
+        for _ in range(20):
+            pol.propose(
+                pool,
+                [
+                    _stats(0, rate=1.0, group="g"),
+                    _stats(1, rate=100.0, group="other"),
+                ],
+                now=0.0,
+            )
+        assert pol.cache_pressure("g") > p_before  # g cooled off → evictable
+
+    def test_priority_weight_ordered(self):
+        pol = PriorityPolicy(PriorityConfig(weights={"gold": 4.0}))
+        assert pol.cache_pressure("gold") < pol.cache_pressure("bronze")
+
+    def test_engine_wires_policy_hint_into_eviction(self):
+        """The engine hands the resolved policy's cache_pressure to the KV
+        manager — the trie's eviction order is policy-owned."""
+        from repro.configs import ARCHS
+        from repro.models import init_model
+
+        cfg = ARCHS["internlm2-1.8b"].smoke()
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        pol = PriorityPolicy(PriorityConfig(weights={"A": 4.0}))
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(n_slots=2, max_seq=64,
+                         hbm_capacity_bytes=kv_bytes_per_token(cfg) * 64,
+                         policy=pol),
+        )
+        assert eng.kv.cache_pressure_fn == pol.cache_pressure
+        assert eng.kv.cache_pressure_fn("bronze") == pol.cache_pressure(
+            "bronze"
+        )
