@@ -12,10 +12,17 @@ Gated metrics, per engine policy (fair / murs / priority):
     p99_ticks_to_finish            lower is better
     throughput_tokens_per_tick     higher is better
 
+and per tiered leg (reactive / proactive):
+
+    spilled_bytes                  lower is better (HBM→host traffic)
+    disk_spill_bytes               lower is better (the paper's spill)
+    throughput_tokens_per_tick     higher is better
+
 plus the prefix-cache acceptance bits (hit rate positive, shared peak
-below the no-sharing baseline) as hard pass/fail rows — those are
-correctness claims of the artifact, not noisy timings, so they gate at
-any regression.
+below the no-sharing baseline) and the tiering bit (proactive demotion
+at least halves disk spill at equal load) as hard pass/fail rows —
+those are correctness claims of the artifact, not noisy timings, so
+they gate at any regression.
 
 A policy that completed nothing reports ``None`` percentiles; ``None``
 where the baseline had a number is a hard failure (the policy stopped
@@ -39,11 +46,54 @@ GATED = [
     ("throughput_tokens_per_tick", "higher_is_better"),
 ]
 
+#: tiered-leg metrics, gated per mode (reactive / proactive)
+TIER_GATED = [
+    ("spilled_bytes", "lower_is_better"),
+    ("disk_spill_bytes", "lower_is_better"),
+    ("throughput_tokens_per_tick", "higher_is_better"),
+]
+
+#: tiered-leg acceptance booleans (hard pass/fail, no threshold)
+TIER_WIN_BITS = ("disk_spill_halved", "compression_measured")
+
 
 def _delta_pct(base: float, cur: float) -> float:
     if base == 0:
         return 0.0 if cur == 0 else float("inf")
     return 100.0 * (cur - base) / base
+
+
+def _compare_row(
+    label, metric, direction, base, cur, threshold_pct, rows, failures,
+    none_fails=False,
+):
+    """One gated comparison: appends to ``rows`` and, on regression, to
+    ``failures`` — shared by the engine-policy and tiered-leg loops so
+    the threshold semantics can never diverge between them."""
+    if base is None:
+        rows.append((label, metric, base, cur, None, "no baseline"))
+        return
+    if cur is None:
+        if none_fails:
+            rows.append((label, metric, base, cur, None, "FAIL"))
+            failures.append(
+                f"{label}.{metric}: baseline {base}, current None "
+                "(policy completed nothing)"
+            )
+        return
+    delta = _delta_pct(base, cur)
+    if direction == "lower_is_better":
+        regressed = delta > threshold_pct
+    else:
+        regressed = delta < -threshold_pct
+    rows.append(
+        (label, metric, base, cur, delta, "FAIL" if regressed else "ok")
+    )
+    if regressed:
+        failures.append(
+            f"{label}.{metric}: {base} → {cur} "
+            f"({delta:+.1f}% vs ±{threshold_pct:.0f}% gate)"
+        )
 
 
 def compare(baseline: dict, current: dict, threshold_pct: float):
@@ -57,29 +107,23 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
         b_row = baseline["engine"][pol]
         c_row = current["engine"][pol]
         for metric, direction in GATED:
-            base, cur = b_row.get(metric), c_row.get(metric)
-            if base is None:
-                rows.append((pol, metric, base, cur, None, "no baseline"))
-                continue
-            if cur is None:
-                rows.append((pol, metric, base, cur, None, "FAIL"))
-                failures.append(
-                    f"{pol}.{metric}: baseline {base}, current None "
-                    "(policy completed nothing)"
-                )
-                continue
-            delta = _delta_pct(base, cur)
-            if direction == "lower_is_better":
-                regressed = delta > threshold_pct
-            else:
-                regressed = delta < -threshold_pct
-            status = "FAIL" if regressed else "ok"
-            rows.append((pol, metric, base, cur, delta, status))
-            if regressed:
-                failures.append(
-                    f"{pol}.{metric}: {base} → {cur} "
-                    f"({delta:+.1f}% vs ±{threshold_pct:.0f}% gate)"
-                )
+            _compare_row(
+                pol, metric, direction, b_row.get(metric),
+                c_row.get(metric), threshold_pct, rows, failures,
+                none_fails=True,
+            )
+    # tiered-leg metrics: same threshold semantics, per mode
+    tiers_b = baseline.get("tiering", {})
+    tiers_c = current.get("tiering", {})
+    for mode in ("reactive", "proactive"):
+        b_row, c_row = tiers_b.get(mode), tiers_c.get(mode)
+        if not isinstance(b_row, dict) or not isinstance(c_row, dict):
+            continue
+        for metric, direction in TIER_GATED:
+            _compare_row(
+                f"tier.{mode}", metric, direction, b_row.get(metric),
+                c_row.get(metric), threshold_pct, rows, failures,
+            )
     # prefix-cache acceptance bits: hard booleans, no threshold
     wins = current.get("prefix_cache", {}).get("sharing_wins", {})
     for bit in ("hit_rate_positive", "peak_pool_lower"):
@@ -91,6 +135,17 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
             )
             if not ok:
                 failures.append(f"prefix_cache.{bit} is False")
+    # tiering acceptance bits: the paper's spill claim is a hard gate
+    tier_wins = tiers_c.get("tiering_wins", {})
+    for bit in TIER_WIN_BITS:
+        if bit in tier_wins:
+            ok = bool(tier_wins[bit])
+            rows.append(
+                ("tiering", bit, True, tier_wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"tiering.{bit} is False")
     return rows, failures
 
 

@@ -129,6 +129,107 @@ def _collect_prefix_sharing(cfg, params, debug: bool = False) -> dict:
     return out
 
 
+def _collect_tiering(cfg, params, debug: bool = False) -> dict:
+    """The TIERED leg: reactive-only vs proactive tiering at equal load.
+
+    Same arrival stream, same tier hierarchy (small host tier, modeled
+    PCIe link, int8 compression), two policies: FAIR has no
+    ``demotion_pressure`` so it only ever pays the REACTIVE spill path —
+    big synchronous demotion bursts that overflow the host tier into
+    disk; MURS suspends heavy tenants and proactively demotes their
+    frozen KV page by page, so the same load fits the fast tiers.  The
+    disk-tier traffic is the paper's "data spilling" metric (Table III:
+    MURS cuts it ~90%).
+
+    This leg always runs the same BURST stream (debug's shrunken waves
+    are too light to pressure the hierarchy at all — both legs would
+    record zero spill and the acceptance bit would be vacuous): four
+    heavy decodes and six interactive requests arriving within three
+    ticks of each other, the paper's service-burst shape.  FAIR admits
+    the burst wholesale and its reactive demotions park the whole
+    overcommit below HBM at once; MURS queues at the red line, suspends
+    the heavy tail early (small frozen buffers), and parks only those."""
+    del debug
+    page_bytes = kv_bytes_per_token(cfg) * 16
+
+    def _burst_arrivals():
+        evs = [
+            (0, Request(f"A{i}", "A", list(range(10, 18)), 40))
+            for i in range(4)
+        ]
+        evs += [
+            (i % 3, Request(f"B{i}", "B", list(range(30, 34)), 6))
+            for i in range(6)
+        ]
+        return sorted(evs, key=lambda e: e[0])
+
+    out = {}
+    legs = (
+        ("reactive", lambda: FairPolicy()),
+        ("proactive", lambda: MursPolicy(MursConfig.for_serving(period=1.0))),
+    )
+    for mode, make_policy in legs:
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(
+                n_slots=4, max_seq=64,
+                hbm_capacity_bytes=page_bytes * 5,  # 5-page pool
+                policy=make_policy(),
+                # host tier ~4 compressed pages at rest: the reactive
+                # burst parks more than it fits and overflows to disk;
+                # early page-granular frozen demotion parks less at once
+                host_capacity_bytes=page_bytes * 2.0,
+                # one raw page per tick (half a tick per compressed
+                # page): slow enough that reactive bursts pay visible
+                # transfer stalls, fast enough that nobody livelocks
+                pcie_bytes_per_tick=page_bytes * 1.0,
+                # eager tiering: demote within the policy's own band
+                # (the engine default only catches excursions above it)
+                demote_threshold=0.8,
+                # the dedup cache would blur the frozen-KV signal — this
+                # leg isolates the demotion mechanism (the prefix leg
+                # above measures sharing on its own)
+                prefix_cache=False,
+            ),
+        )
+        res = _run_stream(eng, _burst_arrivals())
+        t = res["tiers"]
+        out[mode] = {
+            "completed": res["completed"],
+            "failed": res["failed"],
+            "suspensions": res["suspensions"],
+            "offload_count": res["offload_events"],
+            "proactive_demotions": res["proactive_demotions"],
+            "spilled_bytes": t["spilled_bytes"],
+            "wire_bytes": t["wire_bytes"],
+            "disk_spill_bytes": t["disk_spill_bytes"],
+            "disk_read_bytes": t["disk_read_bytes"],
+            "host_peak_bytes": t["host_peak_bytes"],
+            "compression_ratio": round(t["compression_ratio"], 3),
+            "max_quant_error": t["max_quant_error"],
+            "transfer_stall_ticks": res["transfer_stall_ticks"],
+            "stall_ticks": res["stall_ticks"],
+            "makespan_ticks": res["ticks"],
+            "tokens_generated": res["tokens_generated"],
+            "throughput_tokens_per_tick": round(
+                res["tokens_generated"] / max(res["ticks"], 1), 3
+            ),
+        }
+    rx, px = out["reactive"], out["proactive"]
+    out["tiering_wins"] = {
+        # the ISSUE's acceptance criteria, recorded in the artifact:
+        # proactive tiering must at least HALVE disk spill at equal load
+        "disk_spill_halved": (
+            rx["disk_spill_bytes"] > 0
+            and px["disk_spill_bytes"] <= 0.5 * rx["disk_spill_bytes"]
+        ),
+        "compression_measured": px["compression_ratio"] > 1.5
+        or rx["compression_ratio"] > 1.5,
+        "served_no_worse": px["completed"] >= rx["completed"],
+    }
+    return out
+
+
 def _policies():
     return (
         ("fair", lambda: FairPolicy()),
@@ -218,6 +319,9 @@ def collect(debug: bool = False) -> dict:
     # prefix-sharing leg: shared system prompt, cache on vs off at equal
     # tenant load (the ISSUE acceptance record)
     record["prefix_cache"] = _collect_prefix_sharing(cfg, params, debug)
+    # tiered leg: reactive-only vs proactive demotion at equal load — the
+    # paper's data-spilling claim, measured as disk-tier traffic
+    record["tiering"] = _collect_tiering(cfg, params, debug)
     # online §III classification of a decode request (MURS engine, no
     # pressure) — reuses the already-initialized model
     probe_eng = ServingEngine(
@@ -287,6 +391,21 @@ def main() -> dict:
     emit("serve.prefix.ttft_p50.shared", pc["shared"]["ttft_p50_ticks"])
     emit("serve.prefix.ttft_p50.baseline",
          pc["baseline_no_sharing"]["ttft_p50_ticks"])
+    tr = record["tiering"]
+    for mode in ("reactive", "proactive"):
+        row = tr[mode]
+        emit(f"serve.tier.{mode}.spilled_bytes", row["spilled_bytes"],
+             "raw bytes demoted HBM→host")
+        emit(f"serve.tier.{mode}.disk_spill_bytes", row["disk_spill_bytes"],
+             "paper Table III data spilling: traffic past the host tier")
+        emit(f"serve.tier.{mode}.compression_ratio", row["compression_ratio"],
+             "int8 host tier: raw/wire bytes")
+        emit(f"serve.tier.{mode}.transfer_stall_ticks",
+             row["transfer_stall_ticks"], "request-ticks waiting on tier DMA")
+        emit(f"serve.tier.{mode}.completed", row["completed"])
+    emit("serve.tier.disk_spill_halved",
+         int(tr["tiering_wins"]["disk_spill_halved"]),
+         "proactive tiering halves disk spill at equal load")
     emit("serve.murs.decode_memory_model", record["probe_memory_model"],
          "paper SIII online classification (attention decode = linear)")
     return record

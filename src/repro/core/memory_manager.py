@@ -51,12 +51,18 @@ class MemoryPool:
 
     @property
     def used_fraction(self) -> float:
-        return self.used_bytes / self.capacity if self.capacity > 0 else 1.0
+        """An EMPTY zero-capacity pool reads 0.0 (not permanently full):
+        constant-state deployments legitimately run with no pool at all."""
+        if self.capacity > 0:
+            return self.used_bytes / self.capacity
+        return 0.0 if not self.used_bytes else 1.0
 
     @property
     def live_fraction(self) -> float:
         """The MURS pressure indicator: long-living bytes / capacity."""
-        return self.live_bytes / self.capacity if self.capacity > 0 else 1.0
+        if self.capacity > 0:
+            return self.live_bytes / self.capacity
+        return 0.0 if not self.live_bytes else 1.0
 
     # ------------------------------------------------------------- mutation
     def add_live(self, owner: str, nbytes: float) -> None:

@@ -6,8 +6,10 @@ Round-robin core handout across tenants (inherited from
 and ``admission_headroom`` is 1.0, so the runtimes apply stock semantics
 — admit until the pool is full, then resolve overcommit reactively
 (spill / offload-to-host, or OOM-style hard failure when no spill path
-exists).  The ``cache_pressure`` hint stays at the BasePolicy default of
-0.0 for every tenant: the stock prefix-cache eviction order is pure LRU.
+exists).  The ``cache_pressure`` and ``demotion_pressure`` hints stay at
+the BasePolicy default of 0.0 for every tenant: the stock prefix-cache
+eviction order is pure LRU, and frozen KV is never demoted proactively —
+reactive-only tiering is exactly what "stock" means.
 """
 
 from __future__ import annotations

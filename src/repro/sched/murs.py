@@ -335,16 +335,10 @@ class MursPolicy(BasePolicy):
         return t.progress > 1e-9 and t.projected_total > fair_share
 
     # ----------------------------------------------------------- cache hint
-    def cache_pressure(self, group: str) -> float:
-        """Evictability of ``group``'s cold cached prefixes, in [0, 1].
-
-        MURS reads the memory-usage rate the other way around for CACHED
-        data: a LOW-rate tenant's prefix is cheap to regrow (few bytes per
-        token re-prefilled) and shields little future allocation, so it
-        evicts FIRST; a high-rate tenant's cached prefix spares the pool
-        the most growth and is kept longest.  Unseen groups sit in the
-        middle (0.5) so the hint never starves LRU of a tie-break.
-        """
+    def _inverse_rate_score(self, group: str) -> float:
+        """1 − rate/top over the per-group usage-rate EMA, in [0, 1]:
+        LOW-rate tenants score HIGH.  Unseen groups sit in the middle
+        (0.5) so the hint never starves LRU / size tie-breaks."""
         rate = self._group_rate.get(group)
         if rate is None or not self._group_rate:
             return 0.5
@@ -352,6 +346,31 @@ class MursPolicy(BasePolicy):
         if top <= 0.0:
             return 0.5
         return 1.0 - min(rate / top, 1.0)
+
+    def cache_pressure(self, group: str) -> float:
+        """Evictability of ``group``'s cold cached prefixes, in [0, 1].
+
+        MURS reads the memory-usage rate the other way around for CACHED
+        data: a LOW-rate tenant's prefix is cheap to regrow (few bytes per
+        token re-prefilled) and shields little future allocation, so it
+        evicts FIRST; a high-rate tenant's cached prefix spares the pool
+        the most growth and is kept longest.
+        """
+        return self._inverse_rate_score(group)
+
+    # -------------------------------------------------------- demotion hint
+    def demotion_pressure(self, group: str) -> float:
+        """How eagerly ``group``'s FROZEN KV demotes to the host tier,
+        in [0, 1] — the usage-rate classes of §III applied to tier
+        placement.  A low-rate tenant's suspended pages sit frozen the
+        longest (its requests resume into slow growth), so parking them
+        in host memory costs the least and frees HBM for the heavy
+        tenants' growth — demoting proactively, page by page, is what
+        keeps the reactive spill path (and the disk tier behind it) from
+        ever firing.  Every tenant scores > 0 under MURS: frozen KV is
+        by definition demotable, the hint only orders who goes first.
+        """
+        return max(self._inverse_rate_score(group), 0.1)
 
     # ------------------------------------------------------------ resume API
     def on_task_complete(self, task_id: Optional[str] = None) -> Optional[str]:

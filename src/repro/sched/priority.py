@@ -103,6 +103,12 @@ class PriorityPolicy(BasePolicy):
         score in (0, 1) and monotone in weight)."""
         return 1.0 / (1.0 + self.weight_of(group))
 
+    def demotion_pressure(self, group: str) -> float:
+        """Weight-ordered tier placement: a low-weight tenant's frozen KV
+        demotes to the host tier first (same score as cache eviction —
+        both hints rank who pays for pressure)."""
+        return self.cache_pressure(group)
+
     # -------------------------------------------------------------- pressure
     def propose(
         self,

@@ -20,7 +20,7 @@ plus one placement hook:
         how free execution slots are offered to tenants/jobs.  FAIR's
         round-robin cursor lives HERE now, not inlined in the executor.
 
-and one cache-eviction hint:
+and two memory-placement hints:
 
     cache_pressure(group) → evictability score for the group's COLD cached
         data (the serving engine's prefix-cache pages).  Higher = evict
@@ -28,6 +28,15 @@ and one cache-eviction hint:
         group (pure LRU).  MURS returns high pressure for LOW-usage-rate
         tenants — their prefixes regrow cheaply, while a heavy tenant's
         cached prefix spares the pool the most future allocation.
+
+    demotion_pressure(group) → sibling hint for the TIER hierarchy: how
+        eagerly the group's FROZEN (suspended) KV pages should demote
+        HBM → host, proactively, before the reactive spill path fires.
+        0.0 (the base default) means never-proactively — the stock
+        baseline only pays reactive spills.  MURS marks low-usage-rate
+        tenants: their frozen pages are the cheapest to park in host
+        memory and the paper's ~90% spill reduction is exactly this
+        demote-early-by-class behaviour.
 
 Runtimes interrogate declarative attributes instead of branching on the
 policy's type: ``proactive`` (True → the policy prevents overcommit via
@@ -97,6 +106,8 @@ class SchedulingPolicy(Protocol):
 
     def cache_pressure(self, group: str) -> float: ...
 
+    def demotion_pressure(self, group: str) -> float: ...
+
     @property
     def suspended_queue(self) -> Sequence[str]: ...
 
@@ -158,6 +169,13 @@ class BasePolicy:
     def cache_pressure(self, group: str) -> float:
         """Evictability of ``group``'s cold cached pages: 0.0 for everyone
         → the cache falls back to pure LRU (the stock baseline)."""
+        return 0.0
+
+    # --------------------------------------------------------- demotion hint
+    def demotion_pressure(self, group: str) -> float:
+        """How eagerly ``group``'s frozen KV should demote to the host
+        tier ahead of need: 0.0 for everyone → never proactively (the
+        stock baseline only ever pays the reactive spill path)."""
         return 0.0
 
     # ------------------------------------------------------------- placement

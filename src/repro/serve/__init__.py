@@ -1,21 +1,26 @@
 from .engine import EngineConfig, Request, ServingEngine
 from .kv_cache import (
     CACHE_OWNER,
+    DEMOTED,
     PageBlockAllocator,
     PagedKVManager,
     PrefixCache,
     constant_state_bytes,
     kv_bytes_per_token,
 )
+from .tiers import TierConfig, TieredKVStore
 
 __all__ = [
     "CACHE_OWNER",
+    "DEMOTED",
     "EngineConfig",
     "Request",
     "ServingEngine",
     "PageBlockAllocator",
     "PagedKVManager",
     "PrefixCache",
+    "TierConfig",
+    "TieredKVStore",
     "constant_state_bytes",
     "kv_bytes_per_token",
 ]

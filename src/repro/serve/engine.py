@@ -16,12 +16,26 @@ for suspension stop being scheduled (their KV pages stay resident — exactly
 Spark's suspended tasks); one suspended request resumes per completion
 (FIFO, starvation-free under MURS) and all resume when pressure drops below
 yellow.  :class:`FairPolicy` is the stock baseline: no pressure response,
-so the engine's reactive path (offload-to-host, or hard failure when
-offload is disabled) fires when the pool overcommits.  Admission is
-uniform — every policy queues at the door; what differs is the admission
-line (``admission_headroom``) and how fast headroom appears (a suspending
-policy swaps frozen KV to host, a pressure-oblivious one waits for
-completions or pays the reactive path).
+so the engine's reactive path (page-granular demotion of running work, or
+hard failure when demotion is disabled) fires when the pool overcommits.
+Admission is uniform — every policy queues at the door; what differs is
+the admission line (``admission_headroom``) and how fast headroom appears
+(a suspending policy demotes frozen KV to the host tier, a
+pressure-oblivious one waits for completions or pays the reactive path).
+
+TIERED KV (:mod:`repro.serve.tiers`): below the HBM page pool sit a host
+tier with REAL capacity and int8-compressed page storage
+(``repro.dist.compression.quantize``/``dequantize`` — the page's actual KV
+values round-trip through the codes), and a disk tier whose traffic is the
+paper's "data spilling" metric.  Demotion and promotion are page-granular
+and ASYNCHRONOUS over a modeled PCIe link (latency ∝ compressed bytes, so
+compression directly buys ticks): suspended-frozen pages and cold cached
+prefixes demote individually while decode continues on resident pages — a
+request stalls only when it is actually scheduled against a non-resident
+page.  ``SchedulingPolicy.demotion_pressure(group)`` (sibling of
+``cache_pressure``) lets :class:`MursPolicy` demote low-usage-rate
+tenants' frozen KV *proactively*, before the reactive spill path fires —
+the mechanism behind the paper's ~90% spill reduction.
 
 The hot loop is CONTINUOUS BATCHING with CHUNKED PREFILL: prompts are
 consumed in token-budgeted chunks (``prefill_chunk_tokens`` per tick)
@@ -52,16 +66,15 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.configs.base import ArchConfig
 from repro.core.memory_manager import MemoryPool
 from repro.core.sampler import Sampler
 from repro.sched import FairPolicy, MursConfig, MursPolicy, SchedulingPolicy
 from repro.models import decode_step, init_cache, prefill
 from repro.serve.kv_cache import CACHE_OWNER, PagedKVManager
-
-#: Request.reload_at sentinel — offloaded while suspended; reload is gated
-#: on the policy resuming the request, not on a timer.
-WAIT_FOR_RESUME = -2
+from repro.serve.tiers import TierConfig
 
 
 @dataclass
@@ -79,8 +92,7 @@ class Request:
     #: MURS §III classification of this request's memory behaviour, as
     #: measured online by the sampler (constant/sub_linear/linear/super_linear)
     memory_model: str = "constant"
-    reload_at: int = -1  # tick when an offloaded request finishes reloading
-    offloads: int = 0
+    offloads: int = 0  # times this request was a reactive-demotion victim
     #: prompt tokens covered by a prefix-cache match (0 = cold)
     cached_tokens: int = 0
     #: KV-snapshot key of the matched prefix (the caching prompt's tokens)
@@ -131,10 +143,35 @@ class EngineConfig:
     #: prefill token budget per engine tick — prompts longer than this are
     #: split into chunks interleaved with decode ticks (continuous batching)
     prefill_chunk_tokens: int = 64
-    #: host-DRAM offload ("spill") instead of hard failure when the pool
-    #: overcommits; reloading costs this many ticks per offloaded request
+    #: demote running work to the tier hierarchy instead of hard failure
+    #: when the pool overcommits (False → OOM semantics, the paper's OME)
     offload_enabled: bool = True
-    offload_reload_ticks: int = 8
+    #: host-tier capacity for demoted pages (bytes AT REST, compressed);
+    #: None → 4× the HBM pool
+    host_capacity_bytes: Optional[float] = None
+    #: HBM↔host link rate in bytes/tick; None → hbm_capacity/8 (a 1/8-pool
+    #: transfer per tick) — compression halves the bytes that cross it
+    pcie_bytes_per_tick: Optional[float] = None
+    #: disk→host read rate; None → a quarter of the PCIe rate
+    disk_bytes_per_tick: Optional[float] = None
+    #: int8-compress demoted pages in the host tier
+    tier_compress: bool = True
+    #: pool fraction above which the engine PROACTIVELY demotes (frozen
+    #: KV of tenants the policy's ``demotion_pressure`` marks, then cold
+    #: cached pages) — the "before the reactive path" knob.  The default
+    #: sits just ABOVE MursPolicy's red line (0.8): out of the box only
+    #: excursions past it trigger demotion, so resumes rarely wait on
+    #: promotion DMAs; deployments that want eager tiering (the
+    #: benchmark's proactive leg) lower it to the policy's band
+    demote_threshold: float = 0.85
+    #: max page demotions initiated per proactive pass (bounds churn)
+    demote_batch_pages: int = 4
+    #: the reactive path frees DOWN TO this pool fraction, not merely out
+    #: of overcommit: stopping at exactly-full leaves zero free pages, so
+    #: promotions (and therefore every stalled victim) starve — the
+    #: classic all-slots-stalled wedge.  Only applies when demotion is
+    #: enabled; the hard-failure path still fires on true overcommit.
+    reactive_watermark: float = 0.9
     #: prefix-sharing paged KV cache: admission matches prompts against the
     #: token trie, cached pages are shared by refcount (COW on append) and
     #: prefill is skipped up to the first uncached token
@@ -162,9 +199,28 @@ class ServingEngine:
         self.params = params
         self.ecfg = ecfg
         self.pool = MemoryPool(capacity=ecfg.hbm_capacity_bytes)
+        pcie = (
+            ecfg.pcie_bytes_per_tick
+            if ecfg.pcie_bytes_per_tick is not None
+            else max(ecfg.hbm_capacity_bytes / 8.0, 1.0)
+        )
         self.kv = PagedKVManager(
             capacity_bytes=ecfg.hbm_capacity_bytes,
             enable_prefix_cache=ecfg.prefix_cache,
+            tier_config=TierConfig(
+                host_capacity_bytes=(
+                    ecfg.host_capacity_bytes
+                    if ecfg.host_capacity_bytes is not None
+                    else 4.0 * ecfg.hbm_capacity_bytes
+                ),
+                pcie_bytes_per_tick=pcie,
+                disk_bytes_per_tick=(
+                    ecfg.disk_bytes_per_tick
+                    if ecfg.disk_bytes_per_tick is not None
+                    else max(pcie / 4.0, 1.0)
+                ),
+                compress=ecfg.tier_compress,
+            ),
         )
         self.policy: SchedulingPolicy = ecfg.resolve_policy()
         # eviction order consults the active policy: LRU × cache_pressure
@@ -186,9 +242,15 @@ class ServingEngine:
         #: notion of available memory); this is the dedup'd live demand
         self.peak_demand_fraction = 0.0
         self.chunked_prefill_ticks = 0
-        self.reactive_offloads = 0  # forced spill of RUNNING work (stock path)
-        self.swap_outs = 0  # suspended-KV swapped to host to free pages
+        self.reactive_offloads = 0  # reactive-demotion victims (stock path)
+        self.swap_outs = 0  # frozen (suspended) pages demoted to the tiers
+        self.proactive_demotions = 0  # pages demoted by the policy hint
         self.stall_ticks = 0  # request-ticks lost to non-resident KV
+        self.transfer_stall_ticks = 0  # … of which waiting on tier DMA
+        #: per-page KV payloads captured when a request froze (slot still
+        #: attached) — handed to the host tier when its pages demote, so
+        #: the int8 round-trip compresses REAL values, not placeholders
+        self._frozen_payloads: Dict[str, Dict[int, np.ndarray]] = {}
         self.prefix_hits = 0  # requests that skipped prefill via the trie
         self.prefix_hit_tokens = 0  # prompt tokens whose prefill was skipped
         #: KV snapshots backing cached prefixes: snap_key (the caching
@@ -332,7 +394,10 @@ class ServingEngine:
     # ------------------------------------------------------------ accounting
     def _update_pool(self) -> None:
         for rid, req in self._live.items():
-            if req.state in ("prefill", "decoding", "suspended"):
+            if req.state in ("prefill", "decoding", "suspended", "offloaded"):
+                # offloaded requests still own HBM bytes until the last
+                # page demotes (and again as promotions land) — skipping
+                # them leaves stale live entries pinning the pool
                 self.pool.set_live(rid, self.kv.request_bytes(rid))
         if self.ecfg.prefix_cache:
             # cold cached prefixes are live pool bytes too — the policy
@@ -366,13 +431,18 @@ class ServingEngine:
         completions or pays the reactive spill path.
         """
         free_slots = [i for i, r in enumerate(self._slot_req) if r is None]
-        # resumed / reloaded requests re-acquire a batch row first — their
+        # resumed / promoted requests re-acquire a batch row first — their
         # slot cache is rebuilt by replaying feed_tokens through the
-        # chunked-prefill path (their page-pool accounting never moved)
-        while self._restore and free_slots:
-            req = self.requests[self._restore.pop(0)]
-            if req.state == "offloaded":
-                self.kv.register(req.request_id, self.cfg)
+        # chunked-prefill path (their page-pool accounting never moved; a
+        # request whose pages are still demoted waits here, resident-gated,
+        # while the promotion pass DMAs them back)
+        cursor = 0
+        while cursor < len(self._restore) and free_slots:
+            req = self.requests[self._restore[cursor]]
+            if not self.kv.resident(req.request_id):
+                cursor += 1
+                continue
+            self._restore.pop(cursor)
             if self.ecfg.prefix_cache:
                 # replay can skip prefill too: a reloaded request re-shares
                 # cached pages; a suspended one (pages retained) just reuses
@@ -396,6 +466,7 @@ class ServingEngine:
             self._slot_req[slot] = req.request_id
             req.state = "prefill"
             req.pos = 0
+            self._frozen_payloads.pop(req.request_id, None)
             # replay rewinds processed-token counts: restart the rate
             # estimator so the sampler never sees progress go backwards
             # (a stale window would report rate 0 and invert MURS's
@@ -450,15 +521,17 @@ class ServingEngine:
                 if not self.kv.evict_cache(1, protect=protected):
                     break
                 self._update_pool()
-            # frozen suspended KV pins the pool while slots idle — swap
-            # victims to host while that can actually open the door
+            # frozen suspended KV pins the pool while slots idle — demote
+            # it PAGE BY PAGE while that can actually open the door (no
+            # more bytes leave HBM than the deficit requires)
             while (
                 self.pool.used_bytes + prompt_bytes > headroom
                 and self.pool.used_bytes - self._frozen_bytes() + prompt_bytes
                 <= headroom
             ):
-                if not self._swap_out_frozen():
+                if not self._demote_frozen_page():
                     break
+                self._update_pool()
             if self.pool.used_bytes + prompt_bytes > headroom:
                 break  # pool-bound: nobody else fits this tick either
             self.queue.remove(req)
@@ -526,6 +599,82 @@ class ServingEngine:
         page = self.kv.page_tokens
         for idx in range(start_pos // page, (end_pos - 1) // page + 1):
             self.kv.make_private(req.request_id, idx)
+
+    # ---------------------------------------------------------- tier payloads
+    def _page_span(self, page_index: int) -> Tuple[int, int]:
+        a = page_index * self.kv.page_tokens
+        return a, min(a + self.kv.page_tokens, self.ecfg.max_seq)
+
+    def _seq_leaf(self, x) -> bool:
+        """True for cache leaves carrying a per-position axis at ``-2``
+        (attention K/V ``[..., seq, hd]``, MLA latents ``[seq, rank]``) —
+        the leaves a token-span page physically owns.  Constant-state
+        leaves (mamba, ring buffers) have no such axis and never demote."""
+        return x.ndim >= 2 and x.shape[-2] == self.ecfg.max_seq
+
+    def _page_payload(self, slot: int, page_index: int) -> Optional[np.ndarray]:
+        """The REAL bytes of one page: every cache value for the page's
+        token span, flattened f32 — what the host tier int8-compresses."""
+        a, b = self._page_span(page_index)
+        if a >= b:
+            return None
+        parts = []
+        for leaf in jax.tree_util.tree_leaves(self._caches["unit"]):
+            x = leaf[:, slot]
+            if self._seq_leaf(x):
+                parts.append(np.asarray(x[..., a:b, :], np.float32).ravel())
+        for leaf in jax.tree_util.tree_leaves(self._caches["suffix"]):
+            x = leaf[slot]
+            if self._seq_leaf(x):
+                parts.append(np.asarray(x[..., a:b, :], np.float32).ravel())
+        if not parts:
+            return None
+        return np.concatenate(parts)
+
+    def _install_page_payload(
+        self, slot: int, page_index: int, payload: np.ndarray
+    ) -> None:
+        """Inverse of :meth:`_page_payload`: write the (dequantized)
+        page span back into the slot cache — the lossy int8 round-trip
+        lands in the values decode actually attends over."""
+        a, b = self._page_span(page_index)
+        if a >= b:
+            return
+        off = 0
+        u_leaves, u_def = jax.tree_util.tree_flatten(self._caches["unit"])
+        for i, leaf in enumerate(u_leaves):
+            x = leaf[:, slot]
+            if not self._seq_leaf(x):
+                continue
+            span = x[..., a:b, :]
+            n = int(np.prod(span.shape))
+            vals = payload[off : off + n].reshape(span.shape)
+            off += n
+            idx = (
+                (slice(None), slot)
+                + (slice(None),) * (leaf.ndim - 4)
+                + (slice(a, b), slice(None))
+            )
+            u_leaves[i] = leaf.at[idx].set(vals.astype(leaf.dtype))
+        s_leaves, s_def = jax.tree_util.tree_flatten(self._caches["suffix"])
+        for i, leaf in enumerate(s_leaves):
+            x = leaf[slot]
+            if not self._seq_leaf(x):
+                continue
+            span = x[..., a:b, :]
+            n = int(np.prod(span.shape))
+            vals = payload[off : off + n].reshape(span.shape)
+            off += n
+            idx = (
+                (slot,)
+                + (slice(None),) * (leaf.ndim - 3)
+                + (slice(a, b), slice(None))
+            )
+            s_leaves[i] = leaf.at[idx].set(vals.astype(leaf.dtype))
+        new = dict(self._caches)
+        new["unit"] = jax.tree_util.tree_unflatten(u_def, u_leaves)
+        new["suffix"] = jax.tree_util.tree_unflatten(s_def, s_leaves)
+        self._caches = new
 
     # -------------------------------------------------------------- prefill
     def _install_prefill(self, req: Request, tokens: List[int]) -> Any:
@@ -648,7 +797,9 @@ class ServingEngine:
             if req.state != "prefill":
                 continue
             if not self.kv.resident(rid):
-                self.stall_ticks += 1  # KV partly in host memory: wait
+                self.stall_ticks += 1  # KV not fully in HBM: wait
+                if self.kv.has_demoted(rid):
+                    self.transfer_stall_ticks += 1  # tier DMA pending
                 continue
             if req.pos == 0 and req.cached_tokens > 0:
                 # prefix-cache hit: KV for the matched tokens installs
@@ -711,9 +862,12 @@ class ServingEngine:
             if rid is None or self.requests[rid].state != "decoding":
                 continue
             if not self.kv.resident(rid):
-                # tokens on overflow pages live in host DRAM — attention
-                # cannot read them; the request stalls until reclaim()
+                # tokens on overflow or demoted pages are not in HBM —
+                # attention cannot read them; the request stalls until
+                # reclaim() / promotion pages them back in
                 self.stall_ticks += 1
+                if self.kv.has_demoted(rid):
+                    self.transfer_stall_ticks += 1
                 continue
             active.append((i, self.requests[rid]))
         if not active:
@@ -752,6 +906,7 @@ class ServingEngine:
         self.pool.release_owner(req.request_id)
         self.kv.release(req.request_id)
         self.sampler.forget(req.request_id)
+        self._frozen_payloads.pop(req.request_id, None)
         rid = self.policy.on_task_complete(req.request_id)
         if rid is not None:
             self._resume(rid)
@@ -786,6 +941,14 @@ class ServingEngine:
             if req.state in ("decoding", "prefill"):
                 req.state = "suspended"
                 self.suspensions += 1
+                if req.slot >= 0:
+                    # capture the frozen pages' REAL KV values while the
+                    # slot is still attached: if the policy later demotes
+                    # them, the host tier compresses these bytes
+                    self._frozen_payloads[rid] = {
+                        idx: self._page_payload(req.slot, idx)
+                        for idx in self.kv.demotable_indices(rid)
+                    }
                 self._release_slot(req)
         for rid in decision.resume:
             self._resume(rid)
@@ -803,12 +966,11 @@ class ServingEngine:
         if req is None:
             return
         if req.state == "suspended":
-            # re-acquire a batch row; the slot cache is rebuilt by replay
+            # re-acquire a batch row; the slot cache is rebuilt by replay.
+            # If frozen pages were demoted, the promotion pass DMAs them
+            # back first (the restore loop is residency-gated).
             if rid not in self._restore:
                 self._restore.append(rid)
-        elif req.state == "offloaded" and req.reload_at == WAIT_FOR_RESUME:
-            # swapped out while suspended: start the PCIe reload now
-            req.reload_at = self.tick + self.ecfg.offload_reload_ticks
 
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
@@ -820,18 +982,16 @@ class ServingEngine:
         )
         if self.tick % period_ticks == 0:
             self._policy_pass()
+        self._proactive_demotion()
         self._resolve_overcommit()
-        # offloaded requests finish their PCIe reload and queue for a batch
-        # row.  reload_at == WAIT_FOR_RESUME means the request was swapped
-        # out while suspended: it reloads only once the policy resumes it.
-        for r in self._live.values():
-            if (
-                r.state == "offloaded"
-                and r.reload_at != WAIT_FOR_RESUME
-                and self.tick >= r.reload_at
-                and r.request_id not in self._restore
-            ):
-                self._restore.append(r.request_id)
+        # advance the tier hierarchy: completed promotions swap back into
+        # page tables; pages a slot is still attached to get their
+        # (dequantized) values written back into the cache
+        for rid, idx, payload in self.kv.tick_tiers(float(self.tick)):
+            req = self.requests.get(rid)
+            if req is not None and req.slot >= 0 and payload is not None:
+                self._install_page_payload(req.slot, idx, payload)
+        self._promotion_pass()
         self.kv.reclaim()
         if (
             self.ecfg.prefix_cache
@@ -851,86 +1011,257 @@ class ServingEngine:
             if r.state == "suspended" and r.request_id not in self._restore
         )
 
-    def _swap_out_frozen(self) -> bool:
-        """Swap the fattest SUSPENDED request's frozen KV to host DRAM.
-
-        It is not being decoded, so moving it stalls nobody; it reloads
-        when the policy resumes it.  Returns False when nothing is
-        swappable (no suspended request holding pages).
+    def _frozen_victims(self, require_pressure: bool) -> List[Request]:
+        """Suspended requests whose frozen KV may demote, best victim
+        first: highest ``demotion_pressure`` (the policy's hint — MURS
+        marks low-usage-rate tenants), then fattest.  With
+        ``require_pressure`` only positively-marked tenants qualify (the
+        proactive pass is policy-opt-in; the reactive paths take anyone).
         """
-        suspended = [
+        victims = [
             r
             for r in self._live.values()
             if r.state == "suspended"
             and r.request_id not in self._restore
-            and self.kv.request_bytes(r.request_id) > 0.0
+            and self.kv.demotable_indices(r.request_id)
         ]
-        if not suspended:
-            return False
-        victim = max(
-            suspended, key=lambda r: self.kv.request_bytes(r.request_id)
+        if require_pressure:
+            # the FIFO head resumes next (one per completion): demoting
+            # its pages proactively would just buy a promotion stall —
+            # keep it hot, demote from the back of the queue forward
+            queue = self.policy.suspended_queue
+            head = queue[0] if queue else None
+            victims = [
+                r
+                for r in victims
+                if self.policy.demotion_pressure(r.tenant) > 0.0
+                and r.request_id != head
+            ]
+        victims.sort(
+            key=lambda r: (
+                -self.policy.demotion_pressure(r.tenant),
+                -self.kv.request_bytes(r.request_id),
+                r.request_id,
+            )
         )
-        self.kv.offload(victim.request_id)
-        self.pool.release_owner(victim.request_id)
-        victim.state = "offloaded"
-        victim.offloads += 1
-        victim.reload_at = WAIT_FOR_RESUME
+        return victims
+
+    def _demote_frozen_page(self, require_pressure: bool = False) -> bool:
+        """Demote ONE frozen page (best victim's last demotable page) to
+        the tier hierarchy.  Nobody stalls — the owner is suspended; the
+        page DMAs back when the policy resumes it.  Returns False when
+        nothing is demotable."""
+        victims = self._frozen_victims(require_pressure)
+        if not victims:
+            return False
+        victim = victims[0]
+        rid = victim.request_id
+        idx = self.kv.demotable_indices(rid)[-1]
+        payload = self._frozen_payloads.get(rid, {}).pop(idx, None)
+        if not self.kv.demote_page(rid, idx, payload, float(self.tick)):
+            return False
         self.swap_outs += 1
-        self.kv.reclaim()
         return True
+
+    def _proactive_demotion(self) -> None:
+        """The demotion_pressure mechanism: above ``demote_threshold``
+        pool usage, demote cold cached pages and positively-marked
+        tenants' frozen KV — *before* the reactive spill path fires.
+        FAIR/base mark nobody (pressure 0.0 everywhere), so the stock
+        baseline only ever pays the reactive path below."""
+        if self.pool.capacity <= 0:
+            return
+        budget = self.ecfg.demote_batch_pages
+        line = self.ecfg.demote_threshold
+        while budget > 0 and self.pool.used_fraction >= line:
+            # frozen KV first — it is the class the policy explicitly
+            # marked, it stalls nobody, and demoting it leaves the warm
+            # prefix cache (and its hit rate) intact; cold cached pages
+            # go second, node-preserving (the trie survives as host
+            # nodes, promotable on the next match)
+            if self._demote_frozen_page(require_pressure=True):
+                budget -= 1
+                self.proactive_demotions += 1
+                self._update_pool()
+                continue
+            if self._any_demotion_pressure() and self.kv.demote_cold_page(
+                float(self.tick)
+            ):
+                budget -= 1
+                self.proactive_demotions += 1
+                self._update_pool()
+                continue
+            break
+
+    def _any_demotion_pressure(self) -> bool:
+        """True when the policy marks ANY live tenant for demotion —
+        gates cold-page demotion so a pressure-oblivious policy keeps
+        stock (evict-on-shortage) cache behaviour."""
+        tenants = {r.tenant for r in self._live.values()}
+        return any(self.policy.demotion_pressure(t) > 0.0 for t in tenants)
+
+    def _promotion_pass(self) -> None:
+        """Start tier→HBM DMAs for pages that are now wanted, inside the
+        free-page budget (never promote into overcommit).
+
+        Stalled RUNNING work is handled first, and atomically: a request
+        is promoted only when ALL of its demoted pages fit the budget — a
+        partial promotion leaves it just as stalled while handing the
+        reactive path a fresh page to demote, which is the
+        demote/promote ping-pong livelock.  When a stalled request cannot
+        be fully restored (and nothing of it is in flight), it stops
+        holding a batch row hostage: its remaining pages demote and it
+        rejoins through the restore queue once real headroom exists.
+        Then requests the policy resumed, then reactive victims coming
+        back (both slotless, so partial progress across ticks is fine)."""
+        budget = self.kv.free_pages - self.kv.inflight_promotions
+        now = float(self.tick)
+        for r in list(self._live.values()):
+            if r.slot < 0 or r.state not in ("prefill", "decoding"):
+                continue
+            rid = r.request_id
+            demoted = self.kv.demoted_page_count(rid)
+            if demoted == 0:
+                continue
+            if self.kv.pending_transfers(rid):
+                continue  # its own DMAs are still in the air: wait
+            if 0 < demoted <= budget:
+                budget -= self.kv.promote_request(rid, demoted, now)
+            else:
+                for idx in reversed(self.kv.demotable_indices(rid)):
+                    self.kv.demote_page(
+                        rid, idx, self._page_payload(r.slot, idx), now
+                    )
+                r.state = "offloaded"
+                self._release_slot(r)
+        wanted: List[str] = []
+        for rid in self._restore:
+            if self.kv.has_demoted(rid):
+                wanted.append(rid)
+        for r in self._live.values():
+            # reactive victims auto-return once there is headroom: queue
+            # them for a batch row (the restore loop is residency-gated,
+            # so they wait there until their DMAs land)
+            if r.state == "offloaded":
+                if r.request_id not in self._restore:
+                    self._restore.append(r.request_id)
+                if r.request_id not in wanted:
+                    wanted.append(r.request_id)
+        for rid in wanted:
+            if budget <= 0:
+                break
+            budget -= self.kv.promote_request(rid, budget, float(self.tick))
 
     def _resolve_overcommit(self) -> None:
         """Restore HBM residency when the page pool is overcommitted.
 
-        One path for every policy (no scheduler branches):
+        One path for every policy (no scheduler branches), each stage
+        LOOPED until the overcommit clears or the stage runs dry — a
+        single fat victim may not cover the deficit, and leaving overflow
+        pages standing stalls decode for a full tick per victim:
 
-          1. swap out a SUSPENDED request's frozen KV first — it is not
-             being decoded, so moving it to host DRAM stalls nobody; it
-             reloads when the policy resumes it.  A proactive policy that
-             suspends under pressure therefore sheds overcommit without
-             ever interrupting running work.
-          2. otherwise the stock spill: offload (or, with offload disabled,
-             fail) the fattest ACTIVE request — the paper's Table III
-             reactive path, which is all a pressure-oblivious policy has.
+          1. drop cold cached prefixes (stalls nobody, frees pages an
+             overflow entry can reclaim into);
+          2. demote SUSPENDED requests' frozen pages — across however
+             many victims it takes (the multi-victim bugfix);
+          3. the stock reactive spill: demote the fattest ACTIVE
+             request's pages one by one (it stalls on its own non-resident
+             pages but keeps its slot cache; with demotion disabled, fail
+             it — the paper's OME).
         """
-        while (
-            self.kv.overflow_pages > 0 or self.pool.used_fraction > 1.0
-        ) and self.kv.evict_cache(1):
-            # cold cached prefixes go first: dropping them stalls nobody
-            # and frees pages an overflow entry can reclaim into
+
+        # a tick where every slot stalled skips the decode-path pool
+        # refresh — resolving against that stale snapshot demotes pages
+        # that were already freed (the promote/demote flip-flop livelock)
+        self._update_pool()
+
+        def hard_over() -> bool:
+            return self.kv.overflow_pages > 0 or self.pool.used_fraction > 1.0
+
+        if not hard_over():
+            return
+        # the watermark is the STOP line, never the trigger: once hard
+        # overcommit fired, free down past exactly-full so promotions
+        # have budget — but a merely-full pool is left alone (a steady
+        # 90–100% working set must not churn through demotion)
+        line = (
+            self.ecfg.reactive_watermark if self.ecfg.offload_enabled else 1.0
+        )
+
+        def over() -> bool:
+            return (
+                self.kv.overflow_pages > 0
+                or self.pool.used_fraction > line
+            )
+
+        while over() and self.kv.evict_cache(1):
             self.kv.reclaim()
             self._update_pool()
-        if not (self.kv.overflow_pages > 0 or self.pool.used_fraction > 1.0):
-            return
-        if self._swap_out_frozen():
-            return
-        victim = max(
-            self._active(), key=lambda r: self.kv.request_bytes(r.request_id),
-            default=None,
-        )
-        if victim is None:
-            return
-        if self.ecfg.offload_enabled and victim.state in ("decoding", "prefill"):
-            # mid-prefill victims are offloadable too (chunked prefill keeps
-            # requests in "prefill" across ticks): reload replays the prompt
-            self.kv.offload(victim.request_id)
-            self.pool.release_owner(victim.request_id)
-            victim.state = "offloaded"
-            victim.offloads += 1
-            victim.reload_at = self.tick + self.ecfg.offload_reload_ticks
+        while over() and self._demote_frozen_page():
+            self.kv.reclaim()
+            self._update_pool()
+        while over():
+            if not self.ecfg.offload_enabled:
+                if not hard_over():
+                    break
+                # no tier below HBM: the stock engine throws — fail the
+                # fattest active request (the paper's OME scenario)
+                victim = max(
+                    self._active(),
+                    key=lambda r: self.kv.request_bytes(r.request_id),
+                    default=None,
+                )
+                if victim is None:
+                    break
+                self._fail(victim)
+                continue
+            victim = max(
+                (
+                    r
+                    for r in self._active()
+                    if self.kv.demotable_indices(r.request_id)
+                ),
+                key=lambda r: self.kv.request_bytes(r.request_id),
+                default=None,
+            )
+            if victim is None:
+                break  # nothing left to demote: overflow must wait
+            rid = victim.request_id
             self.reactive_offloads += 1
-            self._release_slot(victim)
-        else:
-            victim.state = "failed"
-            victim.finish_tick = self.tick
-            self.failed.append(victim.request_id)
-            self._live.pop(victim.request_id, None)
-            self.pool.release_owner(victim.request_id)
-            self.kv.release(victim.request_id)
-            self.sampler.forget(victim.request_id)
-            self.policy.drop(victim.request_id)
-            self._release_slot(victim)
+            victim.offloads += 1
+            for idx in reversed(self.kv.demotable_indices(rid)):
+                payload = (
+                    self._page_payload(victim.slot, idx)
+                    if victim.slot >= 0
+                    else None
+                )
+                if not self.kv.demote_page(rid, idx, payload, float(self.tick)):
+                    break
+                self.kv.reclaim()
+                self._update_pool()
+                if not over():
+                    break
+            if not self.kv.demotable_indices(rid):
+                # fully demoted: free the batch row for someone resident;
+                # the request replays when its pages promote back
+                if victim.state in ("decoding", "prefill"):
+                    victim.state = "offloaded"
+                self._release_slot(victim)
         self.kv.reclaim()
+
+    def _fail(self, victim: Request) -> None:
+        victim.state = "failed"
+        victim.finish_tick = self.tick
+        self.failed.append(victim.request_id)
+        self._live.pop(victim.request_id, None)
+        self.pool.release_owner(victim.request_id)
+        self.kv.release(victim.request_id)
+        self.sampler.forget(victim.request_id)
+        self.policy.drop(victim.request_id)
+        self._release_slot(victim)
+        self._frozen_payloads.pop(victim.request_id, None)
+        self.kv.reclaim()
+        self._update_pool()
 
     def run(self, max_ticks: int = 1000) -> Dict[str, Any]:
         while self.tick < max_ticks:
@@ -963,8 +1294,10 @@ class ServingEngine:
             "peak_demand_fraction": self.peak_demand_fraction,
             "offload_events": self.reactive_offloads,
             "swap_events": self.swap_outs,
-            "host_transfers": self.kv.offload_events,
+            "proactive_demotions": self.proactive_demotions,
+            "tiers": self.kv.tier_stats(),
             "stall_ticks": self.stall_ticks,
+            "transfer_stall_ticks": self.transfer_stall_ticks,
             "mean_latency_ticks": sum(lat) / len(lat) if lat else None,
             "latency_ticks": sorted(lat),
             "ttft_ticks": sorted(ttft),

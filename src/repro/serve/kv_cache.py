@@ -22,11 +22,22 @@ dedup attacks the pressure at its source (DESIGN.md §6).
 
 The manager tracks the byte-exact HBM footprint of every request — this is
 what the MURS sampler reads as the request's *live* bytes, and what decides
-spill-to-host (offload) and OOM.  A shared page is charged fractionally
-(1/refcount) to each holder so the per-owner shares sum to the physical
-total.  Pages past pool capacity are OVERFLOW pages (ids ≥ ``n_pages``):
-the pool is overcommitted, ``used_fraction`` exceeds 1.0, and the
-runtime's reactive path (offload / fail) fires.
+spill-to-host and OOM.  A shared page is charged fractionally (1/refcount)
+to each holder so the per-owner shares sum to the physical total.  Pages
+past pool capacity are OVERFLOW pages (ids ≥ ``n_pages``): the pool is
+overcommitted, ``used_fraction`` exceeds 1.0, and the runtime's reactive
+path fires.
+
+Below HBM sits the TIER HIERARCHY (:mod:`repro.serve.tiers`): pages demote
+INDIVIDUALLY — a private page's entry becomes the :data:`DEMOTED` sentinel
+(position preserved) while its bytes move, int8-compressed, over a modeled
+PCIe link into a host tier with real capacity, overflowing to a disk tier
+whose traffic is the paper's "data spilling" metric.  A request with
+demoted pages is simply non-resident (it stalls only if actually
+scheduled); promotion is likewise asynchronous and page-granular.  Cold
+cached trie pages demote too: the node survives as a HOST node — the
+prefix stays known, a later match promotes it back instead of recomputing
+the prefill.
 
 Byte model per architecture (the MURS memory-usage classification of
 DESIGN.md §4 falls out of these):
@@ -40,14 +51,26 @@ DESIGN.md §4 falls out of these):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (
+    TYPE_CHECKING,
+    Callable,
+    Dict,
+    List,
+    Optional,
+    Sequence,
+    Tuple,
+)
 
 import numpy as np
 
 from repro.configs.base import ArchConfig
 
+if TYPE_CHECKING:  # deferred: keeps this module import-light (numpy only)
+    from repro.serve.tiers import TierConfig, TieredKVStore
+
 __all__ = [
     "CACHE_OWNER",
+    "DEMOTED",
     "PageBlockAllocator",
     "PagedKVManager",
     "PrefixCache",
@@ -58,6 +81,11 @@ __all__ = [
 #: allocator owner id under which :class:`PrefixCache` holds its pages —
 #: a cached page with no request reference has refcount 1 (the cache's)
 CACHE_OWNER = "__prefix_cache__"
+
+#: page-table sentinel for a page demoted to the tier hierarchy (host or
+#: disk): the entry keeps its position — the tokens still exist, just not
+#: in HBM — and :meth:`PageBlockAllocator.swap_in` re-materializes it
+DEMOTED = -1
 
 
 def _block_counts(cfg: ArchConfig) -> Dict[str, int]:
@@ -160,8 +188,14 @@ class PageBlockAllocator:
 
     def owner_share(self, owner: str) -> float:
         """Fractionally attributed page count: a page shared by k holders
-        charges 1/k to each, so shares sum to the physical page count."""
-        return sum(1.0 / self._ref[pid] for pid in self._tables.get(owner, ()))
+        charges 1/k to each, so shares sum to the physical page count.
+        Demoted entries charge nothing — those bytes live in a lower
+        tier, not in this pool."""
+        return sum(
+            1.0 / self._ref[pid]
+            for pid in self._tables.get(owner, ())
+            if pid != DEMOTED
+        )
 
     def table_array(
         self, owners: Sequence[str], max_pages: Optional[int] = None
@@ -180,7 +214,10 @@ class PageBlockAllocator:
                 raise ValueError(
                     f"owner {owners[i]!r} holds {len(t)} pages > max_pages={width}"
                 )
-            out[i, : len(t)] = t
+            # demoted entries render as page 0 like padding: the kernel
+            # must never be launched over a non-resident table (the engine
+            # stalls such requests), so the value is a mask-safe filler
+            out[i, : len(t)] = [max(pid, 0) for pid in t]
         return out
 
     # ---------------------------------------------------------- allocation
@@ -257,11 +294,67 @@ class PageBlockAllocator:
 
     def free(self, owner: str) -> int:
         """Release every page reference ``owner`` holds; returns the count
-        of table entries released (shared pages stay live for others)."""
+        of HBM table entries released (shared pages stay live for others;
+        demoted entries hold no HBM page — the caller must discard their
+        tier copies)."""
         table = self._tables.pop(owner, [])
+        released = 0
         for pid in table:
+            if pid == DEMOTED:
+                continue
             self._decref(pid)
-        return len(table)
+            released += 1
+        return released
+
+    # ------------------------------------------------------------- demotion
+    def swap_out(self, owner: str, index: int) -> int:
+        """Demote ``owner``'s page at table ``index`` out of HBM: the
+        physical page returns to the free list and the entry becomes the
+        :data:`DEMOTED` sentinel (position preserved).  Only PRIVATE
+        (refcount 1) physical pages are demotable — a shared page is
+        pinned by its other holders, and an overflow id is the legacy
+        overcommit representation, not a resident page.  Returns the
+        freed page id."""
+        table = self._tables[owner]
+        pid = table[index]
+        if pid == DEMOTED:
+            raise ValueError(f"page {owner!r}[{index}] is already demoted")
+        if pid >= self.n_pages:
+            raise ValueError(f"overflow page {pid} cannot be demoted")
+        if self._ref.get(pid, 0) != 1:
+            raise ValueError(f"shared page {pid} cannot be demoted")
+        self._decref(pid)
+        table[index] = DEMOTED
+        return pid
+
+    def swap_in(self, owner: str, index: int) -> int:
+        """Re-materialize a demoted entry: allocates a page (overflow id
+        under a drained pool — the normal overcommit machinery then
+        applies) and writes it back into the table slot."""
+        table = self._tables[owner]
+        if table[index] != DEMOTED:
+            raise ValueError(f"page {owner!r}[{index}] is not demoted")
+        pid = self._alloc_page()
+        table[index] = pid
+        return pid
+
+    def demoted_indices(self, owner: str) -> Tuple[int, ...]:
+        return tuple(
+            i
+            for i, pid in enumerate(self._tables.get(owner, ()))
+            if pid == DEMOTED
+        )
+
+    def take_free(self, owner: str) -> Optional[int]:
+        """Append one FREE-LIST page to ``owner``'s table, or None when
+        the free list is empty (never hands out overflow ids) — the
+        promotion path for cache-held pages, which must be physical."""
+        if not self._free:
+            return None
+        pid = self._free.pop()
+        self._ref[pid] = 1
+        self._tables.setdefault(owner, []).append(pid)
+        return pid
 
     def release_pages(self, owner: str, pages: Sequence[int]) -> None:
         """Release specific page references from ``owner``'s table (one
@@ -275,11 +368,14 @@ class PageBlockAllocator:
     def resident(self, owner: str) -> bool:
         """True iff every page of ``owner`` is a physical HBM page.
 
-        A request holding overflow pages cannot be decoded — those tokens
-        live in host memory, not HBM — until :meth:`reclaim` pages them
-        back in after something else frees physical pages.
+        A request holding overflow pages (legacy overcommit) or DEMOTED
+        entries (tiered out to host/disk) cannot be decoded — those
+        tokens are not in HBM — until :meth:`reclaim` / :meth:`swap_in`
+        bring them back.
         """
-        return all(pid < self.n_pages for pid in self._tables.get(owner, ()))
+        return all(
+            0 <= pid < self.n_pages for pid in self._tables.get(owner, ())
+        )
 
     def reclaim(self) -> int:
         """Page overflow entries back into freed physical pages (the DMA
@@ -308,6 +404,11 @@ class _PrefixNode:
     group: str  # tenant that materialized it (cache_pressure key)
     snap_key: Tuple[int, ...]  # engine-side KV snapshot this page came from
     last_use: float
+    #: True when the page was demoted to the tier hierarchy: the node
+    #: survives (the prefix is still KNOWN) but holds no HBM page
+    #: (``page_id`` is :data:`DEMOTED`); a match stops at it and triggers
+    #: promotion instead of sharing
+    host: bool = False
 
 
 class PrefixCache:
@@ -335,6 +436,12 @@ class PrefixCache:
         self._children: Dict[Tuple[int, ...], int] = {}  # key → child nodes
         # parent full-page key → terminal (partial-page) keys beneath it
         self._terminals: Dict[Tuple[int, ...], List[Tuple[int, ...]]] = {}
+        #: called with a node key when a match walks into a HOST node —
+        #: the manager promotes the page so the NEXT match can share it
+        self.promote_cb: Optional[Callable[[Tuple[int, ...]], None]] = None
+        #: called with a node key when a host node's tier copy becomes
+        #: garbage (re-adopted by a fresh prefill, or dropped)
+        self.on_host_drop: Optional[Callable[[Tuple[int, ...]], None]] = None
         self.lookups = 0
         self.hits = 0
         self.hit_tokens = 0
@@ -357,12 +464,18 @@ class PrefixCache:
         bytes" means for the demand metric."""
         blocked = set()
         for key, node in self._nodes.items():
-            if self.alloc.refcount(node.page_id) != 1:
+            # warm (request-shared) nodes pin their chain; HOST nodes do
+            # not — eviction may drop them to reach the ancestors
+            if not node.host and self.alloc.refcount(node.page_id) != 1:
                 k = key
                 while k:
                     blocked.add(k)
                     k = self._parent(k)
-        return sum(1 for key in self._nodes if key not in blocked)
+        return sum(
+            1
+            for key, node in self._nodes.items()
+            if key not in blocked and not node.host
+        )
 
     def live_snap_keys(self) -> set:
         return {node.snap_key for node in self._nodes.values()}
@@ -373,6 +486,8 @@ class PrefixCache:
     def _evictable(self, key: Tuple[int, ...]) -> bool:
         if self._children.get(key, 0) > 0:
             return False  # inner node: descendants would be orphaned
+        if self._nodes[key].host:
+            return False  # no HBM page to free; lives in the tier store
         return self.alloc.refcount(self._nodes[key].page_id) == 1
 
     # --------------------------------------------------------------- match
@@ -403,12 +518,24 @@ class PrefixCache:
         """(matched token count, snapshot key, matched page ids) without
         acquiring pages — the admission arithmetic, plus the page set an
         admission-time eviction must not victimize (the pages it is about
-        to count as free-to-share)."""
-        keys = self._walk(tokens)
+        to count as free-to-share).  The walk stops at the first HOST
+        node: a demoted page cannot be shared until it is promoted."""
+        keys = self._hbm_chain(self._walk(tokens))
         if not keys:
             return 0, None, ()
         pages = tuple(self._nodes[k].page_id for k in keys)
         return len(keys[-1]), self._nodes[keys[-1]].snap_key, pages
+
+    def _hbm_chain(
+        self, keys: List[Tuple[int, ...]]
+    ) -> List[Tuple[int, ...]]:
+        """Truncate a walk chain at the first non-HBM (host) node."""
+        out: List[Tuple[int, ...]] = []
+        for k in keys:
+            if self._nodes[k].host:
+                break
+            out.append(k)
+        return out
 
     def peek(self, tokens: Sequence[int]) -> Tuple[int, Optional[Tuple[int, ...]]]:
         """(matched token count, snapshot key) without acquiring pages."""
@@ -433,7 +560,13 @@ class PrefixCache:
         if count_stats:
             self.lookups += 1
             self.lookup_tokens += len(tokens)
-        keys = self._walk(tokens)
+        walked = self._walk(tokens)
+        keys = self._hbm_chain(walked)
+        if len(keys) < len(walked) and self.promote_cb is not None:
+            # the match ran into a demoted page: promote it so the next
+            # identical prompt (a few ticks from now) shares the full
+            # chain — page-granular, asynchronous re-warming
+            self.promote_cb(walked[len(keys)])
         if not keys:
             return 0, None
         pages = [self._nodes[k].page_id for k in keys]
@@ -471,6 +604,7 @@ class PrefixCache:
             key = toks[: d * P]
             if key in self._nodes:
                 self._nodes[key].last_use = now
+                self._readopt(key, owner_table, d - 1)
                 continue
             parent = toks[: (d - 1) * P]
             if parent and parent not in self._nodes:
@@ -478,8 +612,8 @@ class PrefixCache:
             if d - 1 >= len(owner_table):
                 break
             pid = owner_table[d - 1]
-            if pid >= self.alloc.n_pages:
-                break  # never cache overflow pages
+            if pid >= self.alloc.n_pages or pid < 0:
+                break  # never cache overflow or demoted entries
             self.alloc.share(CACHE_OWNER, [pid])
             self._nodes[key] = _PrefixNode(pid, P, group, snap_key, now)
             self._children[parent] = self._children.get(parent, 0) + 1
@@ -488,11 +622,13 @@ class PrefixCache:
         if rem:
             key = toks
             parent = toks[: full * P]
-            if (
-                key not in self._nodes
-                and (full == 0 or parent in self._nodes)
+            if key in self._nodes:
+                self._nodes[key].last_use = now
+                self._readopt(key, owner_table, full)
+            elif (
+                (full == 0 or parent in self._nodes)
                 and full < len(owner_table)
-                and owner_table[full] < self.alloc.n_pages
+                and 0 <= owner_table[full] < self.alloc.n_pages
             ):
                 self.alloc.share(CACHE_OWNER, [owner_table[full]])
                 self._nodes[key] = _PrefixNode(
@@ -504,6 +640,79 @@ class PrefixCache:
         if inserted:
             self.insertions += 1
         return inserted
+
+    def _readopt(
+        self, key: Tuple[int, ...], owner_table: Sequence[int], index: int
+    ) -> None:
+        """A fresh prefill re-materialized a prefix whose node had been
+        demoted: the node adopts the new HBM page and the tier copy is
+        dropped (it would otherwise be a second resident copy)."""
+        node = self._nodes[key]
+        if not node.host or index >= len(owner_table):
+            return
+        pid = owner_table[index]
+        if not (0 <= pid < self.alloc.n_pages):
+            return
+        self.alloc.share(CACHE_OWNER, [pid])
+        node.page_id = pid
+        node.host = False
+        if self.on_host_drop is not None:
+            self.on_host_drop(key)
+
+    # ------------------------------------------------------------- demotion
+    def demote_node(self, key: Tuple[int, ...]) -> int:
+        """Mark a COLD node as tier-resident: releases the cache's HBM
+        page (the node's position in the trie survives, so the prefix is
+        still matchable-after-promotion) and returns the freed page id.
+        The caller moves the bytes into the tier store."""
+        node = self._nodes[key]
+        if node.host:
+            raise ValueError(f"node {key!r} is already demoted")
+        pid = node.page_id
+        if self.alloc.refcount(pid) != 1:
+            raise ValueError(f"page {pid} is warm (shared); only cold pages demote")
+        node.page_id = DEMOTED
+        node.host = True
+        self.alloc.release_pages(CACHE_OWNER, [pid])
+        return pid
+
+    def demotable_victim(
+        self, pressure: Optional[Callable[[str], float]] = None
+    ) -> Optional[Tuple[int, ...]]:
+        """The node cold-page demotion should move next (policy pressure
+        × LRU, deepest first).  Unlike eviction there is NO leaf-first
+        constraint: demotion keeps the node, so the trie stays connected
+        whatever order pages leave HBM — a chain of host nodes re-warms
+        progressively as matches promote it front to back."""
+        best_key, best_rank = None, None
+        for key, node in self._nodes.items():
+            if node.host or self.alloc.refcount(node.page_id) != 1:
+                continue
+            p = float(pressure(node.group)) if pressure is not None else 0.0
+            rank = (-p, node.last_use, -len(key))
+            if best_rank is None or rank < best_rank:
+                best_key, best_rank = key, rank
+        return best_key
+
+    def promote_node(self, key: Tuple[int, ...]) -> bool:
+        """A tier promotion completed: give the node a fresh physical
+        page.  When the free list cannot supply one, a LEAF node is
+        dropped (a later identical prompt just re-prefills) — an INNER
+        host node must stay: removing it would orphan its still-cached
+        descendants, so it simply remains host and the next match
+        retries the promotion.  Returns True when the node is
+        HBM-backed again."""
+        node = self._nodes.get(key)
+        if node is None or not node.host:
+            return False
+        pid = self.alloc.take_free(CACHE_OWNER)
+        if pid is None:
+            if self._children.get(key, 0) == 0:
+                self._remove_node(key, release_page=False)
+            return False
+        node.page_id = pid
+        node.host = False
+        return True
 
     # ------------------------------------------------------------ eviction
     def evict(
@@ -527,8 +736,14 @@ class PrefixCache:
             victim = self._pick_victim(pressure, protected)
             if victim is None:
                 break
-            self._evict_node(victim)
-            freed += 1
+            if self._nodes[victim].host:
+                # dropping a host leaf frees no HBM page, but it unblocks
+                # the HBM ancestors above it — without this, a demoted
+                # terminal pins its whole chain against eviction forever
+                self._remove_node(victim, release_page=False)
+            else:
+                self._evict_node(victim)
+                freed += 1
         return freed
 
     def _pick_victim(
@@ -536,12 +751,18 @@ class PrefixCache:
         pressure: Optional[Callable[[str], float]],
         protected: frozenset = frozenset(),
     ) -> Optional[Tuple[int, ...]]:
+        """Best eviction victim: HBM cold leaves first (they actually free
+        pages); host leaves only as a last resort (they merely unblock
+        their ancestors)."""
         best_key, best_rank = None, None
         for key, node in self._nodes.items():
-            if node.page_id in protected or not self._evictable(key):
+            if node.host:
+                if self._children.get(key, 0) > 0:
+                    continue  # host inner node: still anchors descendants
+            elif node.page_id in protected or not self._evictable(key):
                 continue
             p = float(pressure(node.group)) if pressure is not None else 0.0
-            rank = (-p, node.last_use, -len(key))
+            rank = (node.host, -p, node.last_use, -len(key))
             if best_rank is None or rank < best_rank:
                 best_key, best_rank = key, rank
         return best_key
@@ -559,6 +780,12 @@ class PrefixCache:
         return False
 
     def _evict_node(self, key: Tuple[int, ...]) -> None:
+        self._remove_node(key, release_page=True)
+
+    def _remove_node(self, key: Tuple[int, ...], release_page: bool) -> None:
+        """Unlink a (leaf) node from the trie.  ``release_page=False`` is
+        the host-node variant: there is no HBM page to release, but any
+        tier copy must be dropped via ``on_host_drop``."""
         node = self._nodes.pop(key)
         parent = self._parent(key)
         remaining = self._children.get(parent, 1) - 1
@@ -574,7 +801,10 @@ class PrefixCache:
                 terms.remove(key)
                 if not terms:
                     del self._terminals[parent]
-        self.alloc.release_pages(CACHE_OWNER, [node.page_id])
+        if release_page:
+            self.alloc.release_pages(CACHE_OWNER, [node.page_id])
+        elif self.on_host_drop is not None:
+            self.on_host_drop(key)
         self.evictions += 1
 
 
@@ -598,13 +828,20 @@ class PagedKVManager:
     page_tokens: int = 16
     enable_prefix_cache: bool = False
     cache_pressure_fn: Optional[Callable[[str], float]] = None
+    #: tier hierarchy below HBM (host + disk); None → demotion disabled
+    tier_config: Optional["TierConfig"] = None
     _page_bytes: Dict[str, float] = field(default_factory=dict)
     _state_bytes: Dict[str, float] = field(default_factory=dict)
     _alloc: Optional[PageBlockAllocator] = None
     _prefix: Optional[PrefixCache] = None
     _pool_page_bytes: float = 0.0
-    offloaded_bytes: float = 0.0
-    offload_events: int = 0
+    tiers: Optional["TieredKVStore"] = None
+
+    def __post_init__(self) -> None:
+        if self.tier_config is not None:
+            from repro.serve.tiers import TieredKVStore
+
+            self.tiers = TieredKVStore(self.tier_config)
 
     # ------------------------------------------------------------ requests
     def register(self, request_id: str, cfg: ArchConfig) -> None:
@@ -618,6 +855,8 @@ class PagedKVManager:
             self._pool_page_bytes = page_bytes
             if self.enable_prefix_cache:
                 self._prefix = PrefixCache(self._alloc, self.page_tokens)
+                self._prefix.promote_cb = self._promote_cache_node
+                self._prefix.on_host_drop = self._drop_cache_tier_copy
         if self._alloc is not None and page_bytes > 0:
             self._alloc.grow_to(request_id, 0)  # materialize an empty table
 
@@ -669,10 +908,167 @@ class PagedKVManager:
         return new * page_bytes, pages
 
     def release(self, request_id: str) -> float:
-        pages = self._alloc.free(request_id) if self._alloc is not None else 0
+        pages = 0
+        if self._alloc is not None:
+            if self.tiers is not None:
+                # drop tier copies of demoted pages — their owner is gone
+                for idx in self._alloc.demoted_indices(request_id):
+                    self.tiers.discard(("req", request_id, idx))
+            pages = self._alloc.free(request_id)
         pb = self._page_bytes.pop(request_id, 0.0)
         sb = self._state_bytes.pop(request_id, 0.0)
         return pages * pb + sb
+
+    # ----------------------------------------------------- tier transitions
+    def demote_page(
+        self,
+        request_id: str,
+        index: int,
+        payload: Optional[np.ndarray] = None,
+        now: float = 0.0,
+    ) -> bool:
+        """Demote ONE private HBM page of ``request_id`` into the tier
+        hierarchy (async: the page leaves HBM now, lands in host DRAM
+        when the PCIe transfer completes).  Returns False when the page
+        is not demotable (shared, overflow, already demoted, no tiers)."""
+        if self.tiers is None or self._alloc is None:
+            return False
+        table = self._alloc.table(request_id)
+        if index >= len(table):
+            return False
+        pid = table[index]
+        if pid == DEMOTED or pid >= self._alloc.n_pages:
+            return False
+        if self._alloc.refcount(pid) != 1:
+            return False  # shared with the trie/another request: pinned
+        self._alloc.swap_out(request_id, index)
+        self.tiers.demote(
+            ("req", request_id, index),
+            self._page_bytes.get(request_id, self._pool_page_bytes),
+            payload,
+            now,
+        )
+        return True
+
+    def demotable_indices(self, request_id: str) -> Tuple[int, ...]:
+        """Table indices demote_page would accept (private HBM pages)."""
+        if self._alloc is None:
+            return ()
+        return tuple(
+            i
+            for i, pid in enumerate(self._alloc.table(request_id))
+            if 0 <= pid < self._alloc.n_pages
+            and self._alloc.refcount(pid) == 1
+        )
+
+    def has_demoted(self, request_id: str) -> bool:
+        if self._alloc is None:
+            return False
+        return bool(self._alloc.demoted_indices(request_id))
+
+    def demoted_page_count(self, request_id: str) -> int:
+        if self._alloc is None:
+            return 0
+        return len(self._alloc.demoted_indices(request_id))
+
+    def pending_transfers(self, request_id: str) -> bool:
+        """True while any of the request's pages are ON THE LINK (demotion
+        not yet landed in host, or promotion not yet landed in HBM)."""
+        if self.tiers is None or self._alloc is None:
+            return False
+        return any(
+            self.tiers.location(("req", request_id, idx))
+            in ("to_host", "to_hbm")
+            for idx in self._alloc.demoted_indices(request_id)
+        )
+
+    def promote_request(self, request_id: str, max_pages: int, now: float = 0.0) -> int:
+        """Begin promoting up to ``max_pages`` of the request's demoted
+        pages (those already landed in host/disk; in-flight demotions
+        must finish first).  Returns the number of promotions started."""
+        if self.tiers is None or self._alloc is None or max_pages <= 0:
+            return 0
+        started = 0
+        for idx in self._alloc.demoted_indices(request_id):
+            key = ("req", request_id, idx)
+            if self.tiers.location(key) in ("host", "disk"):
+                if self.tiers.promote(key, now):
+                    started += 1
+                    if started >= max_pages:
+                        break
+        return started
+
+    def demote_cold_page(self, now: float = 0.0) -> bool:
+        """Demote one COLD cached trie page (policy-ordered victim) into
+        the tier hierarchy.  Unlike eviction the prefix stays KNOWN: the
+        node survives as a host node, a later match promotes it back."""
+        if self.tiers is None or self._prefix is None:
+            return False
+        victim = self._prefix.demotable_victim(self.cache_pressure_fn)
+        if victim is None:
+            return False
+        self._prefix.demote_node(victim)
+        self.tiers.demote(("cache", victim), self._pool_page_bytes, None, now)
+        return True
+
+    def _promote_cache_node(self, key: Tuple[int, ...]) -> None:
+        if self.tiers is not None:
+            self.tiers.promote(("cache", key))
+
+    def _drop_cache_tier_copy(self, key: Tuple[int, ...]) -> None:
+        if self.tiers is not None:
+            self.tiers.discard(("cache", key))
+
+    def tick_tiers(
+        self, now: float = 0.0
+    ) -> List[Tuple[str, int, Optional[np.ndarray]]]:
+        """Advance the tier hierarchy one tick.  Completed request-page
+        promotions are swapped back into their tables (overflow ids under
+        a drained pool — the normal overcommit machinery applies) and
+        returned as ``(request_id, page_index, dequantized_payload)`` so
+        the engine can restore the page's KV values; completed cache-node
+        promotions re-attach their trie nodes internally."""
+        if self.tiers is None:
+            return []
+        restored: List[Tuple[str, int, Optional[np.ndarray]]] = []
+        for kind, key, payload in self.tiers.tick(now):
+            if kind != "resident":
+                continue
+            if key[0] == "req":
+                _, rid, idx = key
+                if (
+                    rid in self._page_bytes
+                    and self._alloc is not None
+                    and idx < len(self._alloc.table(rid))
+                    and self._alloc.table(rid)[idx] == DEMOTED
+                ):
+                    self._alloc.swap_in(rid, idx)
+                    restored.append((rid, idx, payload))
+            elif key[0] == "cache" and self._prefix is not None:
+                if not self._prefix.promote_node(key[1]):
+                    # the DMA landed but no free page could back it; if
+                    # the node survived (an inner host node — dropping
+                    # it would orphan descendants), park the bytes back
+                    # in the hierarchy so a later match can retry —
+                    # otherwise the node would be host with NO tier copy
+                    node = self._prefix._nodes.get(key[1])
+                    if node is not None and node.host:
+                        self.tiers.demote(
+                            key, self._pool_page_bytes, None, now,
+                            repark=True,
+                        )
+        return restored
+
+    @property
+    def inflight_promotions(self) -> int:
+        return self.tiers.inflight_promotions if self.tiers is not None else 0
+
+    def tier_stats(self) -> Dict[str, float]:
+        if self.tiers is None:
+            return {"enabled": False}
+        stats: Dict[str, float] = {"enabled": True}
+        stats.update(self.tiers.stats())
+        return stats
 
     # -------------------------------------------------------- prefix cache
     def peek_prefix(
@@ -881,25 +1277,11 @@ class PagedKVManager:
 
     @property
     def used_fraction(self) -> float:
-        return self.used_bytes / self.capacity_bytes if self.capacity_bytes else 1.0
-
-    def offload(self, request_id: str) -> float:
-        """Spill a request's pages to host DRAM (the TPU 'spill').  Pages
-        shared with the prefix cache survive in the cache — only the
-        request's references move, so ``offloaded_bytes`` (host transfer
-        volume) counts ONLY the pages that actually leave HBM (refcount
-        hit zero) plus the constant state; a later reload re-shares the
-        surviving pages."""
-        pb = self._page_bytes.get(request_id, 0.0)
-        sb = self._state_bytes.get(request_id, 0.0)
-        moved = 0
-        if self._alloc is not None:
-            moved = sum(
-                1
-                for pid in self._alloc.table(request_id)
-                if self._alloc.refcount(pid) == 1
-            )
-        freed = self.release(request_id)
-        self.offloaded_bytes += moved * pb + sb
-        self.offload_events += 1
-        return freed
+        """Pool occupancy.  A zero-capacity pool (constant-state / mamba
+        deployments hold no KV pages at all) with nothing in it is EMPTY
+        (0.0), not full — reporting 1.0 made every ``> threshold`` check
+        fire permanently for a pool that cannot hold anything; a
+        zero-capacity pool that somehow holds bytes is saturated (1.0)."""
+        if self.capacity_bytes:
+            return self.used_bytes / self.capacity_bytes
+        return 0.0 if not self.used_bytes else 1.0

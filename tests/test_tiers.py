@@ -1,0 +1,515 @@
+"""Tiered KV hierarchy: compression, bandwidth, disk spill, demotion.
+
+The hypothesis property test pins the safety contract of the tentpole:
+
+    * bytes are CONSERVED across tiers — a demoted page's raw bytes never
+      change while it moves HBM → (flight) → host → disk → (flight) → HBM,
+    * a page is never resident in two tiers at once (single location),
+    * a demoted page is never readable (``touch``) without a completed
+      promotion event first.
+
+Plus the two satellite bugfix regressions: multi-victim overcommit must
+clear within a single ``step()``, and a zero-capacity pool must report
+0.0 (empty, not permanently full) and still admit constant-state work.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.core.memory_manager import MemoryPool
+from repro.core.sampler import TaskStats
+from repro.models import init_model
+from repro.sched import (
+    BasePolicy,
+    FairPolicy,
+    MursConfig,
+    MursPolicy,
+    PriorityConfig,
+    PriorityPolicy,
+)
+from repro.serve import EngineConfig, Request, ServingEngine
+from repro.serve.kv_cache import (
+    DEMOTED,
+    PageBlockAllocator,
+    PagedKVManager,
+    kv_bytes_per_token,
+)
+from repro.serve.tiers import CompressedBlock, TierConfig, TieredKVStore
+
+CFG = ARCHS["internlm2-1.8b"]
+PAGE = 4096.0
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["internlm2-1.8b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _drain(store, ticks=200):
+    events = []
+    for _ in range(ticks):
+        events += store.tick()
+        if store.link.in_flight == 0:
+            break
+    return events
+
+
+class TestCompressedBlock:
+    def test_int8_roundtrip_error_bounded(self):
+        payload = np.linspace(-3.0, 3.0, 512).astype(np.float32)
+        block = CompressedBlock.compress(PAGE, payload, compress=True)
+        deq = block.decompress()
+        # symmetric int8: |x − deq| ≤ scale/2 everywhere
+        assert np.max(np.abs(payload - deq)) <= block.scale / 2 + 1e-7
+        assert block.quant_error <= block.scale / 2 + 1e-7
+        assert block.codes.dtype == np.int8
+
+    def test_byte_model(self):
+        c = CompressedBlock.compress(PAGE, None, compress=True)
+        assert c.stored_bytes == pytest.approx(PAGE / 2 + 4)
+        raw = CompressedBlock.compress(PAGE, None, compress=False)
+        assert raw.stored_bytes == PAGE
+
+
+class TestTieredKVStore:
+    def _mk(self, host_pages=3.0, pcie=PAGE, disk=PAGE / 4):
+        return TieredKVStore(
+            TierConfig(
+                host_capacity_bytes=host_pages * PAGE,
+                pcie_bytes_per_tick=pcie,
+                disk_bytes_per_tick=disk,
+            )
+        )
+
+    def test_demotion_is_asynchronous(self):
+        ts = self._mk(pcie=PAGE)  # compressed page ≈ half a tick
+        ts.demote("k", PAGE)
+        assert ts.location("k") == "to_host"
+        assert not ts.touch("k")
+        ts.tick()
+        assert ts.location("k") == "host"
+
+    def test_promotion_emits_resident_event_with_payload(self):
+        ts = self._mk()
+        payload = np.arange(64, dtype=np.float32)
+        ts.demote("k", PAGE, payload)
+        _drain(ts)
+        assert ts.promote("k")
+        events = _drain(ts)
+        assert len(events) == 1
+        kind, key, deq = events[0]
+        assert (kind, key) == ("resident", "k")
+        assert np.max(np.abs(deq - payload)) < 0.5
+        assert ts.location("k") == "hbm" and ts.touch("k")
+
+    def test_compression_halves_transfer_ticks(self):
+        slow = TierConfig(
+            host_capacity_bytes=100 * PAGE, pcie_bytes_per_tick=PAGE / 2
+        )
+        for compress, expect_ticks in ((True, 2), (False, 3)):
+            ts = TieredKVStore(
+                TierConfig(
+                    host_capacity_bytes=slow.host_capacity_bytes,
+                    pcie_bytes_per_tick=slow.pcie_bytes_per_tick,
+                    compress=compress,
+                )
+            )
+            ts.demote("k", PAGE)
+            ticks = 0
+            while ts.location("k") != "host":
+                ts.tick()
+                ticks += 1
+            # int8 moves half the bytes → half the ticks (1.01 vs 2)
+            assert ticks <= expect_ticks
+        assert ts.compression_ratio == 1.0  # the uncompressed store
+
+    def test_host_overflow_spills_lru_to_disk(self):
+        ts = self._mk(host_pages=0.6)  # holds ONE compressed page
+        ts.demote("old", PAGE, now=0.0)
+        _drain(ts)
+        ts.demote("new", PAGE, now=5.0)
+        _drain(ts)
+        assert ts.location("old") == "disk"  # LRU victim
+        assert ts.location("new") == "host"
+        assert ts.disk_spill_bytes == pytest.approx(PAGE / 2 + 4)
+
+    def test_disk_promotion_pays_slow_link_and_counts_reads(self):
+        ts = self._mk(host_pages=0.6, pcie=100 * PAGE, disk=PAGE / 8)
+        ts.demote("a", PAGE)
+        _drain(ts)
+        ts.demote("b", PAGE)
+        _drain(ts)  # a → disk
+        assert ts.promote("a")
+        assert ts.disk_read_bytes > 0
+        ts.tick()
+        assert ts.location("a") == "to_hbm"  # slow: still in flight
+        _drain(ts)
+        assert ts.location("a") == "hbm"
+
+    def test_infinite_link_rate_completes_instantly(self):
+        """TierConfig's default link rates are inf (instant DMA); the
+        drain arithmetic must not produce 0·inf = NaN and wedge the
+        transfer in flight forever."""
+        ts = TieredKVStore(TierConfig(host_capacity_bytes=100 * PAGE))
+        ts.demote("k", PAGE)
+        ts.tick()
+        assert ts.location("k") == "host"
+        ts.promote("k")
+        events = ts.tick()
+        assert [e[:2] for e in events] == [("resident", "k")]
+
+    def test_discard_cancels_in_flight(self):
+        ts = self._mk(pcie=PAGE / 100)
+        ts.demote("k", PAGE)
+        ts.discard("k")
+        assert ts.location("k") == "hbm"
+        assert ts.link.in_flight == 0
+        assert _drain(ts) == []
+
+
+class TestTierProperty:
+    """Random demote/promote/touch/tick streams: conservation, single
+    residency, and no read of a demoted page without a promotion event."""
+
+    @given(
+        ops=st.lists(
+            st.tuples(st.integers(0, 3), st.integers(0, 5)),
+            min_size=1,
+            max_size=60,
+        )
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_random_op_stream(self, ops):
+        cfg = TierConfig(
+            host_capacity_bytes=2.2 * PAGE,
+            pcie_bytes_per_tick=PAGE / 2,
+            disk_bytes_per_tick=PAGE / 4,
+        )
+        ts = TieredKVStore(cfg)
+        tracked = {}  # key → raw bytes demoted and not yet back/discarded
+        now = 0.0
+        for kind, k in ops:
+            key = f"p{k}"
+            if kind == 0 and ts.location(key) == "hbm":
+                ts.demote(key, PAGE, None, now)
+                tracked[key] = PAGE
+            elif kind == 1:
+                ts.promote(key, now)  # no-op unless host/disk
+            elif kind == 2:
+                readable = ts.touch(key)
+                # a demoted page is NEVER readable without a completed
+                # promotion event (which pops it from `tracked` below)
+                assert readable == (key not in tracked)
+            else:
+                now += 1.0
+                for ev, evkey, _ in ts.tick(now):
+                    assert ev == "resident"
+                    tracked.pop(evkey)
+            # ---- invariants, after every op
+            # bytes conserved across tiers: tracked raw never mutates
+            assert ts.tracked_raw_bytes == pytest.approx(
+                sum(tracked.values())
+            )
+            # single location: state and link queue agree exactly
+            inflight = {t.key for t in ts.link._queue}
+            for kk, state in ts._state.items():
+                if state in ("to_host", "to_hbm"):
+                    assert kk in inflight
+                else:
+                    assert state in ("host", "disk")
+                    assert kk not in inflight
+            # the host tier honors its capacity
+            assert (
+                ts.host_used_bytes
+                <= cfg.host_capacity_bytes + 1e-9
+            )
+
+
+class TestAllocatorSwap:
+    def test_swap_out_frees_and_preserves_position(self):
+        a = PageBlockAllocator(4)
+        a.grow_to("r", 3)
+        a.swap_out("r", 1)
+        assert a.table("r") == (0, DEMOTED, 2)
+        assert a.free_pages == 2
+        assert not a.resident("r")
+        assert a.demoted_indices("r") == (1,)
+        # demoted entries carry no HBM bytes
+        assert a.owner_share("r") == pytest.approx(2.0)
+        a.swap_in("r", 1)
+        assert a.resident("r") and a.owner_share("r") == pytest.approx(3.0)
+
+    def test_only_private_physical_pages_demote(self):
+        a = PageBlockAllocator(2)
+        a.grow_to("r", 3)  # third page overflows
+        a.share("s", [a.table("r")[0]])
+        with pytest.raises(ValueError):
+            a.swap_out("r", 0)  # shared
+        with pytest.raises(ValueError):
+            a.swap_out("r", 2)  # overflow
+        a.swap_out("r", 1)
+        with pytest.raises(ValueError):
+            a.swap_out("r", 1)  # already demoted
+
+    def test_table_array_masks_demoted(self):
+        a = PageBlockAllocator(4)
+        a.grow_to("r", 2)
+        a.swap_out("r", 0)
+        arr = a.table_array(["r"], max_pages=3)
+        assert arr.min() >= 0
+
+
+def _tiered_kv(n_pages=6, host_pages=8.0, pcie_pages=2.0, prefix=False):
+    pb = kv_bytes_per_token(CFG) * 16
+    return PagedKVManager(
+        capacity_bytes=pb * n_pages,
+        enable_prefix_cache=prefix,
+        tier_config=TierConfig(
+            host_capacity_bytes=host_pages * pb,
+            pcie_bytes_per_tick=pcie_pages * pb,
+        ),
+    ), pb
+
+
+class TestManagerDemotion:
+    def test_request_page_roundtrip(self):
+        kv, pb = _tiered_kv()
+        kv.register("r", CFG)
+        kv.grow_to("r", 40)  # 3 pages
+        assert kv.demote_page("r", 2)
+        assert not kv.resident("r")
+        assert kv.request_bytes("r") == pytest.approx(2 * pb)
+        for _ in range(5):
+            kv.tick_tiers()
+        assert kv.promote_request("r", 4) == 1
+        restored = []
+        for t in range(10):
+            restored += kv.tick_tiers(float(t))
+            if kv.resident("r"):
+                break
+        assert kv.resident("r")
+        assert [(rid, idx) for rid, idx, _ in restored] == [("r", 2)]
+
+    def test_release_discards_tier_copies(self):
+        kv, _ = _tiered_kv()
+        kv.register("r", CFG)
+        kv.grow_to("r", 40)
+        kv.demote_page("r", 0)
+        kv.demote_page("r", 1)
+        kv.release("r")
+        assert kv.tiers.tracked_raw_bytes == 0.0
+        assert kv.tiers.link.in_flight == 0
+
+    def test_cold_trie_page_demotes_and_promotes_on_match(self):
+        kv, _ = _tiered_kv(prefix=True)
+        kv.register("w", CFG)
+        toks = list(range(40))  # 2 full pages + 8-token terminal
+        kv.grow_to("w", 40)
+        kv.insert_prefix("w", toks, "T", tuple(toks))
+        kv.release("w")  # 3 cold cached pages
+        demoted = 0
+        while kv.demote_cold_page():
+            demoted += 1
+        assert demoted == 3
+        for _ in range(10):
+            kv.tick_tiers()
+        # the prefix is still KNOWN but not shareable: a match truncates
+        # at the first host node and triggers its promotion
+        kv.register("r", CFG)
+        matched, _snap = kv.match_prefix("r", toks)
+        assert matched == 0
+        done = False
+        for t in range(20):
+            kv.tick_tiers(float(t))
+            if kv._prefix._nodes[tuple(toks[:16])].host is False:
+                done = True
+                break
+        assert done, "matched host node must promote back"
+        kv.release("r")
+        kv.register("r2", CFG)
+        matched2, _ = kv.match_prefix("r2", toks)
+        assert matched2 == 16  # the promoted first page is shareable again
+
+
+class TestHostNodePromotionUnderFullPool:
+    def test_inner_host_node_survives_failed_promotion(self):
+        """A promotion completing into a FULL pool must not drop an
+        INNER host node — that would orphan its still-cached descendant
+        chain.  It stays host; the next match retries."""
+        kv, _ = _tiered_kv(n_pages=4, prefix=True)
+        kv.register("w", CFG)
+        toks = list(range(32))  # 2 full pages
+        kv.grow_to("w", 32)
+        kv.insert_prefix("w", toks, "T", tuple(toks))
+        kv.release("w")
+        while kv.demote_cold_page():
+            pass
+        for _ in range(10):
+            kv.tick_tiers()
+        # fill the pool so take_free fails at promotion completion
+        kv.register("hog", CFG)
+        kv.grow_to("hog", 16 * 4)
+        kv.register("r", CFG)
+        kv.match_prefix("r", toks)  # fires promote_cb on the root node
+        for t in range(10):
+            kv.tick_tiers(float(t))
+        trie = kv._prefix
+        root, child = tuple(toks[:16]), tuple(toks)
+        assert root in trie._nodes and trie._nodes[root].host
+        assert child in trie._nodes, "descendant must not be orphaned"
+        # pool frees up: the retried promotion reattaches the chain
+        kv.release("hog")
+        kv.release("r")
+        kv.register("r2", CFG)
+        kv.match_prefix("r2", toks)
+        for t in range(10):
+            kv.tick_tiers(float(t))
+        assert not trie._nodes[root].host
+
+
+class TestDemotionPressureHint:
+    def test_base_and_fair_never_proactive(self):
+        assert BasePolicy().demotion_pressure("anyone") == 0.0
+        assert FairPolicy().demotion_pressure("anyone") == 0.0
+
+    def test_murs_low_rate_tenants_demote_first(self):
+        pol = MursPolicy(MursConfig.for_serving(period=1.0))
+        pool = MemoryPool(capacity=1e9)
+        running = [
+            TaskStats(
+                task_id="t0", consumption=1e8, rate=300.0,
+                progress=0.5, remaining_bytes=1e8, group="heavy",
+            ),
+            TaskStats(
+                task_id="t1", consumption=1e8, rate=10.0,
+                progress=0.5, remaining_bytes=1e8, group="light",
+            ),
+        ]
+        pol.propose(pool, running, now=0.0)
+        light = pol.demotion_pressure("light")
+        heavy = pol.demotion_pressure("heavy")
+        assert light > heavy > 0.0, "every tenant demotable, light first"
+
+    def test_priority_weight_ordered(self):
+        pol = PriorityPolicy(PriorityConfig(weights={"gold": 4.0}))
+        assert pol.demotion_pressure("gold") < pol.demotion_pressure(
+            "bronze"
+        )
+
+
+class TestOvercommitResolutionRegression:
+    def test_multi_victim_overcommit_clears_in_one_step(self, small_model):
+        """One fat victim may not cover the deficit: the resolution loop
+        must demote across however many frozen victims it takes, in the
+        SAME call — overcommit lingering a tick per victim is the bug."""
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 16 * 8  # 8-page pool
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(
+                n_slots=3, max_seq=64, hbm_capacity_bytes=cap,
+                prefix_cache=False,
+            ),
+        )
+        eng.submit(Request("a", "T", list(range(10, 40)), 4))  # 2 pages
+        eng.submit(Request("b", "U", list(range(50, 80)), 4))  # 2 pages
+        eng.submit(Request("c", "V", list(range(4)), 4))  # 1 page
+        for _ in range(2):
+            eng.step()
+        for rid in ("a", "b"):
+            req = eng.requests[rid]
+            assert req.state in ("prefill", "decoding")
+            req.state = "suspended"
+            eng._release_slot(req)
+        # c suddenly needs 7 pages: deficit 3 > either victim's 2 pages
+        eng.kv.grow_to("c", 16 * 7)
+        assert eng.kv.overflow_pages > 0
+        eng._resolve_overcommit()
+        eng.kv.reclaim()
+        assert eng.kv.overflow_pages == 0, "must clear in one call"
+        assert eng.kv.has_demoted("a") and eng.kv.has_demoted("b"), (
+            "both frozen victims must contribute pages"
+        )
+        assert eng.reactive_offloads == 0, "running work was never touched"
+
+    def test_zero_capacity_pool_reports_empty_and_admits(self):
+        """A constant-state deployment with no KV pool must read 0.0
+        (empty), not permanently 100% full."""
+        kv = PagedKVManager(capacity_bytes=0.0)
+        assert kv.used_fraction == 0.0
+        pool = MemoryPool(capacity=0.0)
+        assert pool.used_fraction == 0.0 and pool.live_fraction == 0.0
+        mamba = ARCHS["mamba2-2.7b"]
+        kv.register("r", mamba)
+        assert kv.request_pages("r") == 0 and kv.resident("r")
+
+    def test_zero_capacity_engine_serves_constant_state(self):
+        """End to end: a mamba-style engine with a zero-byte KV pool
+        admits and completes requests instead of reading full forever."""
+        cfg = ARCHS["mamba2-2.7b"].smoke()
+        params = init_model(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(n_slots=2, max_seq=32, hbm_capacity_bytes=0.0),
+        )
+        eng.submit(Request("r0", "T", list(range(6)), 4))
+        eng.submit(Request("r1", "U", list(range(8)), 4))
+        out = eng.run(max_ticks=200)
+        assert out["failed"] == 0 and out["completed"] == 2
+        assert eng.kv.used_fraction == 0.0
+
+
+class TestEngineTiering:
+    def test_reactive_tiering_spills_to_disk_but_serves(self, small_model):
+        """FAIR under a tight pool and a small host tier: the reactive
+        path demotes running work, the host tier overflows into the disk
+        tier (the paper's data spilling) — and everything still
+        completes, paying transfer stalls instead of failures."""
+        cfg, params = small_model
+        pb = kv_bytes_per_token(cfg) * 16
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(
+                n_slots=3, max_seq=64, hbm_capacity_bytes=pb * 4,
+                policy=FairPolicy(), prefix_cache=False,
+                host_capacity_bytes=pb * 1.0,
+                pcie_bytes_per_tick=pb * 2.0,
+            ),
+        )
+        for i in range(3):
+            eng.submit(Request(f"a{i}", "A", list(range(10, 18)), 30))
+        out = eng.run(max_ticks=600)
+        assert out["failed"] == 0 and out["completed"] == 3
+        assert out["offload_events"] > 0
+        assert out["tiers"]["disk_spill_bytes"] > 0
+        assert out["tiers"]["compression_ratio"] > 1.5
+        assert out["transfer_stall_ticks"] > 0
+
+    def test_murs_proactive_demotion_avoids_reactive_path(self, small_model):
+        """MURS at the same load: suspension + proactive frozen-KV
+        demotion keep the reactive spill path silent."""
+        cfg, params = small_model
+        pb = kv_bytes_per_token(cfg) * 16
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(
+                n_slots=3, max_seq=64, hbm_capacity_bytes=pb * 4,
+                policy=MursPolicy(MursConfig.for_serving(period=1.0)),
+                prefix_cache=False,
+                host_capacity_bytes=pb * 1.0,
+                pcie_bytes_per_tick=pb * 2.0,
+                demote_threshold=0.8,  # eager: demote within murs's band
+            ),
+        )
+        for i in range(3):
+            eng.submit(Request(f"a{i}", "A", list(range(10, 18)), 30))
+        out = eng.run(max_ticks=600)
+        assert out["failed"] == 0 and out["completed"] == 3
+        assert out["offload_events"] == 0, "reactive path must stay silent"
+        assert out["proactive_demotions"] > 0, "the mechanism must fire"
