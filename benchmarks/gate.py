@@ -18,11 +18,18 @@ and per tiered leg (reactive / proactive):
     disk_spill_bytes               lower is better (the paper's spill)
     throughput_tokens_per_tick     higher is better
 
+and per cluster leg (round_robin / murs / straggler / crash):
+
+    p99_ticks_to_finish            lower is better (cluster tail latency)
+    throughput_tokens_per_tick     higher is better (cluster-wide)
+
 plus the prefix-cache acceptance bits (hit rate positive, shared peak
-below the no-sharing baseline) and the tiering bit (proactive demotion
-at least halves disk spill at equal load) as hard pass/fail rows —
-those are correctness claims of the artifact, not noisy timings, so
-they gate at any regression.
+below the no-sharing baseline), the tiering bit (proactive demotion at
+least halves disk spill at equal load), and the cluster bits (live
+migration round-trips with nothing lost, a replica crash loses no
+requests, usage-rate placement beats round-robin on p99) as hard
+pass/fail rows — those are correctness claims of the artifact, not
+noisy timings, so they gate at any regression.
 
 A policy that completed nothing reports ``None`` percentiles; ``None``
 where the baseline had a number is a hard failure (the policy stopped
@@ -55,6 +62,22 @@ TIER_GATED = [
 
 #: tiered-leg acceptance booleans (hard pass/fail, no threshold)
 TIER_WIN_BITS = ("disk_spill_halved", "compression_measured")
+
+#: cluster-leg metrics, gated per mode (round_robin / murs / straggler /
+#: crash)
+CLUSTER_GATED = [
+    ("p99_ticks_to_finish", "lower_is_better"),
+    ("throughput_tokens_per_tick", "higher_is_better"),
+]
+
+#: cluster-leg acceptance booleans (hard pass/fail, no threshold):
+#: migration round-trips deliver with nothing lost, a crash loses no
+#: requests, and usage-rate placement beats round-robin on tail latency
+CLUSTER_WIN_BITS = (
+    "migration_roundtrip",
+    "crash_no_loss",
+    "p99_beats_round_robin",
+)
 
 
 def _delta_pct(base: float, cur: float) -> float:
@@ -124,6 +147,31 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
                 f"tier.{mode}", metric, direction, b_row.get(metric),
                 c_row.get(metric), threshold_pct, rows, failures,
             )
+    # cluster-leg metrics: same threshold semantics, per routing mode
+    cl_b = baseline.get("cluster", {})
+    cl_c = current.get("cluster", {})
+    for mode in ("round_robin", "murs", "straggler", "crash"):
+        b_row, c_row = cl_b.get(mode), cl_c.get(mode)
+        if not isinstance(b_row, dict) or not isinstance(c_row, dict):
+            continue
+        for metric, direction in CLUSTER_GATED:
+            _compare_row(
+                f"cluster.{mode}", metric, direction, b_row.get(metric),
+                c_row.get(metric), threshold_pct, rows, failures,
+                none_fails=True,
+            )
+    # cluster acceptance bits: live migration delivers, crashes lose
+    # nothing, placement beats round-robin — hard pass/fail
+    cluster_wins = cl_c.get("cluster_wins", {})
+    for bit in CLUSTER_WIN_BITS:
+        if bit in cluster_wins:
+            ok = bool(cluster_wins[bit])
+            rows.append(
+                ("cluster", bit, True, cluster_wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"cluster.{bit} is False")
     # prefix-cache acceptance bits: hard booleans, no threshold
     wins = current.get("prefix_cache", {}).get("sharing_wins", {})
     for bit in ("hit_rate_positive", "peak_pool_lower"):

@@ -18,6 +18,12 @@ skipped for cached tokens) and off (every request pays for its own copy),
 at equal tenant load — recording hit rate, dedup'd bytes, time-to-first-
 token, and the peak pool fraction both ways.
 
+A fourth leg runs the CLUSTER: two engine replicas behind the
+``placement_score`` router, identical load and straggler injection both
+ways, round-robin vs usage-rate-aware placement — with live KV
+migration off the throttled replica and a crash-requeue run (the
+``cluster`` record and its ``cluster_wins`` acceptance bits).
+
 Besides the CSV rows every benchmark emits, :func:`collect` returns the
 machine-readable record ``benchmarks/run.py`` writes to
 ``BENCH_serve.json``: throughput, p50/p99 ticks-to-finish, offload count,
@@ -37,7 +43,13 @@ from repro.sched import (
     PriorityConfig,
     PriorityPolicy,
 )
-from repro.serve import EngineConfig, Request, ServingEngine
+from repro.serve import (
+    ClusterConfig,
+    EngineConfig,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
 from repro.serve.kv_cache import kv_bytes_per_token
 from .common import emit, make_grep, make_sort, run_service
 
@@ -230,6 +242,126 @@ def _collect_tiering(cfg, params, debug: bool = False) -> dict:
     return out
 
 
+def _collect_cluster(cfg, params, debug: bool = False) -> dict:
+    """The CLUSTER leg: usage-rate-aware placement vs round-robin across
+    two replicas at equal load, with the fault substrate live.
+
+    Same arrival stream (heavy decodes interleaved with interactive
+    ones), same MURS engines on every replica — the only variable in the
+    placement pair is the ROUTER: FairPolicy sprays round-robin (packing
+    every heavy request onto one replica, which pays the tail),
+    MursPolicy scores ``placement_score`` (least load, blended by the
+    tenant usage-rate EMA) and splits them.
+
+    Two fault legs run the same stream through the `repro.dist.fault`
+    machinery: a STRAGGLER leg genuinely throttles replica 0 by 6× —
+    the StragglerDetector pass over replica tick-service-times flags it
+    and live-migrates its requests (extracted KV crosses a modeled
+    network link compressed, re-installs on the healthy replica, same
+    generated tokens) — and a CRASH leg kills replica 0 mid-stream: its
+    requests lose their KV but are requeued (RestartManager-style
+    bounded, capped backoff) and every submitted request still completes
+    — the `crash_no_loss` acceptance bit."""
+    del debug  # sized for signal, small enough for the CI smoke job
+    cap = kv_bytes_per_token(cfg) * 80
+
+    def engine_factory():
+        return EngineConfig(
+            n_slots=3, max_seq=64, hbm_capacity_bytes=cap,
+            policy=MursPolicy(MursConfig.for_serving(period=1.0)),
+        )
+
+    def _arrival_stream():
+        evs, t = [], 0
+        for i in range(3):
+            evs.append((t, Request(f"H{i}", "A", list(range(10, 18)), 32)))
+            evs.append((t + 1, Request(f"L{i}", "B", list(range(30, 34)), 6)))
+            t += 2
+        return evs
+
+    def _run(router, slow_at=None, crash_at=None):
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=engine_factory, n_replicas=2, router=router,
+                straggler_min_samples=4,
+                net_bytes_per_tick=kv_bytes_per_token(cfg) * 16,
+            ),
+        )
+        evs, k = _arrival_stream(), 0
+        while cl.tick < 600 and (k < len(evs) or cl.has_pending):
+            while k < len(evs) and evs[k][0] <= cl.tick:
+                cl.submit(evs[k][1])
+                k += 1
+            if slow_at is not None and cl.tick == slow_at:
+                cl.set_slowdown(0, 6.0)
+            if crash_at is not None and cl.tick == crash_at:
+                cl.crash_replica(0)
+            cl.step()
+        return cl.run(max_ticks=600)
+
+    def _row(out):
+        lat = out["latency_ticks"]
+        return {
+            "completed": out["completed"],
+            "failed": out["failed"],
+            "lost": out["lost"],
+            "crashes": out["crashes"],
+            "requeued": out["requeued"],
+            "straggler_flags": out["straggler_flags"],
+            "migrations_started": out["migrations"]["started"],
+            "migrations_completed": out["migrations"]["completed"],
+            "migration_raw_bytes": out["migrations"]["raw_bytes"],
+            "migration_wire_bytes": out["migrations"]["wire_bytes"],
+            "makespan_ticks": out["ticks"],
+            "tokens_generated": out["tokens_generated"],
+            "throughput_tokens_per_tick": round(
+                out["tokens_generated"] / max(out["ticks"], 1), 3
+            ),
+            "p50_ticks_to_finish": _percentile(lat, 0.50),
+            "p99_ticks_to_finish": _percentile(lat, 0.99),
+        }
+
+    murs_router = lambda: MursPolicy(MursConfig.for_serving(period=1.0))
+    legs = {
+        # placement comparison: identical load, healthy replicas — the
+        # ONLY variable is the router (round-robin packs every heavy
+        # request onto one replica; demand-aware placement splits them)
+        "round_robin": _row(_run(FairPolicy())),
+        "murs": _row(_run(murs_router())),
+        # fault legs: same stream under a 6×-throttled replica (the
+        # straggler pass live-migrates its requests off) and under a
+        # mid-stream replica crash (bounded-retry requeue)
+        "straggler": _row(_run(murs_router(), slow_at=6)),
+        "crash": _row(_run(murs_router(), crash_at=8)),
+    }
+    n = len(_arrival_stream())
+    rr, mu = legs["round_robin"], legs["murs"]
+    sg, cr = legs["straggler"], legs["crash"]
+    legs["n_requests"] = n
+    legs["cluster_wins"] = {
+        # the ISSUE's acceptance criteria, recorded in the artifact:
+        # usage-rate placement beats round-robin on tail completion time
+        # at equal load
+        "p99_beats_round_robin": (
+            mu["p99_ticks_to_finish"] is not None
+            and rr["p99_ticks_to_finish"] is not None
+            and mu["p99_ticks_to_finish"] < rr["p99_ticks_to_finish"]
+        ),
+        # at least one LIVE migration delivered (extracted KV crossed
+        # the link, re-installed, request finished elsewhere) with
+        # nothing lost under a genuinely throttled replica
+        "migration_roundtrip": (
+            sg["migrations_completed"] >= 1
+            and sg["completed"] == n
+            and sg["lost"] == 0
+        ),
+        # a replica crash requeues its requests instead of losing them
+        "crash_no_loss": cr["completed"] == n and cr["lost"] == 0,
+    }
+    return legs
+
+
 def _policies():
     return (
         ("fair", lambda: FairPolicy()),
@@ -322,6 +454,9 @@ def collect(debug: bool = False) -> dict:
     # tiered leg: reactive-only vs proactive demotion at equal load — the
     # paper's data-spilling claim, measured as disk-tier traffic
     record["tiering"] = _collect_tiering(cfg, params, debug)
+    # cluster leg: usage-rate placement vs round-robin across replicas,
+    # with live migration off a straggler and crash-requeue recovery
+    record["cluster"] = _collect_cluster(cfg, params, debug)
     # online §III classification of a decode request (MURS engine, no
     # pressure) — reuses the already-initialized model
     probe_eng = ServingEngine(
@@ -406,6 +541,28 @@ def main() -> dict:
     emit("serve.tier.disk_spill_halved",
          int(tr["tiering_wins"]["disk_spill_halved"]),
          "proactive tiering halves disk spill at equal load")
+    cluster = record["cluster"]
+    for mode in ("round_robin", "murs", "straggler", "crash"):
+        row = cluster[mode]
+        emit(f"serve.cluster.{mode}.completed", row["completed"],
+             f"of {cluster['n_requests']} requests, 2 replicas")
+        emit(f"serve.cluster.{mode}.p99_ticks", row["p99_ticks_to_finish"])
+        emit(f"serve.cluster.{mode}.throughput",
+             row["throughput_tokens_per_tick"], "tokens/tick, cluster-wide")
+        emit(f"serve.cluster.{mode}.migrations",
+             row["migrations_completed"],
+             "live migrations delivered off the straggler")
+    emit("serve.cluster.crash.requeued", cluster["crash"]["requeued"],
+         "crash-requeued requests (RestartManager-style bounded retry)")
+    wins = cluster["cluster_wins"]
+    emit("serve.cluster.p99_beats_round_robin",
+         int(wins["p99_beats_round_robin"]),
+         "usage-rate placement beats round-robin at equal load")
+    emit("serve.cluster.migration_roundtrip",
+         int(wins["migration_roundtrip"]),
+         "KV extracted, moved compressed, re-installed — nothing lost")
+    emit("serve.cluster.crash_no_loss", int(wins["crash_no_loss"]),
+         "replica crash requeues its requests instead of losing them")
     emit("serve.murs.decode_memory_model", record["probe_memory_model"],
          "paper SIII online classification (attention decode = linear)")
     return record

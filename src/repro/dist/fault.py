@@ -51,6 +51,11 @@ class StragglerDetector:
     def observe(self, host: str, step_time_s: float) -> None:
         self._times[host].append(step_time_s)
 
+    def forget(self, host: str) -> None:
+        """Drop a host's samples — it restarted or was replaced, so its
+        history describes a process that no longer exists."""
+        self._times.pop(host, None)
+
     def _means(self) -> Dict[str, float]:
         return {
             h: sum(ts) / len(ts)
@@ -66,13 +71,32 @@ class StragglerDetector:
         return sorted(h for h, m in means.items() if m > self.ratio * median)
 
     def rebalance_weights(self) -> Dict[str, float]:
-        """Work weights ∝ host speed (1/mean step time), summing to 1."""
-        means = {
-            h: sum(ts) / len(ts) for h, ts in self._times.items() if ts
-        }
-        if not means:
+        """Work weights ∝ host speed (1/mean step time), summing to 1.
+
+        Means come from :meth:`_means` — the same ``min_samples``-gated
+        statistics :meth:`stragglers` consults — so one noisy first sample
+        from a fresh host cannot skew the whole weight vector.  Hosts
+        still below ``min_samples`` keep their current share: they are
+        excluded from the inverse-speed ranking and assigned the uniform
+        weight (no evidence = no penalty, no bonus).  When NO host has
+        enough samples yet the fallback is explicit: every observed host
+        weighs equally.
+        """
+        means = self._means()
+        observed = [h for h, ts in self._times.items() if ts]
+        if not observed:
             return {}
+        if not means:
+            # explicit all-hosts fallback: nobody has min_samples yet, so
+            # there is no trustworthy speed signal — split work evenly
+            return {h: 1.0 / len(observed) for h in observed}
         inv = {h: 1.0 / max(m, 1e-9) for h, m in means.items()}
+        unranked = [h for h in observed if h not in means]
+        if unranked:
+            # under-sampled hosts take the mean ranked weight
+            uniform = sum(inv.values()) / len(inv)
+            for h in unranked:
+                inv[h] = uniform
         total = sum(inv.values())
         return {h: v / total for h, v in inv.items()}
 
@@ -86,10 +110,17 @@ class RestartManager:
         *,
         max_retries: int = 3,
         backoff_s: float = 1.0,
+        max_backoff_s: float = 60.0,
     ) -> None:
+        if max_backoff_s < backoff_s:
+            raise ValueError(
+                f"max_backoff_s ({max_backoff_s}) must be >= backoff_s "
+                f"({backoff_s})"
+            )
         self.ckpt_dir = ckpt_dir
         self.max_retries = max_retries
         self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
         self.failures = 0
         self.last_heartbeat: Optional[Tuple[int, float]] = None
 
@@ -108,9 +139,17 @@ class RestartManager:
         return self.failures < self.max_retries
 
     def on_failure(self, exc: BaseException) -> float:
-        """Record a failure; returns the backoff delay in seconds."""
+        """Record a failure; returns the backoff delay in seconds.
+
+        Exponential growth is CAPPED at ``max_backoff_s``: a long
+        preemption loop (every retry failing for hours) must produce a
+        bounded sleep, not an uncapped ``2**n`` that quietly reaches
+        hour-scale delays before the retry budget runs out.
+        """
         self.failures += 1
-        delay = self.backoff_s * (2.0 ** (self.failures - 1))
+        delay = min(
+            self.backoff_s * (2.0 ** (self.failures - 1)), self.max_backoff_s
+        )
         log.warning(
             "step failed (%s: %s) — retry %d/%d after %.1fs",
             type(exc).__name__, exc, self.failures, self.max_retries, delay,

@@ -9,7 +9,10 @@ and ``admission_headroom`` is 1.0, so the runtimes apply stock semantics
 exists).  The ``cache_pressure`` and ``demotion_pressure`` hints stay at
 the BasePolicy default of 0.0 for every tenant: the stock prefix-cache
 eviction order is pure LRU, and frozen KV is never demoted proactively —
-reactive-only tiering is exactly what "stock" means.
+reactive-only tiering is exactly what "stock" means.  Likewise
+``placement_score`` stays at the base 0.0 for every replica, so
+cross-replica routing under FAIR is the router's round-robin tie-break:
+pressure-oblivious request spraying, the multi-server stock baseline.
 """
 
 from __future__ import annotations

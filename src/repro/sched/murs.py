@@ -166,18 +166,7 @@ class MursPolicy(BasePolicy):
             del self._resumed_at[t]
         for t in running:
             if t.group:
-                prev = self._group_rate.get(t.group)
-                self._group_rate[t.group] = (
-                    t.rate if prev is None else 0.8 * prev + 0.2 * t.rate
-                )
-                self._group_seen[t.group] = now
-        for g in [
-            g
-            for g, seen in self._group_seen.items()
-            if (now - seen) > self._group_rate_horizon
-        ]:
-            del self._group_seen[g]
-            del self._group_rate[g]
+                self.note_group_rate(t.group, t.rate, now)
         usage = pool.live_fraction
 
         if usage < cfg.yellow:
@@ -333,6 +322,54 @@ class MursPolicy(BasePolicy):
         if t.consumption > fair_share:
             return True
         return t.progress > 1e-9 and t.projected_total > fair_share
+
+    # -------------------------------------------------------- group rate EMA
+    def note_group_rate(self, group: str, rate: float, now: float = 0.0) -> None:
+        """One usage-rate observation for ``group`` (EMA, horizon-pruned).
+        Fed by :meth:`propose` for a replica-local policy, and by a
+        ``ServingCluster`` forwarding replica-level EMAs into its router
+        — the router never runs ``propose`` itself."""
+        prev = self._group_rate.get(group)
+        self._group_rate[group] = (
+            rate if prev is None else 0.8 * prev + 0.2 * rate
+        )
+        self._group_seen[group] = now
+        for g in [
+            g
+            for g, seen in self._group_seen.items()
+            if (now - seen) > self._group_rate_horizon
+        ]:
+            del self._group_seen[g]
+            del self._group_rate[g]
+
+    def group_rates(self) -> Dict[str, float]:
+        return dict(self._group_rate)
+
+    # ------------------------------------------------------ cluster placement
+    def placement_score(self, group: str, replica_stats) -> float:
+        """Pressure- and rate-aware routing (paper §III applied ACROSS
+        replicas): the score is the negated replica load, where "load"
+        is read through the group's usage-rate class.
+
+        A HIGH-rate tenant's requests grow the pool fastest, so for them
+        load is the replica's byte DEMAND (its next thousand tokens need
+        page headroom — placing it on a nearly-full replica buys
+        suspensions and spills).  A LOW/constant-rate tenant barely
+        touches the pool; its latency is gated by batch slots, so for it
+        load is the replica's SLOT occupancy.  The per-group usage-rate
+        EMA (the same one behind ``cache_pressure``) blends the two —
+        unseen groups sit in the middle.  Equal-load replicas tie and
+        fall back to the router's round-robin cursor.
+        """
+        rate_norm = 1.0 - self._inverse_rate_score(group)  # high rate → 1
+        # committed-peak demand when the replica reports it: materialized
+        # bytes alone lag a just-placed heavy request by its whole decode
+        demand = max(
+            float(replica_stats.get("demand_fraction", 0.0)),
+            float(replica_stats.get("projected_fraction", 0.0)),
+        )
+        slots = float(replica_stats.get("slot_load", 0.0))
+        return -(rate_norm * demand + (1.0 - rate_norm) * slots)
 
     # ----------------------------------------------------------- cache hint
     def _inverse_rate_score(self, group: str) -> float:

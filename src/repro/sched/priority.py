@@ -96,6 +96,21 @@ class PriorityPolicy(BasePolicy):
             free -= 1
         return picks
 
+    # ------------------------------------------------------ cluster placement
+    def placement_score(self, group: str, replica_stats) -> float:
+        """Weight-proportional routing: every tenant avoids loaded
+        replicas, but a high-weight tenant's aversion is divided down —
+        its scores sit closer to zero, so on a contended routing pass
+        (the cluster places best-score-first) it claims the emptiest
+        replica ahead of low-weight traffic.  Replica load blends byte
+        demand and slot occupancy evenly (no rate signal here)."""
+        demand = max(
+            float(replica_stats.get("demand_fraction", 0.0)),
+            float(replica_stats.get("projected_fraction", 0.0)),
+        )
+        slots = float(replica_stats.get("slot_load", 0.0))
+        return -0.5 * (demand + slots) / self.weight_of(group)
+
     # ----------------------------------------------------------- cache hint
     def cache_pressure(self, group: str) -> float:
         """Weight-ordered eviction: a low-weight tenant's cold cached

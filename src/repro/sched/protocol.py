@@ -14,11 +14,22 @@ A policy owns four runtime hooks (the minimal surface both runtimes call):
     drop(task_id)
         the task's job was cancelled — purge it from every policy structure.
 
-plus one placement hook:
+plus two placement hooks:
 
     assign(free, pending) → group ids to launch from, one per free core
         how free execution slots are offered to tenants/jobs.  FAIR's
         round-robin cursor lives HERE now, not inlined in the executor.
+
+    placement_score(group, replica_stats) → preference for placing the
+        group's next request on the replica described by ``replica_stats``
+        (a ``ServingCluster`` routing decision — the same usage-rate
+        classes of paper §III applied ACROSS replicas).  Higher = better;
+        the router breaks exact ties round-robin, so the base default of
+        0.0 for every replica IS round-robin (FAIR).  MURS scores by
+        negated demand, scaled up for high-usage-rate groups (a heavy
+        tenant is steered harder toward the emptiest replica — its
+        placement mistake costs the most future allocation);
+        PriorityPolicy scales the same aversion by tenant weight.
 
 and two memory-placement hints:
 
@@ -104,6 +115,16 @@ class SchedulingPolicy(Protocol):
 
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]: ...
 
+    def placement_score(
+        self, group: str, replica_stats: Mapping[str, float]
+    ) -> float: ...
+
+    def note_group_rate(
+        self, group: str, rate: float, now: float = 0.0
+    ) -> None: ...
+
+    def group_rates(self) -> Mapping[str, float]: ...
+
     def cache_pressure(self, group: str) -> float: ...
 
     def demotion_pressure(self, group: str) -> float: ...
@@ -179,6 +200,28 @@ class BasePolicy:
         return 0.0
 
     # ------------------------------------------------------------- placement
+    def placement_score(
+        self, group: str, replica_stats: Mapping[str, float]
+    ) -> float:
+        """Cross-replica placement preference: 0.0 for every replica →
+        the router's round-robin tie-break decides (the stock baseline
+        spreads requests across replicas with no pressure awareness)."""
+        return 0.0
+
+    def note_group_rate(
+        self, group: str, rate: float, now: float = 0.0
+    ) -> None:
+        """Feed one group-level usage-rate observation into the policy.
+        A cluster router never runs ``propose`` (it has no pool), so this
+        is how the per-replica rate signal reaches its placement scores;
+        the base policy keeps no rate state and ignores it."""
+
+    def group_rates(self) -> Mapping[str, float]:
+        """The policy's current per-group usage-rate estimates (empty for
+        rate-oblivious policies) — what a cluster forwards from replica
+        policies into its router."""
+        return {}
+
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]:
         """Round-robin over groups with pending work; one pick per core."""
         groups = [g for g, n in pending.items() if n > 0]

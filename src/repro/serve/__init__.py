@@ -1,4 +1,5 @@
-from .engine import EngineConfig, Request, ServingEngine
+from .cluster import ClusterConfig, ServingCluster
+from .engine import EngineConfig, MigrationTicket, Request, ServingEngine
 from .kv_cache import (
     CACHE_OWNER,
     DEMOTED,
@@ -12,9 +13,12 @@ from .tiers import TierConfig, TieredKVStore
 
 __all__ = [
     "CACHE_OWNER",
+    "ClusterConfig",
     "DEMOTED",
     "EngineConfig",
+    "MigrationTicket",
     "Request",
+    "ServingCluster",
     "ServingEngine",
     "PageBlockAllocator",
     "PagedKVManager",

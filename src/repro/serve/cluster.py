@@ -1,0 +1,472 @@
+"""ServingCluster: N engine replicas behind a usage-rate-aware router.
+
+The paper's setting is a *service*: many tenants' traffic lands on shared
+servers at once, and pressure on one server degrades everyone on it.  A
+single :class:`~repro.serve.engine.ServingEngine` mitigates pressure
+WITHIN one HBM pool; this module is the step the ROADMAP calls "from a
+server to a service" — the same pluggable policy layer applied ACROSS
+replicas:
+
+* **Routing** goes through ``SchedulingPolicy.placement_score(group,
+  replica_stats)``: the router scores every (queued request, replica)
+  pair against live replica stats (byte demand net of reclaimable cache,
+  slot occupancy — both including the bytes already routed this pass) and
+  places best-score-first.  The base score of 0.0 everywhere makes FAIR
+  pure round-robin; :class:`MursPolicy` blends demand vs slot load by the
+  tenant's usage-rate EMA (§III applied across machines); PriorityPolicy
+  divides its aversion by tenant weight so heavy-weight traffic claims
+  the emptiest replica on contended passes.
+
+* **Straggler detection** reuses :class:`repro.dist.fault.
+  StragglerDetector` verbatim over each replica's modeled tick service
+  time (``ServingEngine.last_tick_cost`` × any injected slowdown — a
+  deterministic stand-in for wall clock).  A flagged replica triggers
+  **live request migration**: the victim's KV leaves the replica via
+  :meth:`ServingEngine.export_request` (slot-cache subtree for running
+  work, frozen payloads for suspended work, compressed tier blocks for
+  demoted pages), crosses a modeled inter-replica link (the same
+  :class:`~repro.serve.tiers.PcieLink` FIFO-drain semantics, at network
+  rate, compressed bytes), and lands on the best target at delivery time
+  via :meth:`ServingEngine.import_request`.
+
+* **Crash recovery** is a fault-injection hook (:meth:`crash_replica`):
+  the replica's live requests lose their KV (that is what a crash means)
+  but not their identity — each is requeued through a per-request
+  :class:`repro.dist.fault.RestartManager` (bounded retries, capped
+  exponential backoff in ticks) and replays on whichever replica the
+  router picks; only a request that exhausts its retry budget is lost.
+
+Migration traffic is NOT spill (DESIGN.md §8): ``migration.wire_bytes``
+crosses the inter-replica link to keep a request alive somewhere better,
+while spill parks bytes below HBM on the same machine.  The two are
+recorded separately and gated separately.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.configs.base import ArchConfig
+from repro.dist.fault import RestartManager, StragglerDetector
+from repro.sched import FairPolicy, SchedulingPolicy
+from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.serve.tiers import PcieLink
+
+__all__ = ["ClusterConfig", "ReplicaCrash", "ServingCluster"]
+
+
+class ReplicaCrash(RuntimeError):
+    """The failure a crashed replica's requests are retried against."""
+
+
+@dataclass
+class ClusterConfig:
+    """Replica count, routing policy, link model, and fault knobs."""
+
+    #: engine-config FACTORY — called once per replica (and per restart),
+    #: because a policy instance is stateful and must never be shared
+    engine: Callable[[], EngineConfig] = EngineConfig
+    n_replicas: int = 2
+    #: cluster-level routing policy (placement_score / assign); None →
+    #: FairPolicy, i.e. pure round-robin spraying
+    router: Optional[SchedulingPolicy] = None
+    #: inter-replica link rate in bytes/tick (migrations FIFO-drain at
+    #: this rate; compressed bytes cross, same arithmetic as the PCIe
+    #: model).  inf → migration lands next tick.
+    net_bytes_per_tick: float = float("inf")
+    # ---- straggler pass (repro.dist.fault.StragglerDetector)
+    straggler_min_samples: int = 8
+    straggler_ratio: float = 1.5
+    straggler_window: int = 32
+    #: max live migrations initiated per straggler per pass
+    migrate_batch: int = 2
+    #: ticks a replica is left alone after migrations were pulled off it
+    #: (its window mean needs time to reflect the lighter load)
+    migration_cooldown_ticks: int = 8
+    # ---- crash recovery (RestartManager-style bounded retry)
+    max_retries: int = 3
+    retry_backoff_ticks: float = 2.0
+    max_backoff_ticks: float = 16.0
+
+    def __post_init__(self) -> None:
+        if self.n_replicas < 1:
+            raise ValueError("n_replicas must be >= 1")
+        if self.net_bytes_per_tick <= 0:
+            raise ValueError("net_bytes_per_tick must be > 0")
+
+
+class ServingCluster:
+    """N :class:`ServingEngine` replicas, one router, one straggler pass.
+
+    The cluster owns its own clock: every :meth:`step` routes queued
+    requests, drains the inter-replica link, ticks every live replica in
+    lockstep, feeds the straggler detector, and harvests completions.
+    Request latency is measured in CLUSTER ticks from first submission —
+    a crash-requeued request keeps its original submit stamp, so retries
+    show up as tail latency, never as amnesia.
+    """
+
+    def __init__(
+        self, cfg: ArchConfig, params: Any, ccfg: ClusterConfig
+    ) -> None:
+        self.cfg = cfg
+        self.params = params
+        self.ccfg = ccfg
+        self.router: SchedulingPolicy = ccfg.router or FairPolicy()
+        self.replicas: List[ServingEngine] = [
+            ServingEngine(cfg, params, ccfg.engine())
+            for _ in range(ccfg.n_replicas)
+        ]
+        self.link = PcieLink()  # the inter-replica network, same semantics
+        self.detector = StragglerDetector(
+            min_samples=ccfg.straggler_min_samples,
+            ratio=ccfg.straggler_ratio,
+            window=ccfg.straggler_window,
+        )
+        self.tick = 0
+        self.queue: List[Request] = []  # cluster-level admission queue
+        self._rr_cursor = 0  # round-robin tie-break over replicas
+        #: rid → replica index (or -1 while its bytes are on the wire)
+        self._home: Dict[str, int] = {}
+        self._inflight: Dict[str, Any] = {}  # rid → MigrationTicket
+        self._submit_tick: Dict[str, int] = {}
+        self._finish_tick: Dict[str, int] = {}
+        #: per-request crash-retry budget (RestartManager reused verbatim;
+        #: its backoff seconds are read as cluster ticks)
+        self._retry: Dict[str, RestartManager] = {}
+        #: (due_tick, request) — crash-requeued work waiting out backoff
+        self._requeue: List[Tuple[int, Request]] = []
+        self._slowdown: List[float] = [1.0] * ccfg.n_replicas
+        self._last_migration: List[int] = [-(10**9)] * ccfg.n_replicas
+        self._done_seen: List[int] = [0] * ccfg.n_replicas
+        self._failed_seen: List[int] = [0] * ccfg.n_replicas
+        self._tokens_from_dead = 0.0
+        self.completed: List[str] = []
+        self.failed: List[str] = []
+        self.lost: List[str] = []  # retry budget exhausted after crashes
+        self.crashes = 0
+        self.requeued = 0
+        self.migrations_started = 0
+        self.migrations_completed = 0
+        self.migration_raw_bytes = 0.0
+        self.migration_wire_bytes = 0.0
+        self.straggler_flags = 0  # straggler-pass detections
+
+    # -------------------------------------------------------------- tenants
+    def submit(self, req: Request) -> None:
+        self._submit_tick.setdefault(req.request_id, self.tick)
+        self.queue.append(req)
+
+    # ------------------------------------------------------- fault injection
+    def set_slowdown(self, replica: int, factor: float) -> None:
+        """Throttle a replica by ``factor`` (models a noisy neighbour /
+        thermal throttle / failing host — the straggler the detector
+        exists to catch).  The slowdown is REAL, not just observed: a
+        replica at factor f steps only every ~f cluster ticks, so its
+        requests genuinely crawl and migrating them off genuinely helps;
+        the detector sees the matching f× service time."""
+        if factor <= 0:
+            raise ValueError("slowdown factor must be > 0")
+        self._slowdown[replica] = factor
+
+    def crash_replica(self, replica: int) -> int:
+        """Kill and restart one replica.  Its KV is gone; its requests are
+        not: each live/queued request is reset to a cold start and
+        requeued after a bounded, capped backoff — unless its retry
+        budget is exhausted, in which case it is recorded as lost (and
+        failed).  Returns the number of requests requeued."""
+        eng = self.replicas[replica]
+        self._harvest_replica(replica)  # terminal states survive a crash
+        # only DELIVERED work survives in the token count: a live
+        # victim's pre-crash tokens die with the KV and are regenerated
+        # elsewhere — counting them too would let a crash inflate the
+        # gated cluster throughput above what was actually served
+        self._tokens_from_dead += sum(
+            len(r.generated)
+            for r in eng.requests.values()
+            if r.state in ("done", "failed")
+        )
+        victims = [rid for rid, _ in eng.migratable_requests()]
+        requeued = 0
+        for rid in victims:
+            req = eng.requests[rid]
+            self._home.pop(rid, None)
+            rm = self._retry.setdefault(
+                rid,
+                RestartManager(
+                    "",
+                    max_retries=self.ccfg.max_retries,
+                    backoff_s=self.ccfg.retry_backoff_ticks,
+                    max_backoff_s=self.ccfg.max_backoff_ticks,
+                ),
+            )
+            if not rm.should_retry():
+                self.lost.append(rid)
+                self.failed.append(rid)
+                self._finish_tick[rid] = self.tick
+                continue
+            delay = rm.on_failure(ReplicaCrash(f"replica {replica} died"))
+            self._reset_request(req)
+            self._requeue.append((self.tick + int(round(delay)), req))
+            requeued += 1
+        self.requeued += requeued
+        # restart: a fresh engine (fresh policy state, empty pool); the
+        # detector forgets the dead process's samples
+        self.replicas[replica] = ServingEngine(
+            self.cfg, self.params, self.ccfg.engine()
+        )
+        self.detector.forget(self._host(replica))
+        self._slowdown[replica] = 1.0
+        self._done_seen[replica] = 0
+        self._failed_seen[replica] = 0
+        self.crashes += 1
+        return requeued
+
+    @staticmethod
+    def _reset_request(req: Request) -> None:
+        """Back to a cold start: the crash took the KV and every token
+        generated so far; identity and the prompt survive."""
+        req.slot = -1
+        req.pos = 0
+        req.generated = []
+        req.state = "queued"
+        req.finish_tick = -1
+        req.first_token_tick = -1
+        req.cached_tokens = 0
+        req.snap_key = None
+        req.hit_counted = False
+
+    # -------------------------------------------------------------- routing
+    def _host(self, replica: int) -> str:
+        return f"r{replica}"
+
+    def _route(self) -> None:
+        """Place every queued request: score each (request, replica) pair
+        via the router policy's ``placement_score``, place best-first,
+        and fold each placement's estimated bytes/slot back into the
+        stats so one routing pass cannot stack a burst onto the replica
+        that merely LOOKED emptiest when the pass began."""
+        if not self.queue:
+            return
+        stats = {
+            i: dict(eng.replica_stats())
+            for i, eng in enumerate(self.replicas)
+        }
+        caps = {
+            i: max(eng.pool.capacity, 1.0)
+            for i, eng in enumerate(self.replicas)
+        }
+        flagged = self._flagged_indices()
+        if flagged and len(flagged) < len(self.replicas):
+            # never route NEW work onto a detected straggler while a
+            # healthy replica exists — placement_score has no straggler
+            # axis, so the router enforces this exclusion itself
+            stats = {i: s for i, s in stats.items() if i not in flagged}
+        pending, self.queue = self.queue, []
+        while pending:
+            best: Optional[Tuple[float, int, int]] = None  # score, qpos, -i
+            for qpos, req in enumerate(pending):
+                for i in stats:
+                    s = self.router.placement_score(req.tenant, stats[i])
+                    # ties (score AND queue order) break round-robin via
+                    # the cursor distance, so the base policy's all-zero
+                    # scores reproduce classic round-robin spraying
+                    rr = (i - self._rr_cursor) % len(self.replicas)
+                    cand = (s, -qpos, -rr, i)
+                    if best is None or cand > best:
+                        best = cand
+            _, nqpos, _, target = best
+            req = pending.pop(-nqpos)
+            eng = self.replicas[target]
+            inbound = eng.estimate_request_bytes(req)
+            stats[target]["demand_fraction"] += inbound / caps[target]
+            stats[target]["projected_fraction"] = (
+                stats[target].get("projected_fraction", 0.0)
+                + inbound / caps[target]
+            )
+            stats[target]["slot_load"] += 1.0 / max(eng.ecfg.n_slots, 1)
+            stats[target]["queued"] += 1.0
+            eng.submit(req)
+            self._home[req.request_id] = target
+            self._rr_cursor = (target + 1) % len(self.replicas)
+
+    def _flagged_indices(self) -> Set[int]:
+        return {int(h[1:]) for h in self.detector.stragglers()}
+
+    def _pick_target(self, group: str, exclude: Set[int]) -> int:
+        """Best replica for a migrating request, at DELIVERY time — so a
+        target that crashed (or started straggling) while the bytes were
+        in flight is simply never chosen."""
+        best: Optional[Tuple[float, int, int]] = None
+        for i, eng in enumerate(self.replicas):
+            if i in exclude and len(exclude) < len(self.replicas):
+                continue
+            s = self.router.placement_score(group, eng.replica_stats())
+            rr = (i - self._rr_cursor) % len(self.replicas)
+            cand = (s, -rr, i)
+            if best is None or cand > best:
+                best = cand
+        return best[2]
+
+    # ------------------------------------------------------------ migration
+    def migrate(self, request_id: str, source: int) -> bool:
+        """Begin live migration of one request off ``source``: extract its
+        state, put the compressed bytes on the inter-replica link, and
+        deliver to the best target when the transfer completes.  Returns
+        False when the request is not there / not migratable."""
+        ticket = self.replicas[source].export_request(request_id)
+        if ticket is None:
+            return False
+        self._inflight[request_id] = (ticket, source)
+        self._home[request_id] = -1
+        self.migrations_started += 1
+        self.migration_raw_bytes += ticket.raw_bytes
+        self.migration_wire_bytes += ticket.wire_bytes
+        self.link.send(
+            request_id, ticket.wire_bytes, self.ccfg.net_bytes_per_tick
+        )
+        return True
+
+    def _deliver_migrations(self) -> None:
+        for tr in self.link.tick():
+            entry = self._inflight.pop(tr.key, None)
+            if entry is None:
+                continue
+            ticket, source = entry
+            # exclude the source AND every currently-flagged straggler:
+            # with 3+ replicas a victim must land on a healthy one, not
+            # hop between two slow machines paying wire bytes each time
+            target = self._pick_target(
+                ticket.request.tenant,
+                exclude={source} | self._flagged_indices(),
+            )
+            self.replicas[target].import_request(ticket)
+            self._home[tr.key] = target
+            self.migrations_completed += 1
+
+    def _straggler_pass(self) -> None:
+        flagged = self.detector.stragglers()
+        if not flagged:
+            return
+        healthy = {
+            i
+            for i in range(len(self.replicas))
+            if self._host(i) not in flagged
+        }
+        if not healthy:
+            return  # everyone is slow: migration would just churn
+        for host in flagged:
+            i = int(host[1:])
+            if (
+                self.tick - self._last_migration[i]
+                < self.ccfg.migration_cooldown_ticks
+            ):
+                continue
+            victims = self.replicas[i].migratable_requests()
+            moved = 0
+            for rid, _state in victims:
+                if moved >= self.ccfg.migrate_batch:
+                    break
+                if self.migrate(rid, i):
+                    moved += 1
+            if moved:
+                self.straggler_flags += 1
+                self._last_migration[i] = self.tick
+
+    # ------------------------------------------------------------- harvest
+    def _harvest_replica(self, i: int) -> None:
+        eng = self.replicas[i]
+        for rid in eng.completed[self._done_seen[i]:]:
+            self.completed.append(rid)
+            self._finish_tick[rid] = self.tick
+            self._retry.pop(rid, None)
+        self._done_seen[i] = len(eng.completed)
+        for rid in eng.failed[self._failed_seen[i]:]:
+            self.failed.append(rid)
+            self._finish_tick[rid] = self.tick
+            self._retry.pop(rid, None)
+        self._failed_seen[i] = len(eng.failed)
+
+    # ----------------------------------------------------------------- tick
+    def step(self) -> None:
+        # crash-requeued work whose backoff expired rejoins the queue
+        due = [r for t, r in self._requeue if t <= self.tick]
+        self._requeue = [(t, r) for t, r in self._requeue if t > self.tick]
+        self.queue.extend(due)
+        self._route()
+        self._deliver_migrations()
+        for i, eng in enumerate(self.replicas):
+            # a throttled replica loses real ticks, not just face: at
+            # slowdown f it advances once every ~f cluster ticks
+            period = max(int(round(self._slowdown[i])), 1)
+            if self.tick % period == 0:
+                eng.step()
+            self.detector.observe(
+                self._host(i), eng.last_tick_cost * self._slowdown[i]
+            )
+            self._harvest_replica(i)
+            # forward each replica policy's usage-rate EMAs into the
+            # router: placement_score sees the SAME §III signal the
+            # replica-local schedulers measured (a router never runs
+            # propose, so this is its only rate feed)
+            for g, r in eng.policy.group_rates().items():
+                self.router.note_group_rate(g, r, float(self.tick))
+        self._straggler_pass()
+        self.tick += 1
+
+    @property
+    def has_pending(self) -> bool:
+        return bool(
+            self.queue
+            or self._inflight
+            or self._requeue
+            or any(eng.has_pending for eng in self.replicas)
+        )
+
+    def run(self, max_ticks: int = 2000) -> Dict[str, Any]:
+        while self.tick < max_ticks and self.has_pending:
+            self.step()
+        lat = sorted(
+            self._finish_tick[rid] - self._submit_tick[rid]
+            for rid in self.completed
+            if rid in self._submit_tick
+        )
+        tokens = self._tokens_from_dead + sum(
+            len(r.generated)
+            for eng in self.replicas
+            for r in eng.requests.values()
+        )
+        return {
+            "policy": self.router.name,
+            "n_replicas": len(self.replicas),
+            "submitted": len(self._submit_tick),
+            "completed": len(self.completed),
+            "failed": len(self.failed),
+            "lost": len(self.lost),
+            "in_flight_unfinished": len(self._inflight),
+            "crashes": self.crashes,
+            "requeued": self.requeued,
+            "straggler_flags": self.straggler_flags,
+            "migrations": {
+                "started": self.migrations_started,
+                "completed": self.migrations_completed,
+                "raw_bytes": self.migration_raw_bytes,
+                "wire_bytes": self.migration_wire_bytes,
+            },
+            "latency_ticks": lat,
+            "ticks": self.tick,
+            "tokens_generated": tokens,
+            "replicas": [
+                {
+                    "completed": len(eng.completed),
+                    "failed": len(eng.failed),
+                    "suspensions": eng.suspensions,
+                    "offload_events": eng.reactive_offloads,
+                    "migrations_in": eng.migrations_in,
+                    "migrations_out": eng.migrations_out,
+                    "peak_used_fraction": eng.peak_used_fraction,
+                }
+                for eng in self.replicas
+            ],
+        }

@@ -73,8 +73,13 @@ from repro.core.memory_manager import MemoryPool
 from repro.core.sampler import Sampler
 from repro.sched import FairPolicy, MursConfig, MursPolicy, SchedulingPolicy
 from repro.models import decode_step, init_cache, prefill
-from repro.serve.kv_cache import CACHE_OWNER, PagedKVManager
-from repro.serve.tiers import TierConfig
+from repro.serve.kv_cache import (
+    CACHE_OWNER,
+    DEMOTED,
+    PagedKVManager,
+    constant_state_bytes,
+)
+from repro.serve.tiers import TierConfig, wire_bytes_for
 
 
 @dataclass
@@ -87,7 +92,8 @@ class Request:
     slot: int = -1
     pos: int = 0  # tokens materialized in the cache so far
     generated: List[int] = field(default_factory=list)
-    state: str = "queued"  # queued|prefill|decoding|suspended|offloaded|done|failed
+    # queued|prefill|decoding|suspended|offloaded|importing|done|failed
+    state: str = "queued"
     finish_tick: int = -1
     #: MURS §III classification of this request's memory behaviour, as
     #: measured online by the sampler (constant/sub_linear/linear/super_linear)
@@ -125,6 +131,33 @@ class Request:
     @property
     def prefilling(self) -> bool:
         return self.pos < len(self.feed_tokens)
+
+
+@dataclass
+class MigrationTicket:
+    """A request's portable state, as extracted by
+    :meth:`ServingEngine.export_request` — everything another replica
+    needs to continue it:
+
+    * ``request`` — the :class:`Request` itself (tokens generated so far,
+      position, tenant);
+    * ``slot_cache`` — the full slot cache subtree
+      (:meth:`ServingEngine._extract_slot`) when the request still held a
+      batch row: bit-exact, so the target continues with identical
+      numerics;
+    * ``page_payloads`` — per-page KV values (frozen-payload captures and
+      dequantized tier blocks) for slotless requests; complete coverage
+      lets the target install pages instead of replaying prefill;
+    * ``raw_bytes`` / ``wire_bytes`` — the migration's traffic accounting
+      (wire = compressed bytes that cross the inter-replica link).
+    """
+
+    request: Request
+    slot_cache: Optional[Dict[str, Any]] = None
+    page_payloads: Dict[int, np.ndarray] = field(default_factory=dict)
+    raw_bytes: float = 0.0
+    wire_bytes: float = 0.0
+    source_tick: int = 0
 
 
 @dataclass
@@ -253,6 +286,15 @@ class ServingEngine:
         self._frozen_payloads: Dict[str, Dict[int, np.ndarray]] = {}
         self.prefix_hits = 0  # requests that skipped prefill via the trie
         self.prefix_hit_tokens = 0  # prompt tokens whose prefill was skipped
+        #: migrated-in requests waiting for a batch row to land in
+        #: (rid → ticket); their KV installs from the ticket, not replay
+        self._imports: Dict[str, MigrationTicket] = {}
+        self.migrations_in = 0
+        self.migrations_out = 0
+        #: modeled cost of the last step() — the replica's tick service
+        #: time a cluster's straggler pass observes (1.0 base + the work
+        #: and stalls actually incurred; deterministic, no wall clock)
+        self.last_tick_cost = 1.0
         #: KV snapshots backing cached prefixes: snap_key (the caching
         #: prompt's token tuple) → (slot cache subtree, first greedy token,
         #: snapshot length).  Pruned when the trie evicts the last node
@@ -391,6 +433,239 @@ class ServingEngine:
         self.requests[req.request_id] = req
         self._live[req.request_id] = req
 
+    # ------------------------------------------------------------ migration
+    def export_request(self, request_id: str) -> Optional[MigrationTicket]:
+        """Extract a live request's full state for migration to another
+        replica; this engine forgets the request entirely (no double
+        accounting — the cluster owns it while its bytes are on the wire).
+
+        What travels depends on where the request's KV currently lives:
+        a slot-holding request ships its whole slot cache subtree
+        (:meth:`_extract_slot` — bit-exact); a suspended one ships the
+        frozen-payload captures; demoted pages leave the tier hierarchy
+        as their compressed blocks (:meth:`PagedKVManager.extract_demoted`
+        — already int8, already paid the lossy round-trip).  Returns None
+        for unknown/terminal requests.
+        """
+        req = self._live.get(request_id)
+        if req is None:
+            return None
+        ticket = MigrationTicket(request=req, source_tick=self.tick)
+        parked = self._imports.pop(request_id, None)
+        if parked is not None:
+            # re-exported before it ever landed here: the previous
+            # ticket's KV payload is still the request's only copy
+            ticket.slot_cache = parked.slot_cache
+            ticket.page_payloads = parked.page_payloads
+            ticket.raw_bytes = parked.raw_bytes
+            ticket.wire_bytes = parked.wire_bytes
+        if req.state != "queued" and parked is None:
+            if req.slot >= 0:
+                ticket.slot_cache = self._extract_slot(req.slot)
+            else:
+                for idx, payload in self._frozen_payloads.get(
+                    request_id, {}
+                ).items():
+                    if payload is not None:
+                        ticket.page_payloads[idx] = payload
+            resident_pages = sum(
+                1 for pid in self.kv.page_table(request_id) if pid != DEMOTED
+            )
+            resident_bytes = self.kv.request_bytes(request_id)
+            ticket.raw_bytes += resident_bytes
+            ticket.wire_bytes += wire_bytes_for(
+                resident_bytes, resident_pages, self.ecfg.tier_compress
+            )
+            for idx, block in self.kv.extract_demoted(request_id).items():
+                payload = block.decompress()
+                if payload is not None:
+                    ticket.page_payloads[idx] = payload
+                ticket.raw_bytes += block.raw_bytes
+                ticket.wire_bytes += block.stored_bytes
+        # forget the request: pool, pages, policy, sampler, slot, queues
+        if req in self.queue:
+            self.queue.remove(req)
+        if request_id in self._restore:
+            self._restore.remove(request_id)
+        self._release_slot(req)
+        self.pool.release_owner(request_id)
+        self.kv.release(request_id)
+        self.sampler.forget(request_id)
+        self.policy.drop(request_id)
+        self._frozen_payloads.pop(request_id, None)
+        self._imports.pop(request_id, None)
+        self._live.pop(request_id, None)
+        self.requests.pop(request_id, None)
+        self.kv.reclaim()
+        self._update_pool()
+        self.migrations_out += 1
+        return ticket
+
+    def import_request(self, ticket: MigrationTicket) -> None:
+        """Install a migrated request (the target side of a migration).
+
+        A ticket carrying the slot cache subtree — or complete per-page
+        payload coverage — lands LIVE: the request waits only for a batch
+        row and free pages, then its KV installs via
+        :meth:`_install_slot` / :meth:`_install_page_payload` and decode
+        continues where the source stopped.  Anything less (partial
+        payloads, shared-prefix pages whose values never left the source,
+        recurrent constant state) falls back to the replay path the local
+        suspend/resume machinery already uses — token-exact, just paying
+        the prefill compute again.
+        """
+        req = ticket.request
+        rid = req.request_id
+        req.slot = -1
+        self.requests[rid] = req
+        self._live[rid] = req
+        self.migrations_in += 1
+        if req.state == "queued":
+            self.queue.append(req)
+            return
+        self.kv.register(rid, self.cfg)
+        if ticket.slot_cache is not None or self._payload_covers(ticket):
+            req.state = "importing"
+            self._imports[rid] = ticket
+        else:
+            req.state = "suspended"
+            req.pos = 0
+            req.cached_tokens = 0
+            req.snap_key = None
+            self._restore.append(rid)
+
+    def _payload_covers(self, ticket: MigrationTicket) -> bool:
+        """True when per-page payloads alone can rebuild the request's
+        cache on this replica: every materialized page shipped a value
+        array, and the architecture keeps no recurrent constant state
+        (mamba/ring-buffer state never travels page-wise)."""
+        if constant_state_bytes(self.cfg) > 0:
+            return False
+        req = ticket.request
+        pages = (req.pos + self.kv.page_tokens - 1) // self.kv.page_tokens
+        return pages > 0 and all(
+            ticket.page_payloads.get(i) is not None for i in range(pages)
+        )
+
+    def _land_imports(self, free_slots: List[int]) -> None:
+        """Attach migrated-in requests to batch rows: allocate their pages
+        (never into overcommit — a landing waits for real headroom) and
+        install the shipped KV.  Runs before local restores in
+        :meth:`_admit`: a migrated request already paid a link crossing;
+        making it also queue behind local traffic would double-charge it.
+        """
+        for rid in list(self._imports):
+            if not free_slots:
+                return
+            ticket = self._imports[rid]
+            req = self.requests[rid]
+            pages_needed = (
+                max(req.pos, 1) + self.kv.page_tokens - 1
+            ) // self.kv.page_tokens
+            if self.kv.n_pages > 0 and self.kv.free_pages < pages_needed:
+                self.kv.evict_cache(pages_needed - self.kv.free_pages)
+                if self.kv.free_pages < pages_needed:
+                    continue  # no headroom yet: land on a later tick
+            slot = free_slots.pop(0)
+            req.slot = slot
+            self._slot_req[slot] = rid
+            self.kv.grow_to(rid, max(req.pos, 1))
+            if ticket.slot_cache is not None:
+                self._install_slot(slot, ticket.slot_cache)
+            else:
+                for idx in range(pages_needed):
+                    self._install_page_payload(
+                        slot, idx, ticket.page_payloads[idx]
+                    )
+            req.state = "prefill" if req.prefilling else "decoding"
+            # fresh rate window on this replica: the sampler must never
+            # see the imported progress as one giant burst
+            self.sampler.forget(rid)
+            del self._imports[rid]
+            self._update_pool()
+
+    # ---------------------------------------------------------- cluster view
+    @property
+    def has_pending(self) -> bool:
+        """True while any request still needs engine ticks."""
+        return (
+            bool(self.queue)
+            or bool(self._imports)
+            or any(
+                r.state
+                in ("prefill", "decoding", "suspended", "offloaded",
+                    "importing")
+                for r in self._live.values()
+            )
+        )
+
+    def migratable_requests(self) -> List[Tuple[str, str]]:
+        """``(request_id, state)`` of every non-terminal request, cheapest
+        migration first: queued work ships zero KV bytes, slotless frozen
+        state ships payloads, and running work last — extracting a slot
+        cache mid-decode is exact but moves the most bytes."""
+        order = {
+            "queued": 0,
+            "importing": 1,
+            "offloaded": 2,
+            "suspended": 3,
+            "prefill": 4,
+            "decoding": 5,
+        }
+        live = sorted(
+            self._live.values(),
+            key=lambda r: (
+                order.get(r.state, 9), r.submit_tick, r.request_id
+            ),
+        )
+        return [(r.request_id, r.state) for r in live]
+
+    def replica_stats(self) -> Dict[str, float]:
+        """The load surface a cluster router scores placements against
+        (see ``SchedulingPolicy.placement_score``)."""
+        cap = self.pool.capacity
+        demand = 0.0
+        projected = 0.0
+        if cap > 0:
+            demand = (
+                max(self.pool.used_bytes - self.kv.reclaimable_bytes, 0.0)
+                / cap
+            )
+            # committed future demand: every non-terminal request here
+            # will grow to its declared peak — materialized bytes alone
+            # make a just-admitted heavy decode look as light as a
+            # finished one, which is exactly the placement mistake
+            projected = (
+                sum(
+                    self.estimate_request_bytes(r)
+                    for r in self._live.values()
+                )
+                / cap
+            )
+        busy = sum(1 for r in self._slot_req if r is not None)
+        waiting = len(self.queue) + len(self._restore) + len(self._imports)
+        return {
+            "demand_fraction": demand,
+            "projected_fraction": projected,
+            "used_fraction": self.pool.used_fraction,
+            "slot_load": (busy + waiting) / max(self.ecfg.n_slots, 1),
+            "free_slots": float(self.ecfg.n_slots - busy),
+            "queued": float(len(self.queue)),
+            "live": float(len(self._live)),
+            "suspended": float(
+                sum(1 for r in self._live.values() if r.state == "suspended")
+            ),
+            "tick_cost": self.last_tick_cost,
+        }
+
+    def estimate_request_bytes(self, req: Request) -> float:
+        """Page-rounded bytes the request will pin at its declared peak
+        (prompt + max_new_tokens — the §III-B projected need, known at
+        admission) — the router's inbound-load estimate.  Allocates
+        nothing; prompt-only sizing would make a 40-token decode and a
+        4-token decode look identical to placement."""
+        return self.kv.bytes_for(self.cfg, req.total_tokens)
+
     # ------------------------------------------------------------ accounting
     def _update_pool(self) -> None:
         for rid, req in self._live.items():
@@ -431,6 +706,9 @@ class ServingEngine:
         completions or pays the reactive spill path.
         """
         free_slots = [i for i, r in enumerate(self._slot_req) if r is None]
+        # migrated-in requests land first (their KV installs from the
+        # ticket, no replay), then local restores
+        self._land_imports(free_slots)
         # resumed / promoted requests re-acquire a batch row first — their
         # slot cache is rebuilt by replaying feed_tokens through the
         # chunked-prefill path (their page-pool accounting never moved; a
@@ -974,9 +1252,18 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
+        stalls0 = self.stall_ticks
         self._admit()
         self._prefill_tick()
         self._decode_tick()
+        # modeled tick service time for a cluster's straggler pass: base
+        # cost + per-active-request work + the stalls this tick actually
+        # paid (deterministic — no wall clock in the simulation)
+        self.last_tick_cost = (
+            1.0
+            + 0.1 * len(self._active())
+            + 0.5 * (self.stall_ticks - stalls0)
+        )
         period_ticks = max(
             round(self.policy.period * self.ecfg.murs_period_ticks), 1
         )
@@ -1265,11 +1552,7 @@ class ServingEngine:
 
     def run(self, max_ticks: int = 1000) -> Dict[str, Any]:
         while self.tick < max_ticks:
-            pending = self.queue or any(
-                r.state in ("prefill", "decoding", "suspended", "offloaded")
-                for r in self._live.values()
-            )
-            if not pending:
+            if not self.has_pending:
                 break
             self.step()
         lat = [
@@ -1277,10 +1560,21 @@ class ServingEngine:
             for r in self.requests.values()
             if r.state == "done"
         ]
+        # ttft_ticks and latency_ticks must describe the SAME population
+        # (completed requests): a request that emitted a first token and
+        # was then shed/failed used to leak into the TTFT percentiles,
+        # silently flattering them under shedding.  Failed-request TTFT
+        # is reported separately — it is a real signal (work wasted past
+        # first token), just not part of the serving-SLO distribution.
         ttft = [
             r.first_token_tick - r.submit_tick
             for r in self.requests.values()
-            if r.first_token_tick >= 0
+            if r.state == "done" and r.first_token_tick >= 0
+        ]
+        ttft_failed = [
+            r.first_token_tick - r.submit_tick
+            for r in self.requests.values()
+            if r.state == "failed" and r.first_token_tick >= 0
         ]
         prefix = dict(self.kv.prefix_stats())
         prefix["requests_hit"] = self.prefix_hits
@@ -1301,9 +1595,12 @@ class ServingEngine:
             "mean_latency_ticks": sum(lat) / len(lat) if lat else None,
             "latency_ticks": sorted(lat),
             "ttft_ticks": sorted(ttft),
+            "ttft_failed_ticks": sorted(ttft_failed),
             "prefix_cache": prefix,
             "ticks": self.tick,
             "chunked_prefill_ticks": self.chunked_prefill_ticks,
+            "migrations_in": self.migrations_in,
+            "migrations_out": self.migrations_out,
             "tokens_generated": sum(
                 len(r.generated) for r in self.requests.values()
             ),

@@ -998,6 +998,24 @@ class PagedKVManager:
                         break
         return started
 
+    def extract_demoted(self, request_id: str) -> Dict[int, object]:
+        """Pull the compressed tier blocks of the request's DEMOTED pages
+        out of the hierarchy (live-migration extraction): ``{table index →
+        CompressedBlock}``.  Each block leaves host/disk for good — any
+        in-flight transfer cancels — and the caller owns the bytes; the
+        table entries stay :data:`DEMOTED`, so the caller must
+        :meth:`release` the request afterwards (the migration source) or
+        re-materialize the pages itself (there is no third option: an
+        extracted page has no copy left on this replica)."""
+        out: Dict[int, object] = {}
+        if self.tiers is None or self._alloc is None:
+            return out
+        for idx in self._alloc.demoted_indices(request_id):
+            block = self.tiers.extract(("req", request_id, idx))
+            if block is not None:
+                out[idx] = block
+        return out
+
     def demote_cold_page(self, now: float = 0.0) -> bool:
         """Demote one COLD cached trie page (policy-ordered victim) into
         the tier hierarchy.  Unlike eviction the prefix stays KNOWN: the

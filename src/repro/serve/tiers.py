@@ -55,7 +55,13 @@ import numpy as np
 
 from repro.dist.compression import dequantize, quantize
 
-__all__ = ["TierConfig", "CompressedBlock", "PcieLink", "TieredKVStore"]
+__all__ = [
+    "TierConfig",
+    "CompressedBlock",
+    "PcieLink",
+    "TieredKVStore",
+    "wire_bytes_for",
+]
 
 #: location states of a tracked block (untracked ⇒ resident in HBM)
 TO_HOST = "to_host"
@@ -67,6 +73,16 @@ TO_HBM = "to_hbm"
 _SCALE_BYTES = 4.0
 #: int8 codes are half the bytes of the 2-byte-element page model
 _INT8_RATIO = 0.5
+
+
+def wire_bytes_for(raw_bytes: float, n_pages: int, compress: bool) -> float:
+    """Wire/at-rest size of ``n_pages`` pages totalling ``raw_bytes``
+    under the tier compression model — the byte arithmetic every link in
+    the system (PCIe demotion, inter-replica migration) shares, so
+    "compression halves the transfer" means the same thing everywhere."""
+    if not compress or raw_bytes <= 0.0:
+        return max(raw_bytes, 0.0)
+    return raw_bytes * _INT8_RATIO + _SCALE_BYTES * max(n_pages, 1)
 
 
 @dataclass(frozen=True)
@@ -161,6 +177,20 @@ class PcieLink:
     def submit(self, tr: _Transfer) -> None:
         self._queue.append(tr)
 
+    def send(
+        self, key: Hashable, nbytes: float, rate: float,
+        kind: str = "migrate",
+    ) -> None:
+        """Queue a transfer of ``nbytes`` at ``rate`` — the convenience
+        entry for callers outside the tier store (e.g. a serving
+        cluster's inter-replica network reusing this link model)."""
+        self.submit(
+            _Transfer(
+                key=key, kind=kind, nbytes=nbytes, rate=rate,
+                remaining=nbytes,
+            )
+        )
+
     def cancel(self, key: Hashable) -> Optional[_Transfer]:
         for i, tr in enumerate(self._queue):
             if tr.key == key:
@@ -212,6 +242,7 @@ class TieredKVStore:
         self.demotions = 0
         self.promotions = 0
         self.discards = 0
+        self.extractions = 0  # blocks handed to a migration (not garbage)
         self.max_quant_error = 0.0
         self.host_peak_bytes = 0.0  # high-water mark of host occupancy
 
@@ -327,6 +358,20 @@ class TieredKVStore:
         del self._blocks[key]
         self.discards += 1
 
+    def extract(self, key: Hashable) -> Optional[CompressedBlock]:
+        """Remove a tracked block and hand its compressed payload to the
+        caller — the live-migration extraction.  Unlike :meth:`discard`
+        the bytes are NOT garbage: the caller ships them to another
+        replica, so they leave this hierarchy intact (any in-flight
+        transfer is cancelled; the block's codes ride along)."""
+        if key not in self._state:
+            return None
+        self.link.cancel(key)
+        del self._state[key]
+        block = self._blocks.pop(key)
+        self.extractions += 1
+        return block
+
     # ---------------------------------------------------------------- clock
     def tick(self, now: float = 0.0) -> List[Tuple[str, Hashable, Any]]:
         """Advance one tick of link time.  Returns events:
@@ -390,6 +435,7 @@ class TieredKVStore:
             "host_capacity_bytes": self.config.host_capacity_bytes,
             "demotions": self.demotions,
             "promotions": self.promotions,
+            "extractions": self.extractions,
             "transfers_completed": self.link.completed_transfers,
             "transfers_in_flight": self.link.in_flight,
             "max_quant_error": self.max_quant_error,

@@ -12,7 +12,7 @@ from benchmarks import run as bench_run
 from benchmarks.gate import compare, main as gate_main
 
 
-def _record(p50=10, p99=20, thr=1.5, wins=True):
+def _record(p50=10, p99=20, thr=1.5, wins=True, cl_p99=30, cl_wins=True):
     return {
         "engine": {
             "murs": {
@@ -26,6 +26,17 @@ def _record(p50=10, p99=20, thr=1.5, wins=True):
                 "hit_rate_positive": wins,
                 "peak_pool_lower": wins,
             }
+        },
+        "cluster": {
+            "murs": {
+                "p99_ticks_to_finish": cl_p99,
+                "throughput_tokens_per_tick": 1.2,
+            },
+            "cluster_wins": {
+                "migration_roundtrip": cl_wins,
+                "crash_no_loss": cl_wins,
+                "p99_beats_round_robin": cl_wins,
+            },
         },
     }
 
@@ -54,6 +65,18 @@ class TestGateCompare:
         _, failures = compare(_record(), _record(wins=False), 15.0)
         assert any("hit_rate_positive" in f for f in failures)
         assert any("peak_pool_lower" in f for f in failures)
+
+    def test_cluster_p99_gated_like_engine_metrics(self):
+        _, failures = compare(_record(), _record(cl_p99=40), 15.0)
+        assert any("cluster.murs.p99" in f for f in failures)
+        _, ok = compare(_record(), _record(cl_p99=31), 15.0)
+        assert not ok  # within ±15%
+
+    def test_cluster_wins_are_hard_gates(self):
+        _, failures = compare(_record(), _record(cl_wins=False), 15.0)
+        assert any("migration_roundtrip" in f for f in failures)
+        assert any("crash_no_loss" in f for f in failures)
+        assert any("p99_beats_round_robin" in f for f in failures)
 
     def test_missing_baseline_passes_with_notice(self, tmp_path, capsys):
         cur = tmp_path / "cur.json"

@@ -1,0 +1,446 @@
+"""ServingCluster tests: routing, straggler migration, crash recovery.
+
+The fault substrate (`repro.dist.fault`) finally runs in the SERVING
+path here: StragglerDetector over replica tick-service-times, live KV
+migration over a modeled network link, and RestartManager-style bounded
+retry for replica crashes — plus a hypothesis property pinning the
+cluster's core accounting invariant (no request lost or duplicated under
+arbitrary submit/migrate/crash interleavings).
+"""
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.dist.fault import StragglerDetector
+from repro.models import init_model
+from repro.sched import (
+    FairPolicy,
+    MursConfig,
+    MursPolicy,
+    PriorityConfig,
+    PriorityPolicy,
+)
+from repro.serve import (
+    ClusterConfig,
+    EngineConfig,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.serve.kv_cache import kv_bytes_per_token
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["internlm2-1.8b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine_factory(cfg, tokens=80, n_slots=3, murs=True):
+    cap = kv_bytes_per_token(cfg) * tokens
+
+    def make():
+        policy = (
+            MursPolicy(MursConfig.for_serving(period=1.0))
+            if murs
+            else FairPolicy()
+        )
+        return EngineConfig(
+            n_slots=n_slots, max_seq=64, hbm_capacity_bytes=cap,
+            policy=policy,
+        )
+
+    return make
+
+
+# ------------------------------------------------------------ placement hook
+class TestPlacementScore:
+    STATS_LOW = {"demand_fraction": 0.1, "slot_load": 0.2}
+    STATS_HIGH = {"demand_fraction": 0.9, "slot_load": 1.5}
+
+    def test_fair_scores_every_replica_equal(self):
+        p = FairPolicy()
+        assert p.placement_score("A", self.STATS_LOW) == 0.0
+        assert p.placement_score("A", self.STATS_HIGH) == 0.0
+
+    def test_murs_prefers_low_load(self):
+        p = MursPolicy(MursConfig.for_serving())
+        assert p.placement_score("A", self.STATS_LOW) > p.placement_score(
+            "A", self.STATS_HIGH
+        )
+
+    def test_murs_rate_ema_blends_demand_vs_slots(self):
+        """A high-usage-rate tenant is routed by byte demand; a low-rate
+        tenant by slot occupancy — the §III classes applied across
+        replicas."""
+        p = MursPolicy(MursConfig.for_serving())
+        p.note_group_rate("heavy", 100.0, now=0.0)
+        p.note_group_rate("light", 0.0, now=0.0)
+        demand_heavy = {"demand_fraction": 0.9, "slot_load": 0.0}
+        slots_heavy = {"demand_fraction": 0.0, "slot_load": 0.9}
+        # the heavy tenant avoids the demand-loaded replica most
+        assert p.placement_score("heavy", demand_heavy) < p.placement_score(
+            "heavy", slots_heavy
+        )
+        # the light tenant avoids the slot-loaded replica most
+        assert p.placement_score("light", slots_heavy) < p.placement_score(
+            "light", demand_heavy
+        )
+        assert p.group_rates()["heavy"] > p.group_rates()["light"]
+
+    def test_priority_weight_divides_aversion(self):
+        p = PriorityPolicy(PriorityConfig(weights={"vip": 4.0, "low": 1.0}))
+        # same replica load: the vip's score is closer to zero, so on a
+        # contended best-first routing pass it claims the replica first
+        assert p.placement_score("vip", self.STATS_HIGH) > p.placement_score(
+            "low", self.STATS_HIGH
+        )
+
+
+# ---------------------------------------------------------------- routing
+class TestRouting:
+    def test_fair_router_round_robins(self, small_model):
+        cfg, params = small_model
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg, murs=False), n_replicas=2,
+                router=FairPolicy(),
+            ),
+        )
+        for i in range(4):
+            cl.submit(Request(f"r{i}", "T", list(range(4)), 4))
+        cl.step()
+        homes = [cl._home[f"r{i}"] for i in range(4)]
+        assert sorted(homes) == [0, 0, 1, 1]
+        assert homes[0] != homes[1]  # alternating, not blocked
+
+    def test_murs_router_balances_heavy_requests(self, small_model):
+        """Round-robin packs the heavy (even-position) requests onto one
+        replica; demand-aware routing splits them."""
+        cfg, params = small_model
+        heavy = [
+            Request(f"H{i}", "A", list(range(10, 18)), 40) for i in range(2)
+        ]
+        light = [
+            Request(f"L{i}", "B", list(range(30, 34)), 4) for i in range(2)
+        ]
+        # interleave H,L,H,L — round-robin would pair the two heavies
+        stream = [heavy[0], light[0], heavy[1], light[1]]
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=2,
+                router=MursPolicy(MursConfig.for_serving()),
+            ),
+        )
+        for r in stream:
+            cl.submit(r)
+        cl.step()
+        assert cl._home["H0"] != cl._home["H1"]
+
+
+# ----------------------------------------------------- straggler detection
+class TestStragglerPass:
+    def test_detector_over_synthetic_replica_tick_times(self):
+        """The serving-path wiring consumes the detector exactly as the
+        trainer does: per-replica observations, median-ratio flagging."""
+        det = StragglerDetector(min_samples=4, ratio=1.5)
+        for _ in range(6):
+            det.observe("r0", 1.1)
+            det.observe("r1", 1.0)
+            det.observe("r2", 5.0)  # the throttled replica
+        assert det.stragglers() == ["r2"]
+        det.forget("r2")  # the cluster's restart path
+        assert det.stragglers() == []
+
+    def test_straggler_triggers_live_migration(self, small_model):
+        cfg, params = small_model
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=2,
+                router=MursPolicy(MursConfig.for_serving()),
+                straggler_min_samples=4,
+            ),
+        )
+        for i in range(4):
+            cl.submit(Request(f"A{i}", "A", list(range(10, 18)), 24))
+        cl.set_slowdown(0, 8.0)
+        out = cl.run(max_ticks=400)
+        assert out["straggler_flags"] >= 1
+        assert out["migrations"]["completed"] >= 1
+        assert out["completed"] == 4 and out["failed"] == 0
+
+    def test_flagged_straggler_never_receives_work(self, small_model):
+        """Regression: delivery/routing used to exclude only the
+        migration SOURCE — a victim could land on (and new work route
+        onto) another replica the detector had already flagged."""
+        cfg, params = small_model
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=3,
+                straggler_min_samples=4,
+            ),
+        )
+        # flag r1: slow against the r0/r2 median
+        for _ in range(6):
+            cl.detector.observe("r0", 1.0)
+            cl.detector.observe("r1", 9.0)
+            cl.detector.observe("r2", 1.0)
+        assert cl._flagged_indices() == {1}
+        # migration delivery from r0 must skip flagged r1
+        for _ in range(8):
+            assert cl._pick_target("T", exclude={0} | cl._flagged_indices()) == 2
+        # fresh submissions route around the straggler too
+        for i in range(4):
+            cl.submit(Request(f"s{i}", "T", list(range(4)), 4))
+        cl._route()
+        assert all(cl._home[f"s{i}"] != 1 for i in range(4))
+
+    def test_no_migration_without_straggler(self, small_model):
+        cfg, params = small_model
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=2,
+                straggler_min_samples=4,
+            ),
+        )
+        for i in range(4):
+            cl.submit(Request(f"A{i}", "A", list(range(10, 18)), 12))
+        out = cl.run(max_ticks=400)
+        assert out["migrations"]["started"] == 0
+        assert out["completed"] == 4
+
+
+# ------------------------------------------------------- migration fidelity
+class TestMigrationRoundTrip:
+    def test_mid_decode_migration_identical_tokens(self, small_model):
+        """The headline invariant: extract → wire → install continues the
+        request with IDENTICAL greedy tokens (the slot-cache subtree is
+        bit-exact), and the byte accounting is conserved end to end."""
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=200, n_slots=2)
+        ref = ServingEngine(cfg, params, make())
+        ref.submit(Request("r", "T", list(range(10, 18)), 16))
+        ref.run(max_ticks=200)
+        ref_tokens = list(ref.requests["r"].generated)
+
+        cl = ServingCluster(
+            cfg, params, ClusterConfig(engine=make, n_replicas=2)
+        )
+        cl.submit(Request("r", "T", list(range(10, 18)), 16))
+        for _ in range(6):
+            cl.step()
+        src = cl._home["r"]
+        src_bytes = cl.replicas[src].kv.request_bytes("r")
+        assert src_bytes > 0
+        assert cl.migrate("r", src)
+        # the source forgot the request entirely — no double accounting
+        assert "r" not in cl.replicas[src].requests
+        assert cl.replicas[src].kv.request_bytes("r") == 0.0
+        ticket, _ = cl._inflight["r"]
+        assert ticket.raw_bytes == pytest.approx(src_bytes)
+        assert 0 < ticket.wire_bytes < ticket.raw_bytes  # compressed wire
+        out = cl.run(max_ticks=300)
+        tgt = cl._home["r"]
+        assert tgt != src
+        tgt_req = cl.replicas[tgt].requests["r"]
+        assert tgt_req.state == "done"
+        assert list(tgt_req.generated) == ref_tokens
+        # bytes conserved: the target re-materialized the same pages
+        assert out["migrations"] == {
+            "started": 1, "completed": 1,
+            "raw_bytes": pytest.approx(src_bytes),
+            "wire_bytes": pytest.approx(ticket.wire_bytes),
+        }
+
+    def test_suspended_request_migrates_and_completes(self, small_model):
+        """A slotless (suspended) victim replays on the target — same
+        tokens, nothing lost."""
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=60, n_slots=2)
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=make, n_replicas=2,
+                router=MursPolicy(MursConfig.for_serving()),
+            ),
+        )
+        # enough pressure that the replica policy suspends someone
+        for i in range(3):
+            cl.submit(Request(f"A{i}", "A", list(range(10, 18)), 24))
+        suspended = None
+        for _ in range(60):
+            cl.step()
+            for i, eng in enumerate(cl.replicas):
+                for r in eng._live.values():
+                    if r.state in ("suspended", "offloaded"):
+                        suspended = (r.request_id, i)
+                        break
+                if suspended:
+                    break
+            if suspended:
+                break
+        assert suspended is not None, "pressure never suspended anyone"
+        rid, src = suspended
+        assert cl.migrate(rid, src)
+        out = cl.run(max_ticks=500)
+        assert out["completed"] == 3 and out["failed"] == 0
+        tgt = cl._home[rid]
+        assert cl.replicas[tgt].requests[rid].state == "done"
+
+    def test_queued_request_migrates_for_free(self, small_model):
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=200, n_slots=1)
+        cl = ServingCluster(
+            cfg, params, ClusterConfig(engine=make, n_replicas=2)
+        )
+        for i in range(4):
+            cl.submit(Request(f"q{i}", "T", list(range(4)), 4))
+        cl.step()
+        # one slot per replica: each replica has one queued request —
+        # migrating it ships zero KV bytes (nothing materialized yet)
+        victims = cl.replicas[0].migratable_requests()
+        rid, state = victims[0]
+        assert state == "queued"
+        assert cl.migrate(rid, 0)
+        ticket, _ = cl._inflight[rid]
+        assert ticket.wire_bytes == 0.0 and ticket.raw_bytes == 0.0
+        out = cl.run(max_ticks=300)
+        assert out["completed"] == 4
+
+
+# ----------------------------------------------------------- crash recovery
+class TestCrashRecovery:
+    def test_crash_requeues_and_completes_everything(self, small_model):
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=80, n_slots=3)
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=make, n_replicas=2, max_retries=3,
+                retry_backoff_ticks=1.0, max_backoff_ticks=4.0,
+            ),
+        )
+        for i in range(4):
+            cl.submit(Request(f"C{i}", "A", list(range(10, 18)), 10))
+        for _ in range(6):
+            cl.step()
+        requeued = cl.crash_replica(0)
+        assert requeued > 0
+        out = cl.run(max_ticks=600)
+        assert out["completed"] == 4
+        assert out["failed"] == 0 and out["lost"] == 0
+        assert out["crashes"] == 1 and out["requeued"] == requeued
+
+    def test_crash_counts_only_delivered_tokens(self, small_model):
+        """Regression: a requeued victim's pre-crash tokens die with the
+        KV and are regenerated elsewhere — counting them inflated the
+        gated cluster throughput above what was actually served."""
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=200, n_slots=2)
+        cl = ServingCluster(
+            cfg, params, ClusterConfig(engine=make, n_replicas=1)
+        )
+        cl.submit(Request("x", "T", list(range(8)), 12))
+        for _ in range(6):
+            cl.step()
+        pre = len(cl.replicas[0].requests["x"].generated)
+        assert pre > 0  # it really did generate before the crash
+        cl.crash_replica(0)
+        out = cl.run(max_ticks=300)
+        assert out["completed"] == 1
+        assert out["tokens_generated"] == 12  # not 12 + pre
+
+    def test_retry_budget_exhaustion_is_accounted_not_silent(
+        self, small_model
+    ):
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=80, n_slots=2)
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=make, n_replicas=1, max_retries=1,
+                retry_backoff_ticks=1.0, max_backoff_ticks=2.0,
+            ),
+        )
+        cl.submit(Request("x", "T", list(range(8)), 30))
+        for _ in range(3):
+            cl.step()
+        cl.crash_replica(0)  # retry 1/1: requeued
+        for _ in range(4):
+            cl.step()
+        cl.crash_replica(0)  # budget exhausted: lost, recorded as failed
+        out = cl.run(max_ticks=200)
+        assert out["lost"] == 1
+        assert out["failed"] == 1
+        assert out["completed"] == 0
+        assert "x" in cl.failed
+
+
+# --------------------------------------------------- accounting invariants
+class TestNoLossNoDuplication:
+    @settings(max_examples=6, deadline=None)
+    @given(
+        ops=st.lists(
+            st.tuples(
+                st.sampled_from(["step", "migrate", "crash", "submit"]),
+                st.integers(min_value=0, max_value=5),
+            ),
+            min_size=4,
+            max_size=14,
+        )
+    )
+    def test_random_submit_migrate_crash_stream(self, small_model, ops):
+        """Whatever the interleaving of submits, forced migrations, and
+        replica crashes: every submitted request ends terminal exactly
+        once (completed or failed/lost), on exactly one replica — no
+        request is lost in flight, none is duplicated across replicas."""
+        cfg, params = small_model
+        make = _engine_factory(cfg, tokens=60, n_slots=2)
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=make, n_replicas=2, max_retries=2,
+                retry_backoff_ticks=1.0, max_backoff_ticks=2.0,
+                straggler_min_samples=4,
+            ),
+        )
+        submitted = []
+        n_crashes = 0
+        for kind, arg in ops:
+            if kind == "submit" and len(submitted) < 5:
+                rid = f"q{len(submitted)}"
+                submitted.append(rid)
+                cl.submit(Request(rid, f"T{arg % 2}", list(range(6)), 6))
+            elif kind == "step":
+                for _ in range(1 + arg % 3):
+                    cl.step()
+            elif kind == "migrate":
+                src = arg % 2
+                victims = cl.replicas[src].migratable_requests()
+                if victims:
+                    cl.migrate(victims[arg % len(victims)][0], src)
+            elif kind == "crash" and n_crashes < 2:
+                n_crashes += 1
+                cl.crash_replica(arg % 2)
+        out = cl.run(max_ticks=500)
+        assert out["in_flight_unfinished"] == 0
+        # terminal exactly once, somewhere
+        terminal = sorted(cl.completed + cl.failed)
+        assert terminal == sorted(submitted)
+        # no rid lives on two replicas at once
+        for rid in submitted:
+            holders = [
+                i
+                for i, eng in enumerate(cl.replicas)
+                if rid in eng.requests
+            ]
+            assert len(holders) <= 1

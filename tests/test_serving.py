@@ -256,6 +256,34 @@ class TestDecodedTokensMatchUnbatchedReference(object):
         assert eng.requests["r"].generated[:gen] == out_ref
 
 
+class TestMetricPopulations:
+    def test_ttft_counts_only_completed_requests(self, small_model):
+        """Regression: ttft_ticks used to include failed requests (any
+        first_token_tick >= 0) while latency_ticks counted only
+        state == "done" — under shedding the two percentile populations
+        silently diverged.  Both now describe completed requests;
+        failed-request TTFT is reported separately."""
+        cfg, params = small_model
+        eng = ServingEngine(
+            cfg, params,
+            EngineConfig(n_slots=2, max_seq=64, hbm_capacity_bytes=1e12),
+        )
+        eng.submit(Request("ok", "T", list(range(4)), 4))
+        out = eng.run(max_ticks=100)
+        assert len(out["ttft_ticks"]) == 1
+        assert out["ttft_failed_ticks"] == []
+        # a request that produced a first token and then failed must land
+        # in the failed population, not the SLO one
+        shed = Request("shed", "T", [1, 2], 4, submit_tick=0)
+        shed.state = "failed"
+        shed.first_token_tick = 7
+        eng.requests["shed"] = shed
+        out = eng.run(max_ticks=eng.tick)
+        assert len(out["ttft_ticks"]) == 1
+        assert out["ttft_failed_ticks"] == [7]
+        assert len(out["ttft_ticks"]) == len(out["latency_ticks"])
+
+
 class TestMemoryModelClassification:
     def test_decode_classifies_per_murs_models(self, small_model):
         """§III live: attention decodes classify LINEAR (KV grows per

@@ -168,6 +168,42 @@ class TestFaultTolerance:
         rm.on_success()
         assert rm.should_retry()
 
+    def test_backoff_is_capped(self):
+        """Regression: an uncapped 2**n backoff reaches hour-scale sleeps
+        in a long preemption loop; max_backoff_s is the ceiling."""
+        rm = RestartManager(
+            "/tmp/none", max_retries=10, backoff_s=1.0, max_backoff_s=8.0
+        )
+        delays = [rm.on_failure(RuntimeError()) for _ in range(6)]
+        assert delays == [1.0, 2.0, 4.0, 8.0, 8.0, 8.0]
+        with pytest.raises(ValueError):
+            RestartManager("/tmp/none", backoff_s=4.0, max_backoff_s=2.0)
+
+    def test_rebalance_weights_honors_min_samples(self):
+        """Regression: rebalance_weights used to average over hosts with
+        ANY samples, so one noisy first observation skewed the whole
+        weight vector.  It now reuses the min_samples-gated means that
+        stragglers() honors; an under-sampled host gets the neutral
+        (uniform) share instead of a speed penalty."""
+        det = StragglerDetector(min_samples=3)
+        for _ in range(5):
+            det.observe("h0", 1.0)
+            det.observe("h1", 1.0)
+        det.observe("noisy", 100.0)  # one sample: no trustworthy mean yet
+        w = det.rebalance_weights()
+        assert w["noisy"] == pytest.approx(1.0 / 3.0)
+        assert w["h0"] == pytest.approx(w["h1"]) == pytest.approx(1.0 / 3.0)
+
+    def test_rebalance_weights_all_hosts_fallback(self):
+        """Nobody has min_samples yet → explicit uniform fallback over
+        every observed host (not an empty dict, not a skewed one)."""
+        det = StragglerDetector(min_samples=5)
+        det.observe("a", 1.0)
+        det.observe("b", 9.0)
+        w = det.rebalance_weights()
+        assert w == {"a": 0.5, "b": 0.5}
+        assert det.rebalance_weights() == w  # stable until samples accrue
+
 
 # ------------------------------------------------------------ data pipeline
 class TestDataPipeline:
