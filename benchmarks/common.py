@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from repro.core.scheduler import MursConfig
+from repro.sched import MursConfig
 from repro.core.spark_sim import (
     make_grep,
     make_pr,

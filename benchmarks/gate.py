@@ -23,11 +23,19 @@ and per cluster leg (round_robin / murs / straggler / crash):
     p99_ticks_to_finish            lower is better (cluster tail latency)
     throughput_tokens_per_tick     higher is better (cluster-wide)
 
+and per overload front-door mode (fair / murs):
+
+    goodput                        higher is better (SLO-met per tick)
+    completed                      higher is better
+    throughput_tokens_per_tick     higher is better
+
 plus the prefix-cache acceptance bits (hit rate positive, shared peak
 below the no-sharing baseline), the tiering bit (proactive demotion at
-least halves disk spill at equal load), and the cluster bits (live
+least halves disk spill at equal load), the cluster bits (live
 migration round-trips with nothing lost, a replica crash loses no
-requests, usage-rate placement beats round-robin on p99) as hard
+requests, usage-rate placement beats round-robin on p99), and the
+overload bits (usage-rate shedding beats FIFO shedding on goodput at
+equal open-loop load; the door sheds instead of collapsing) as hard
 pass/fail rows — those are correctness claims of the artifact, not
 noisy timings, so they gate at any regression.
 
@@ -77,6 +85,21 @@ CLUSTER_WIN_BITS = (
     "migration_roundtrip",
     "crash_no_loss",
     "p99_beats_round_robin",
+)
+
+#: overload-leg metrics, gated per front-door mode (fair / murs)
+OVERLOAD_GATED = [
+    ("goodput", "higher_is_better"),
+    ("completed", "higher_is_better"),
+    ("throughput_tokens_per_tick", "higher_is_better"),
+]
+
+#: overload-leg acceptance booleans (hard pass/fail, no threshold):
+#: usage-rate shedding yields more SLO goodput than FIFO shedding at
+#: equal open-loop load, and the door sheds instead of collapsing
+OVERLOAD_WIN_BITS = (
+    "goodput_under_overload",
+    "shed_not_collapse",
 )
 
 
@@ -160,6 +183,32 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
                 c_row.get(metric), threshold_pct, rows, failures,
                 none_fails=True,
             )
+    # overload-leg metrics: open-loop goodput per front-door mode
+    ov_b = baseline.get("overload", {})
+    ov_c = current.get("overload", {})
+    for mode in ("fair", "murs"):
+        b_row, c_row = ov_b.get(mode), ov_c.get(mode)
+        if not isinstance(b_row, dict) or not isinstance(c_row, dict):
+            continue
+        for metric, direction in OVERLOAD_GATED:
+            _compare_row(
+                f"overload.{mode}", metric, direction, b_row.get(metric),
+                c_row.get(metric), threshold_pct, rows, failures,
+                none_fails=True,
+            )
+    # overload acceptance bits: MURS shedding beats FIFO shedding on
+    # goodput at equal load, and shedding prevents collapse — hard
+    # pass/fail
+    overload_wins = ov_c.get("overload_wins", {})
+    for bit in OVERLOAD_WIN_BITS:
+        if bit in overload_wins:
+            ok = bool(overload_wins[bit])
+            rows.append(
+                ("overload", bit, True, overload_wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"overload.{bit} is False")
     # cluster acceptance bits: live migration delivers, crashes lose
     # nothing, placement beats round-robin — hard pass/fail
     cluster_wins = cl_c.get("cluster_wins", {})

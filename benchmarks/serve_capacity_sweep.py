@@ -41,10 +41,11 @@ def main() -> None:
             )
             for r in _requests():
                 eng.submit(r)
-            out = eng.run(max_ticks=600)
-            ok = out["failed"] == 0 and out["completed"] == 7
+            rep = eng.run(max_ticks=600)
+            ok = rep.failed == 0 and rep.completed == 7
             emit(f"sweep.cap{tokens}.{mode}.complete", int(ok),
-                 f"failed={out['failed']} susp={out['suspensions']}")
+                 f"failed={rep.failed} "
+                 f"susp={rep.extras['suspensions']}")
             if ok:
                 floor[mode] = tokens  # last (smallest) capacity that works
     emit("sweep.service_floor_fair_tokens", floor["fair"] or "never",

@@ -3,7 +3,7 @@
     PYTHONPATH=src python examples/murs_spark_repro.py
 """
 
-from repro.core.scheduler import MursConfig
+from repro.sched import MursConfig
 from repro.core.spark_sim import (
     make_grep, make_pr, make_sort, make_wc, run_batch, run_service,
 )

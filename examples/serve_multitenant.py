@@ -37,11 +37,12 @@ def main() -> None:
         )
         for r in workload():
             engine.submit(r)
-        out = engine.run(max_ticks=400)
-        print(f"{name:14s} completed {out['completed']}/7  "
-              f"failed {out['failed']}  suspensions {out['suspensions']}  "
-              f"tokens {out['tokens_generated']}  "
-              f"peak pool {out['peak_used_fraction']:.2f}")
+        rep = engine.run(max_ticks=400)
+        print(f"{name:14s} completed {rep.completed}/7  "
+              f"failed {rep.failed}  "
+              f"suspensions {rep.extras['suspensions']}  "
+              f"tokens {rep.tokens_generated}  "
+              f"peak pool {rep.extras['peak_used_fraction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -6,14 +6,18 @@ service-mode data processing systems) as a composable library:
   * :mod:`usage_models` — the four growth models + online rate estimation
   * :mod:`sampler` — the seasonal per-task metric sampler
   * :mod:`memory_manager` — shared pool (JVM-heap / HBM) accounting
-  * :mod:`scheduler` — Algorithm 1 (yellow/red, suspend/resume, spill guard)
+  * :mod:`repro.sched` — Algorithm 1 (yellow/red, suspend/resume, spill
+    guard); :mod:`scheduler` here is a deprecated re-export shim
   * :mod:`tasks`, :mod:`service`, :mod:`spark_sim` — the faithful
     reproduction environment for the paper's own evaluation
 """
 
+from repro.sched.murs import MursConfig
+from repro.sched.murs import MursPolicy as MursScheduler
+from repro.sched.protocol import SchedulingDecision
+
 from .memory_manager import MemoryPool, OutOfMemoryError
 from .sampler import Sampler, TaskStats
-from .scheduler import MursConfig, MursScheduler, SchedulingDecision
 from .usage_models import (
     RateEstimator,
     UsageModel,

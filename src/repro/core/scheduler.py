@@ -1,15 +1,24 @@
-"""Re-export shim — the scheduler moved to :mod:`repro.sched`.
+"""DEPRECATED re-export shim — the scheduler moved to :mod:`repro.sched`.
 
-The MURS decision procedure (paper §IV, Algorithm 1) now lives in
+The MURS decision procedure (paper §IV, Algorithm 1) lives in
 :mod:`repro.sched.murs` as :class:`MursPolicy`, one implementation of the
 pluggable :class:`repro.sched.SchedulingPolicy` protocol that both the
 Spark-fidelity simulator and the JAX serving engine consume.  This module
-keeps the historical import path alive; ``MursScheduler`` is an alias of
-``MursPolicy``.
+keeps the historical import path alive for one release; ``MursScheduler``
+is an alias of ``MursPolicy``.  Import from :mod:`repro.sched` instead.
 """
+
+import warnings
 
 from repro.sched.murs import MursConfig, MursPolicy
 from repro.sched.protocol import SchedulingDecision
+
+warnings.warn(
+    "repro.core.scheduler is deprecated; import MursConfig/MursPolicy/"
+    "SchedulingDecision from repro.sched instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 MursScheduler = MursPolicy
 

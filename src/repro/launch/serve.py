@@ -44,12 +44,13 @@ def main() -> None:
         engine.submit(Request(f"A{i}", "A", list(range(10, 18)), 40))
     for i in range(args.requests - n_a):
         engine.submit(Request(f"B{i}", "B", list(range(30, 34)), 6))
-    out = engine.run(max_ticks=1000)
+    rep = engine.run(max_ticks=1000)
     mode = "FAIR" if args.fair else "MURS"
-    print(f"[{mode}] completed {out['completed']}/{args.requests}  "
-          f"failed {out['failed']}  suspensions {out['suspensions']}  "
-          f"tokens {out['tokens_generated']}  "
-          f"peak pool {out['peak_used_fraction']:.2f}")
+    print(f"[{mode}] completed {rep.completed}/{args.requests}  "
+          f"failed {rep.failed}  "
+          f"suspensions {rep.extras['suspensions']}  "
+          f"tokens {rep.tokens_generated}  "
+          f"peak pool {rep.extras['peak_used_fraction']:.2f}")
 
 
 if __name__ == "__main__":

@@ -13,6 +13,10 @@ reactive-only tiering is exactly what "stock" means.  Likewise
 ``placement_score`` stays at the base 0.0 for every replica, so
 cross-replica routing under FAIR is the router's round-robin tie-break:
 pressure-oblivious request spraying, the multi-server stock baseline.
+``shed_order`` is likewise the inherited FIFO-over-groups order: under
+admission overload the earliest-arrived tenant sheds first, with no
+regard for who is actually filling the pool — the failure mode the
+usage-rate order is measured against.
 """
 
 from __future__ import annotations

@@ -345,6 +345,27 @@ class MursPolicy(BasePolicy):
     def group_rates(self) -> Dict[str, float]:
         return dict(self._group_rate)
 
+    def shed_order(self, groups, stats) -> List[str]:
+        """Shed the highest-usage-rate group FIRST (paper §III at the
+        front door): its admitted traffic grows the pool fastest, so
+        rejecting it protects the most SLO traffic per rejected request.
+        The EMA is authoritative; before it warms up (cold start, or a
+        router that never saw the group) the front door's projected
+        in-flight demand stands in — demand-ordered shedding is the
+        zero-information approximation of rate-ordered shedding.  Ties
+        fall back to group arrival order (FIFO), matching the base."""
+
+        def key(g: str):
+            row = stats.get(g, {})
+            rate = self._group_rate.get(g, row.get("rate", 0.0))
+            return (
+                -rate,
+                -row.get("demand_bytes", 0.0),
+                row.get("arrival_seq", 0.0),
+            )
+
+        return sorted(groups, key=key)
+
     # ------------------------------------------------------ cluster placement
     def placement_score(self, group: str, replica_stats) -> float:
         """Pressure- and rate-aware routing (paper §III applied ACROSS

@@ -96,6 +96,18 @@ class PriorityPolicy(BasePolicy):
             free -= 1
         return picks
 
+    def shed_order(self, groups, stats) -> List[str]:
+        """Shed lowest-weight groups first (by 1/weight): under admission
+        overload a paid/priority tenant's arrivals are the last to 503.
+        Ties fall back to group arrival order (FIFO)."""
+        return sorted(
+            groups,
+            key=lambda g: (
+                self.weight_of(g),
+                stats.get(g, {}).get("arrival_seq", 0.0),
+            ),
+        )
+
     # ------------------------------------------------------ cluster placement
     def placement_score(self, group: str, replica_stats) -> float:
         """Weight-proportional routing: every tenant avoids loaded

@@ -20,6 +20,13 @@ plus two placement hooks:
         how free execution slots are offered to tenants/jobs.  FAIR's
         round-robin cursor lives HERE now, not inlined in the executor.
 
+    shed_order(groups, stats) → groups, first-shed first
+        admission-time load shedding under overload (the serving front
+        door's hook): MURS sheds the highest-usage-rate group first
+        (paper §III — its traffic costs the pool the most future
+        allocation), PriorityPolicy sheds by inverse weight, and the
+        base/fair order is FIFO over group arrival.
+
     placement_score(group, replica_stats) → preference for placing the
         group's next request on the replica described by ``replica_stats``
         (a ``ServingCluster`` routing decision — the same usage-rate
@@ -114,6 +121,12 @@ class SchedulingPolicy(Protocol):
     def drop(self, task_id: str) -> None: ...
 
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]: ...
+
+    def shed_order(
+        self,
+        groups: Sequence[str],
+        stats: Mapping[str, Mapping[str, float]],
+    ) -> List[str]: ...
 
     def placement_score(
         self, group: str, replica_stats: Mapping[str, float]
@@ -221,6 +234,28 @@ class BasePolicy:
         rate-oblivious policies) — what a cluster forwards from replica
         policies into its router."""
         return {}
+
+    def shed_order(
+        self,
+        groups: Sequence[str],
+        stats: Mapping[str, Mapping[str, float]],
+    ) -> List[str]:
+        """Admission-overload shed order: FIRST element is shed first.
+
+        Called by the serving front door when projected demand crosses its
+        pressure threshold — new arrivals from the leading groups are
+        rejected (503) until the overshoot is covered.  ``stats`` maps each
+        group to ``{"rate", "demand_bytes", "arrival_seq"}`` (usage-rate
+        estimate, in-flight projected bytes, first-seen order).
+
+        The base/fair order is FIFO over groups: the earliest-arrived
+        group sheds first — rate-oblivious, exactly the baseline the
+        usage-rate order is measured against.
+        """
+        return sorted(
+            groups,
+            key=lambda g: stats.get(g, {}).get("arrival_seq", 0.0),
+        )
 
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]:
         """Round-robin over groups with pending work; one pick per core."""

@@ -1,5 +1,6 @@
 from .cluster import ClusterConfig, ServingCluster
 from .engine import EngineConfig, MigrationTicket, Request, ServingEngine
+from .frontdoor import FrontDoor, FrontDoorConfig, TokenBucket
 from .kv_cache import (
     CACHE_OWNER,
     DEMOTED,
@@ -9,22 +10,63 @@ from .kv_cache import (
     constant_state_bytes,
     kv_bytes_per_token,
 )
+from .report import (
+    COMPLETED,
+    FAILED,
+    LOST,
+    RATE_LIMITED,
+    SHED,
+    UNFINISHED,
+    LatencySummary,
+    RequestOutcome,
+    ServeReport,
+    SloSpec,
+)
+from .server import Server
 from .tiers import TierConfig, TieredKVStore
+from .traffic import (
+    Arrival,
+    TenantProfile,
+    bursty_trace,
+    diurnal_trace,
+    drive,
+    poisson_trace,
+)
 
 __all__ = [
     "CACHE_OWNER",
+    "COMPLETED",
+    "Arrival",
     "ClusterConfig",
     "DEMOTED",
     "EngineConfig",
+    "FAILED",
+    "FrontDoor",
+    "FrontDoorConfig",
+    "LOST",
+    "LatencySummary",
     "MigrationTicket",
-    "Request",
-    "ServingCluster",
-    "ServingEngine",
     "PageBlockAllocator",
     "PagedKVManager",
     "PrefixCache",
+    "RATE_LIMITED",
+    "Request",
+    "RequestOutcome",
+    "SHED",
+    "Server",
+    "ServeReport",
+    "ServingCluster",
+    "ServingEngine",
+    "SloSpec",
+    "TenantProfile",
     "TierConfig",
     "TieredKVStore",
+    "TokenBucket",
+    "UNFINISHED",
+    "bursty_trace",
     "constant_state_bytes",
+    "diurnal_trace",
+    "drive",
     "kv_bytes_per_token",
+    "poisson_trace",
 ]

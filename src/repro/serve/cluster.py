@@ -51,6 +51,14 @@ from repro.configs.base import ArchConfig
 from repro.dist.fault import RestartManager, StragglerDetector
 from repro.sched import FairPolicy, SchedulingPolicy
 from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.serve.report import (
+    COMPLETED,
+    FAILED,
+    LOST,
+    UNFINISHED,
+    RequestOutcome,
+    ServeReport,
+)
 from repro.serve.tiers import PcieLink
 
 __all__ = ["ClusterConfig", "ReplicaCrash", "ServingCluster"]
@@ -154,9 +162,83 @@ class ServingCluster:
         self.straggler_flags = 0  # straggler-pass detections
 
     # -------------------------------------------------------------- tenants
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Accept one request for routing; always True (the cluster never
+        rejects — wrap it in a FrontDoor for admission control)."""
         self._submit_tick.setdefault(req.request_id, self.tick)
         self.queue.append(req)
+        return True
+
+    @property
+    def policy(self) -> SchedulingPolicy:
+        """The cluster-scope policy a wrapping FrontDoor sheds with."""
+        return self.router
+
+    def estimate_request_bytes(self, req: Request) -> float:
+        """Page-rounded peak bytes (all replicas share one ArchConfig)."""
+        return self.replicas[0].estimate_request_bytes(req)
+
+    def group_demand(self) -> Dict[str, float]:
+        """Projected peak bytes per tenant across the whole cluster:
+        every replica's live demand plus everything routed but not yet
+        placed (cluster queue, crash-requeued work, migrations in
+        flight)."""
+        out: Dict[str, float] = {}
+        for eng in self.replicas:
+            for tenant, nbytes in eng.group_demand().items():
+                out[tenant] = out.get(tenant, 0.0) + nbytes
+        waiting = [r for r in self.queue]
+        waiting.extend(r for _, r in self._requeue)
+        waiting.extend(t.request for t, _ in self._inflight.values())
+        for req in waiting:
+            out[req.tenant] = (
+                out.get(req.tenant, 0.0) + self.estimate_request_bytes(req)
+            )
+        return out
+
+    def replica_stats(self) -> Dict[str, float]:
+        """Cluster-aggregate load surface, same keys as the engine's —
+        capacity and projected bytes sum across replicas (plus unplaced
+        work), fractions are byte-weighted over the summed capacity."""
+        per = [eng.replica_stats() for eng in self.replicas]
+        cap = sum(s["capacity_bytes"] for s in per)
+        projected_bytes = sum(s["projected_bytes"] for s in per)
+        unplaced = (
+            len(self.queue) + len(self._requeue) + len(self._inflight)
+        )
+        for req in self.queue:
+            projected_bytes += self.estimate_request_bytes(req)
+        for _, req in self._requeue:
+            projected_bytes += self.estimate_request_bytes(req)
+        for ticket, _ in self._inflight.values():
+            projected_bytes += self.estimate_request_bytes(ticket.request)
+        demand_bytes = sum(
+            s["demand_fraction"] * s["capacity_bytes"] for s in per
+        )
+        used_bytes = sum(
+            s["used_fraction"] * s["capacity_bytes"] for s in per
+        )
+        n_slots = sum(eng.ecfg.n_slots for eng in self.replicas)
+        return {
+            "demand_fraction": demand_bytes / cap if cap > 0 else 0.0,
+            "projected_fraction": projected_bytes / cap if cap > 0 else 0.0,
+            "used_fraction": used_bytes / cap if cap > 0 else 0.0,
+            "slot_load": (
+                sum(s["slot_load"] * eng.ecfg.n_slots
+                    for s, eng in zip(per, self.replicas))
+                + unplaced
+            ) / max(n_slots, 1),
+            "free_slots": float(sum(s["free_slots"] for s in per)),
+            "queued": float(
+                sum(s["queued"] for s in per) + len(self.queue)
+                + len(self._requeue)
+            ),
+            "live": float(sum(s["live"] for s in per) + unplaced),
+            "suspended": float(sum(s["suspended"] for s in per)),
+            "tick_cost": max(s["tick_cost"] for s in per),
+            "capacity_bytes": float(cap),
+            "projected_bytes": float(projected_bytes),
+        }
 
     # ------------------------------------------------------- fault injection
     def set_slowdown(self, replica: int, factor: float) -> None:
@@ -424,7 +506,13 @@ class ServingCluster:
             or any(eng.has_pending for eng in self.replicas)
         )
 
-    def run(self, max_ticks: int = 2000) -> Dict[str, Any]:
+    def run(self, max_ticks: int = 2000) -> ServeReport:
+        """Tick until drained or out of budget; returns the typed
+        :class:`~repro.serve.report.ServeReport` (the legacy dict payload
+        rides in ``report.extras`` and through the deprecation shim).
+        Cluster outcome rows carry cluster-tick latency only — TTFT/TPOT
+        are engine-tick quantities and stay unset (-1/0), which the SLO
+        scorer treats as unmeasured, not failed."""
         while self.tick < max_ticks and self.has_pending:
             self.step()
         lat = sorted(
@@ -437,7 +525,7 @@ class ServingCluster:
             for eng in self.replicas
             for r in eng.requests.values()
         )
-        return {
+        legacy = {
             "policy": self.router.name,
             "n_replicas": len(self.replicas),
             "submitted": len(self._submit_tick),
@@ -470,3 +558,67 @@ class ServingCluster:
                 for eng in self.replicas
             ],
         }
+        # tokens each still-known request generated (crashed replicas'
+        # histories are gone; their rows keep tokens=0)
+        tok_by_rid: Dict[str, int] = {}
+        for eng in self.replicas:
+            for rid, r in eng.requests.items():
+                tok_by_rid[rid] = len(r.generated)
+        tenant_of: Dict[str, str] = {}
+        for eng in self.replicas:
+            for rid, r in eng.requests.items():
+                tenant_of[rid] = r.tenant
+        for source in (self.queue, [r for _, r in self._requeue]):
+            for req in source:
+                tenant_of[req.request_id] = req.tenant
+        for ticket, _ in self._inflight.values():
+            tenant_of[ticket.request.request_id] = ticket.request.tenant
+        lost_set = set(self.lost)
+        terminal: Dict[str, str] = {}
+        for rid in self.completed:
+            terminal[rid] = COMPLETED
+        for rid in self.failed:
+            # lost rids are recorded in both lists; LOST wins
+            terminal[rid] = LOST if rid in lost_set else FAILED
+        outcomes = []
+        for rid, t0 in self._submit_tick.items():
+            kind = terminal.get(rid, UNFINISHED)
+            outcomes.append(
+                RequestOutcome(
+                    request_id=rid,
+                    tenant=tenant_of.get(rid, ""),
+                    outcome=kind,
+                    submit_tick=t0,
+                    finish_tick=self._finish_tick.get(rid, -1),
+                    tokens=tok_by_rid.get(rid, 0),
+                    reason=(
+                        "crash retries exhausted" if kind == LOST else ""
+                    ),
+                )
+            )
+        rep = ServeReport(
+            policy=self.router.name,
+            submitted=len(self._submit_tick),
+            ticks=self.tick,
+            tokens_generated=int(tokens),
+            throughput_tokens_per_tick=tokens / max(1, self.tick),
+            outcomes=outcomes,
+            cluster={
+                k: legacy[k]
+                for k in (
+                    "n_replicas",
+                    "crashes",
+                    "requeued",
+                    "straggler_flags",
+                    "migrations",
+                    "replicas",
+                )
+            },
+            extras=legacy,
+        )
+        rep.refresh_summaries()
+        # LOST rows count as failed in the headline (they ARE failures —
+        # refresh_summaries only tallies FAILED, so fold them back in)
+        rep.failed = len(self.failed)
+        rep.apply_slo()
+        return rep

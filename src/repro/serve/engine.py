@@ -79,6 +79,13 @@ from repro.serve.kv_cache import (
     PagedKVManager,
     constant_state_bytes,
 )
+from repro.serve.report import (
+    COMPLETED,
+    FAILED,
+    UNFINISHED,
+    RequestOutcome,
+    ServeReport,
+)
 from repro.serve.tiers import TierConfig, wire_bytes_for
 
 
@@ -108,6 +115,9 @@ class Request:
     #: suspend/resume replay re-installs the snapshot but must not
     #: re-count the dedup'd prefill work
     hit_counted: bool = False
+    #: why the request failed ("" while not failed) — surfaced in the
+    #: ServeReport outcome row
+    fail_reason: str = ""
 
     @property
     def total_tokens(self) -> int:
@@ -160,6 +170,70 @@ class MigrationTicket:
     source_tick: int = 0
 
 
+class _AdmissionQueue:
+    """The engine's admission queue, indexed for O(1) membership and
+    O(tenants) per-tick policy input instead of an O(queue) rebuild.
+
+    Semantics match the plain list it replaced exactly: iteration yields
+    requests in arrival order, and :meth:`tenant_counts` presents tenants
+    in the order of their OLDEST queued request — the same key order the
+    legacy ``by_tenant`` dict had, which :meth:`BasePolicy.assign`'s
+    persistent round-robin cursor is sensitive to.  Per-request sequence
+    numbers (monotonic, never reused) make that ordering survive
+    mid-queue removals, where a naive per-tenant dict would not.
+    """
+
+    def __init__(self) -> None:
+        self._order: Dict[str, Request] = {}  # rid → request, arrival order
+        self._seq: Dict[str, int] = {}  # rid → global arrival sequence
+        self._by_tenant: Dict[str, Dict[str, Request]] = {}
+        self._next_seq = 0
+
+    def append(self, req: Request) -> None:
+        rid = req.request_id
+        self._order[rid] = req
+        self._seq[rid] = self._next_seq
+        self._next_seq += 1
+        self._by_tenant.setdefault(req.tenant, {})[rid] = req
+
+    def remove(self, req: Request) -> None:
+        rid = req.request_id
+        del self._order[rid]
+        del self._seq[rid]
+        bucket = self._by_tenant[req.tenant]
+        del bucket[rid]
+        if not bucket:
+            del self._by_tenant[req.tenant]
+
+    def head(self, tenant: str) -> Optional[Request]:
+        bucket = self._by_tenant.get(tenant)
+        if not bucket:
+            return None
+        return next(iter(bucket.values()))
+
+    def tenant_counts(self, exclude: Any = ()) -> Dict[str, int]:
+        """``{tenant: queued}`` keyed in oldest-head-request order."""
+        rows = []
+        for tenant, bucket in self._by_tenant.items():
+            if tenant in exclude:
+                continue
+            rows.append((self._seq[next(iter(bucket))], tenant, len(bucket)))
+        rows.sort()
+        return {tenant: n for _, tenant, n in rows}
+
+    def __contains__(self, req: Request) -> bool:
+        return req.request_id in self._order
+
+    def __iter__(self):
+        return iter(self._order.values())
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    def __bool__(self) -> bool:
+        return bool(self._order)
+
+
 @dataclass
 class EngineConfig:
     n_slots: int = 4
@@ -209,6 +283,12 @@ class EngineConfig:
     #: token trie, cached pages are shared by refcount (COW on append) and
     #: prefill is skipped up to the first uncached token
     prefix_cache: bool = True
+    #: use the pre-vectorization O(live)-per-tick bookkeeping scans
+    #: (full pool rescan, projected-demand resummation, state sweeps)
+    #: instead of the incremental dirty-set/counter paths.  Semantics are
+    #: identical by construction; the flag exists so the benchmark can
+    #: measure the ticks/sec delta honestly
+    legacy_bookkeeping: bool = False
     #: host-side KV snapshots backing prefill-skip, LRU-bounded so a
     #: long-lived engine serving many distinct prompts cannot grow host
     #: memory without bound (each snapshot is one slot's full cache
@@ -260,12 +340,29 @@ class ServingEngine:
         self.kv.cache_pressure_fn = self.policy.cache_pressure
         self.sampler = Sampler()
         self.tick = 0
-        self.queue: List[Request] = []
+        self.queue = _AdmissionQueue()
         self._restore: List[str] = []  # resumed/reloaded, waiting for a slot
         self.requests: Dict[str, Request] = {}  # full history (lookup/report)
         #: not-yet-terminal requests — every per-tick scan walks this, so
         #: tick cost is bounded by the in-flight set, not request history
         self._live: Dict[str, Request] = {}
+        # ---- incremental bookkeeping (kept in BOTH modes; the
+        # legacy_bookkeeping flag only selects which representation the
+        # read paths consult)
+        #: state → live request ids in that state (terminal states are
+        #: dropped with the request) — O(1) counts for has_pending,
+        #: replica_stats and the per-tick active-slot cost
+        self._state_ids: Dict[str, set] = {}
+        #: running Σ estimate_request_bytes over live requests, and the
+        #: same split per tenant (the front door's group_demand feed)
+        self._projected_bytes = 0.0
+        self._projected_by_tenant: Dict[str, float] = {}
+        self._tenant_live: Dict[str, int] = {}  # tenant → live requests
+        self._est: Dict[str, float] = {}  # rid → cached peak estimate
+        #: rids whose state changed since the last pool sync — merged
+        #: with the KV manager's allocator dirty set in _update_pool
+        self._pool_dirty: set = set()
+        self._submitted = 0  # every submission this engine ever accepted
         self.failed: List[str] = []
         self.completed: List[str] = []
         self.suspensions = 0
@@ -426,12 +523,69 @@ class ServingEngine:
 
         self._chunk_scan = jax.jit(_chunk_scan, donate_argnums=(2,))
 
+    # ----------------------------------------------------- live bookkeeping
+    def _set_state(self, req: Request, new: str) -> None:
+        """The one place a live request's state changes: keeps the
+        per-state id sets exact and marks the rid for the next pool sync
+        (a transition into/out of an accounted state moves pool bytes)."""
+        old = req.state
+        if new == old:
+            return
+        ids = self._state_ids.get(old)
+        if ids is not None:
+            ids.discard(req.request_id)
+        self._state_ids.setdefault(new, set()).add(req.request_id)
+        req.state = new
+        self._pool_dirty.add(req.request_id)
+
+    def _track_live(self, req: Request) -> None:
+        rid = req.request_id
+        self._live[rid] = req
+        self._state_ids.setdefault(req.state, set()).add(rid)
+        est = self.estimate_request_bytes(req)
+        self._est[rid] = est
+        self._projected_bytes += est
+        tenant = req.tenant
+        self._projected_by_tenant[tenant] = (
+            self._projected_by_tenant.get(tenant, 0.0) + est
+        )
+        self._tenant_live[tenant] = self._tenant_live.get(tenant, 0) + 1
+
+    def _drop_live(self, req: Request) -> None:
+        rid = req.request_id
+        if self._live.pop(rid, None) is None:
+            return
+        ids = self._state_ids.get(req.state)
+        if ids is not None:
+            ids.discard(rid)
+        est = self._est.pop(rid, 0.0)
+        self._projected_bytes -= est
+        tenant = req.tenant
+        left = self._tenant_live.get(tenant, 0) - 1
+        if left <= 0:
+            # popping the emptied tenant also drops any accumulated float
+            # residue, so projected demand cannot drift over a long run
+            self._tenant_live.pop(tenant, None)
+            self._projected_by_tenant.pop(tenant, None)
+        else:
+            self._tenant_live[tenant] = left
+            self._projected_by_tenant[tenant] = (
+                self._projected_by_tenant.get(tenant, 0.0) - est
+            )
+        if not self._live:
+            self._projected_bytes = 0.0  # settle on empty
+
     # ------------------------------------------------------------- tenants
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Accept one request into the admission queue; always True (an
+        engine never rejects at the door — put a
+        :class:`repro.serve.frontdoor.FrontDoor` in front for that)."""
         req.submit_tick = self.tick
         self.queue.append(req)
         self.requests[req.request_id] = req
-        self._live[req.request_id] = req
+        self._track_live(req)
+        self._submitted += 1
+        return True
 
     # ------------------------------------------------------------ migration
     def export_request(self, request_id: str) -> Optional[MigrationTicket]:
@@ -494,7 +648,7 @@ class ServingEngine:
         self.policy.drop(request_id)
         self._frozen_payloads.pop(request_id, None)
         self._imports.pop(request_id, None)
-        self._live.pop(request_id, None)
+        self._drop_live(req)
         self.requests.pop(request_id, None)
         self.kv.reclaim()
         self._update_pool()
@@ -518,17 +672,18 @@ class ServingEngine:
         rid = req.request_id
         req.slot = -1
         self.requests[rid] = req
-        self._live[rid] = req
+        self._track_live(req)
+        self._submitted += 1
         self.migrations_in += 1
         if req.state == "queued":
             self.queue.append(req)
             return
         self.kv.register(rid, self.cfg)
         if ticket.slot_cache is not None or self._payload_covers(ticket):
-            req.state = "importing"
+            self._set_state(req, "importing")
             self._imports[rid] = ticket
         else:
-            req.state = "suspended"
+            self._set_state(req, "suspended")
             req.pos = 0
             req.cached_tokens = 0
             req.snap_key = None
@@ -577,7 +732,7 @@ class ServingEngine:
                     self._install_page_payload(
                         slot, idx, ticket.page_payloads[idx]
                     )
-            req.state = "prefill" if req.prefilling else "decoding"
+            self._set_state(req, "prefill" if req.prefilling else "decoding")
             # fresh rate window on this replica: the sampler must never
             # see the imported progress as one giant burst
             self.sampler.forget(rid)
@@ -588,6 +743,11 @@ class ServingEngine:
     @property
     def has_pending(self) -> bool:
         """True while any request still needs engine ticks."""
+        if not self.ecfg.legacy_bookkeeping:
+            # every non-terminal request is in _live (queued ones are in
+            # the admission queue AND _live; terminal states are dropped
+            # on finish/fail/export), so membership alone answers this
+            return bool(self._live)
         return (
             bool(self.queue)
             or bool(self._imports)
@@ -622,8 +782,24 @@ class ServingEngine:
 
     def replica_stats(self) -> Dict[str, float]:
         """The load surface a cluster router scores placements against
-        (see ``SchedulingPolicy.placement_score``)."""
+        (see ``SchedulingPolicy.placement_score``), and the admission
+        surface a :class:`~repro.serve.frontdoor.FrontDoor` sheds
+        against (``capacity_bytes`` / ``projected_bytes``)."""
         cap = self.pool.capacity
+        if self.ecfg.legacy_bookkeeping:
+            # committed future demand: every non-terminal request here
+            # will grow to its declared peak — materialized bytes alone
+            # make a just-admitted heavy decode look as light as a
+            # finished one, which is exactly the placement mistake
+            projected_bytes = sum(
+                self.estimate_request_bytes(r) for r in self._live.values()
+            )
+            suspended = float(
+                sum(1 for r in self._live.values() if r.state == "suspended")
+            )
+        else:
+            projected_bytes = self._projected_bytes
+            suspended = float(len(self._state_ids.get("suspended", ())))
         demand = 0.0
         projected = 0.0
         if cap > 0:
@@ -631,17 +807,7 @@ class ServingEngine:
                 max(self.pool.used_bytes - self.kv.reclaimable_bytes, 0.0)
                 / cap
             )
-            # committed future demand: every non-terminal request here
-            # will grow to its declared peak — materialized bytes alone
-            # make a just-admitted heavy decode look as light as a
-            # finished one, which is exactly the placement mistake
-            projected = (
-                sum(
-                    self.estimate_request_bytes(r)
-                    for r in self._live.values()
-                )
-                / cap
-            )
+            projected = projected_bytes / cap
         busy = sum(1 for r in self._slot_req if r is not None)
         waiting = len(self.queue) + len(self._restore) + len(self._imports)
         return {
@@ -652,11 +818,23 @@ class ServingEngine:
             "free_slots": float(self.ecfg.n_slots - busy),
             "queued": float(len(self.queue)),
             "live": float(len(self._live)),
-            "suspended": float(
-                sum(1 for r in self._live.values() if r.state == "suspended")
-            ),
+            "suspended": suspended,
             "tick_cost": self.last_tick_cost,
+            "capacity_bytes": float(cap),
+            "projected_bytes": float(projected_bytes),
         }
+
+    def group_demand(self) -> Dict[str, float]:
+        """Projected peak bytes per tenant over live requests — the front
+        door's shedding input (who is actually filling the pool)."""
+        if self.ecfg.legacy_bookkeeping:
+            out: Dict[str, float] = {}
+            for r in self._live.values():
+                out[r.tenant] = (
+                    out.get(r.tenant, 0.0) + self.estimate_request_bytes(r)
+                )
+            return out
+        return dict(self._projected_by_tenant)
 
     def estimate_request_bytes(self, req: Request) -> float:
         """Page-rounded bytes the request will pin at its declared peak
@@ -668,12 +846,30 @@ class ServingEngine:
 
     # ------------------------------------------------------------ accounting
     def _update_pool(self) -> None:
-        for rid, req in self._live.items():
-            if req.state in ("prefill", "decoding", "suspended", "offloaded"):
-                # offloaded requests still own HBM bytes until the last
-                # page demotes (and again as promotions land) — skipping
-                # them leaves stale live entries pinning the pool
-                self.pool.set_live(rid, self.kv.request_bytes(rid))
+        if self.ecfg.legacy_bookkeeping:
+            for rid, req in self._live.items():
+                if req.state in (
+                    "prefill", "decoding", "suspended", "offloaded"
+                ):
+                    # offloaded requests still own HBM bytes until the
+                    # last page demotes (and again as promotions land) —
+                    # skipping them leaves stale live entries pinning the
+                    # pool
+                    self.pool.set_live(rid, self.kv.request_bytes(rid))
+        else:
+            # only owners whose attribution actually changed re-sync:
+            # every allocator refcount event (incl. co-holders of shared
+            # pages) and every state transition marks its rid dirty
+            dirty = self.kv.drain_dirty()
+            if self._pool_dirty:
+                dirty |= self._pool_dirty
+                self._pool_dirty = set()
+            for rid in dirty:
+                req = self._live.get(rid)
+                if req is not None and req.state in (
+                    "prefill", "decoding", "suspended", "offloaded"
+                ):
+                    self.pool.set_live(rid, self.kv.request_bytes(rid))
         if self.ecfg.prefix_cache:
             # cold cached prefixes are live pool bytes too — the policy
             # must see them (and eviction must relieve them)
@@ -742,7 +938,7 @@ class ServingEngine:
             slot = free_slots.pop(0)
             req.slot = slot
             self._slot_req[slot] = req.request_id
-            req.state = "prefill"
+            self._set_state(req, "prefill")
             req.pos = 0
             self._frozen_payloads.pop(req.request_id, None)
             # replay rewinds processed-token counts: restart the rate
@@ -763,17 +959,29 @@ class ServingEngine:
         # the policy's placement hook decides which tenant's head-of-line
         # request each free slot goes to (FAIR/MURS: round-robin across
         # tenants, PriorityPolicy: weighted stride) — FIFO within a tenant
-        by_tenant: Dict[str, List[Request]] = {}
-        for r in self.queue:
-            if r.tenant not in gated:
-                by_tenant.setdefault(r.tenant, []).append(r)
-        picks = self.policy.assign(
-            len(free_slots), {t: len(v) for t, v in by_tenant.items()}
-        )
+        by_tenant: Optional[Dict[str, List[Request]]] = None
+        if self.ecfg.legacy_bookkeeping:
+            by_tenant = {}
+            for r in self.queue:
+                if r.tenant not in gated:
+                    by_tenant.setdefault(r.tenant, []).append(r)
+            pending = {t: len(v) for t, v in by_tenant.items()}
+        else:
+            # same mapping, same key order (tenants by oldest queued
+            # request) — read off the queue's index instead of an
+            # O(queue) rebuild every tick
+            pending = self.queue.tenant_counts(exclude=gated)
+        picks = self.policy.assign(len(free_slots), pending)
         for tenant in picks:
-            if not free_slots or not by_tenant.get(tenant):
+            if not free_slots:
                 continue
-            req = by_tenant[tenant][0]
+            if by_tenant is not None:
+                bucket = by_tenant.get(tenant)
+                req = bucket[0] if bucket else None
+            else:
+                req = self.queue.head(tenant)
+            if req is None:
+                continue
             # capacity check: would this request's prompt fit below the
             # policy's admission line right now?  Pure arithmetic — no
             # allocator churn for a request that just waits at the door.
@@ -786,11 +994,13 @@ class ServingEngine:
                 # can never fit, even into an empty pool: fail fast
                 # (OOM semantics) instead of blocking the queue forever
                 self.queue.remove(req)
-                by_tenant[tenant].pop(0)
-                req.state = "failed"
+                if by_tenant is not None:
+                    by_tenant[tenant].pop(0)
+                self._set_state(req, "failed")
                 req.finish_tick = self.tick
+                req.fail_reason = "prompt exceeds admission headroom"
                 self.failed.append(req.request_id)
-                self._live.pop(req.request_id, None)
+                self._drop_live(req)
                 continue
             # cold cached prefixes are the cheapest bytes to shed — drop
             # them (policy-ordered) before touching anyone's frozen KV,
@@ -813,7 +1023,8 @@ class ServingEngine:
             if self.pool.used_bytes + prompt_bytes > headroom:
                 break  # pool-bound: nobody else fits this tick either
             self.queue.remove(req)
-            by_tenant[tenant].pop(0)
+            if by_tenant is not None:
+                by_tenant[tenant].pop(0)
             self.kv.register(req.request_id, self.cfg)
             if self.ecfg.prefix_cache:
                 # the trie hands over every page of the longest cached
@@ -826,7 +1037,7 @@ class ServingEngine:
             slot = free_slots.pop(0)
             req.slot = slot
             self._slot_req[slot] = req.request_id
-            req.state = "prefill"
+            self._set_state(req, "prefill")
             req.pos = 0
             self._update_pool()
 
@@ -988,13 +1199,13 @@ class ServingEngine:
         if req.generated:
             # replay after suspension/offload: the cache is rebuilt; the
             # next decode step feeds generated[-1] — nothing new to sample
-            req.state = "decoding"
+            self._set_state(req, "decoding")
             return
         next_tok = int(jnp.argmax(last_logits))
         self._publish_prefix(req, next_tok)
         req.generated.append(next_tok)
         req.first_token_tick = self.tick
-        req.state = "decoding"
+        self._set_state(req, "decoding")
 
     def _publish_prefix(self, req: Request, first_tok: int) -> None:
         """Insert a freshly prefilled prompt's pages into the trie and
@@ -1044,11 +1255,12 @@ class ServingEngine:
             if count:
                 self.prefix_hit_tokens += len(feed)
             if req.generated:
-                req.state = "decoding"  # replay: next decode feeds last tok
+                # replay: next decode feeds last tok
+                self._set_state(req, "decoding")
             else:
                 req.generated.append(first_tok)
                 req.first_token_tick = self.tick
-                req.state = "decoding"
+                self._set_state(req, "decoding")
         else:
             # partial hit (or full-page hit needing last-position logits):
             # chunked prefill resumes at the first position whose logits or
@@ -1176,10 +1388,10 @@ class ServingEngine:
         self._update_pool()
 
     def _finish(self, req: Request) -> None:
-        req.state = "done"
+        self._set_state(req, "done")
         req.finish_tick = self.tick
         self.completed.append(req.request_id)
-        self._live.pop(req.request_id, None)
+        self._drop_live(req)
         self._release_slot(req)
         self.pool.release_owner(req.request_id)
         self.kv.release(req.request_id)
@@ -1217,7 +1429,7 @@ class ServingEngine:
         for rid in decision.suspend:
             req = self.requests[rid]
             if req.state in ("decoding", "prefill"):
-                req.state = "suspended"
+                self._set_state(req, "suspended")
                 self.suspensions += 1
                 if req.slot >= 0:
                     # capture the frozen pages' REAL KV values while the
@@ -1259,10 +1471,14 @@ class ServingEngine:
         # modeled tick service time for a cluster's straggler pass: base
         # cost + per-active-request work + the stalls this tick actually
         # paid (deterministic — no wall clock in the simulation)
+        if self.ecfg.legacy_bookkeeping:
+            n_active = len(self._active())
+        else:
+            n_active = len(self._state_ids.get("prefill", ())) + len(
+                self._state_ids.get("decoding", ())
+            )
         self.last_tick_cost = (
-            1.0
-            + 0.1 * len(self._active())
-            + 0.5 * (self.stall_ticks - stalls0)
+            1.0 + 0.1 * n_active + 0.5 * (self.stall_ticks - stalls0)
         )
         period_ticks = max(
             round(self.policy.period * self.ecfg.murs_period_ticks), 1
@@ -1292,10 +1508,18 @@ class ServingEngine:
 
     def _frozen_bytes(self) -> float:
         """Pool bytes held by swappable (suspended, not restoring) KV."""
+        if self.ecfg.legacy_bookkeeping:
+            return sum(
+                self.kv.request_bytes(r.request_id)
+                for r in self._live.values()
+                if r.state == "suspended"
+                and r.request_id not in self._restore
+            )
+        restoring = set(self._restore)
         return sum(
-            self.kv.request_bytes(r.request_id)
-            for r in self._live.values()
-            if r.state == "suspended" and r.request_id not in self._restore
+            self.kv.request_bytes(rid)
+            for rid in sorted(self._state_ids.get("suspended", ()))
+            if rid not in restoring
         )
 
     def _frozen_victims(self, require_pressure: bool) -> List[Request]:
@@ -1305,11 +1529,21 @@ class ServingEngine:
         ``require_pressure`` only positively-marked tenants qualify (the
         proactive pass is policy-opt-in; the reactive paths take anyone).
         """
+        if self.ecfg.legacy_bookkeeping:
+            frozen = [
+                r
+                for r in self._live.values()
+                if r.state == "suspended"
+            ]
+        else:
+            frozen = [
+                self.requests[rid]
+                for rid in sorted(self._state_ids.get("suspended", ()))
+            ]
         victims = [
             r
-            for r in self._live.values()
-            if r.state == "suspended"
-            and r.request_id not in self._restore
+            for r in frozen
+            if r.request_id not in self._restore
             and self.kv.demotable_indices(r.request_id)
         ]
         if require_pressure:
@@ -1384,7 +1618,10 @@ class ServingEngine:
         """True when the policy marks ANY live tenant for demotion —
         gates cold-page demotion so a pressure-oblivious policy keeps
         stock (evict-on-shortage) cache behaviour."""
-        tenants = {r.tenant for r in self._live.values()}
+        if self.ecfg.legacy_bookkeeping:
+            tenants = {r.tenant for r in self._live.values()}
+        else:
+            tenants = self._tenant_live.keys()
         return any(self.policy.demotion_pressure(t) > 0.0 for t in tenants)
 
     def _promotion_pass(self) -> None:
@@ -1419,7 +1656,7 @@ class ServingEngine:
                     self.kv.demote_page(
                         rid, idx, self._page_payload(r.slot, idx), now
                     )
-                r.state = "offloaded"
+                self._set_state(r, "offloaded")
                 self._release_slot(r)
         wanted: List[str] = []
         for rid in self._restore:
@@ -1532,15 +1769,16 @@ class ServingEngine:
                 # fully demoted: free the batch row for someone resident;
                 # the request replays when its pages promote back
                 if victim.state in ("decoding", "prefill"):
-                    victim.state = "offloaded"
+                    self._set_state(victim, "offloaded")
                 self._release_slot(victim)
         self.kv.reclaim()
 
     def _fail(self, victim: Request) -> None:
-        victim.state = "failed"
+        self._set_state(victim, "failed")
         victim.finish_tick = self.tick
+        victim.fail_reason = "pool overcommit with offload disabled (OOM)"
         self.failed.append(victim.request_id)
-        self._live.pop(victim.request_id, None)
+        self._drop_live(victim)
         self.pool.release_owner(victim.request_id)
         self.kv.release(victim.request_id)
         self.sampler.forget(victim.request_id)
@@ -1550,11 +1788,19 @@ class ServingEngine:
         self.kv.reclaim()
         self._update_pool()
 
-    def run(self, max_ticks: int = 1000) -> Dict[str, Any]:
+    def run(self, max_ticks: int = 1000) -> ServeReport:
+        """Tick until drained or the budget runs out; returns the typed
+        :class:`~repro.serve.report.ServeReport` (the legacy dict payload
+        rides in ``report.extras`` and through the deprecation shim)."""
         while self.tick < max_ticks:
             if not self.has_pending:
                 break
             self.step()
+        return self.report()
+
+    def report(self) -> ServeReport:
+        """Build the ServeReport for the run so far (also usable
+        mid-flight — unfinished requests show up as such)."""
         lat = [
             r.finish_tick - r.submit_tick
             for r in self.requests.values()
@@ -1579,7 +1825,7 @@ class ServingEngine:
         prefix = dict(self.kv.prefix_stats())
         prefix["requests_hit"] = self.prefix_hits
         prefix["prefill_tokens_skipped"] = self.prefix_hit_tokens
-        return {
+        legacy = {
             "policy": self.policy.name,
             "completed": len(self.completed),
             "failed": len(self.failed),
@@ -1608,3 +1854,58 @@ class ServingEngine:
                 r.request_id: r.memory_model for r in self.requests.values()
             },
         }
+        outcomes: List[RequestOutcome] = []
+        for r in self.requests.values():
+            if r.state == "done":
+                outcomes.append(
+                    RequestOutcome(
+                        request_id=r.request_id,
+                        tenant=r.tenant,
+                        outcome=COMPLETED,
+                        submit_tick=r.submit_tick,
+                        finish_tick=r.finish_tick,
+                        first_token_tick=r.first_token_tick,
+                        tokens=len(r.generated),
+                    )
+                )
+            elif r.state == "failed":
+                outcomes.append(
+                    RequestOutcome(
+                        request_id=r.request_id,
+                        tenant=r.tenant,
+                        outcome=FAILED,
+                        submit_tick=r.submit_tick,
+                        finish_tick=r.finish_tick,
+                        first_token_tick=r.first_token_tick,
+                        tokens=len(r.generated),
+                        reason=r.fail_reason,
+                    )
+                )
+            else:
+                outcomes.append(
+                    RequestOutcome(
+                        request_id=r.request_id,
+                        tenant=r.tenant,
+                        outcome=UNFINISHED,
+                        submit_tick=r.submit_tick,
+                        first_token_tick=r.first_token_tick,
+                        tokens=len(r.generated),
+                        reason=f"still {r.state} at tick budget",
+                    )
+                )
+        rep = ServeReport(
+            policy=self.policy.name,
+            submitted=self._submitted,
+            ticks=self.tick,
+            tokens_generated=legacy["tokens_generated"],
+            throughput_tokens_per_tick=(
+                legacy["tokens_generated"] / max(1, self.tick)
+            ),
+            outcomes=outcomes,
+            tiering=legacy["tiers"],
+            prefix=prefix,
+            extras=legacy,
+        )
+        rep.refresh_summaries()
+        rep.apply_slo()  # no SLO at engine level: goodput = completion rate
+        return rep

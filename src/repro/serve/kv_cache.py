@@ -155,9 +155,24 @@ class PageBlockAllocator:
         self._free_overflow: List[int] = []  # recycled overflow ids
         self._tables: Dict[str, List[int]] = {}
         self._ref: Dict[int, int] = {}  # page id → number of holders
+        #: page id → owners holding it (reverse of the tables, DEMOTED
+        #: entries excluded) — a refcount change on a SHARED page changes
+        #: every co-holder's fractional share, so attribution updates
+        #: must fan out to all of them
+        self._holders: Dict[int, List[str]] = {}
+        #: owners whose attributed share (:meth:`owner_share`) changed
+        #: since the last :meth:`drain_dirty` — the engine's incremental
+        #: pool-accounting sync reads and clears this instead of
+        #: recomputing every live owner per tick
+        self.dirty: set = set()
         self._next_overflow = n_pages
         self.overflow_pages = 0  # overflow pages currently held
         self.cow_events = 0  # copy-on-write page splits
+
+    def drain_dirty(self) -> set:
+        out = self.dirty
+        self.dirty = set()
+        return out
 
     # ------------------------------------------------------------- queries
     @property
@@ -221,7 +236,7 @@ class PageBlockAllocator:
         return out
 
     # ---------------------------------------------------------- allocation
-    def _alloc_page(self) -> int:
+    def _alloc_page(self, owner: str) -> int:
         if self._free:
             pid = self._free.pop()
         elif self._free_overflow:
@@ -232,15 +247,29 @@ class PageBlockAllocator:
             self._next_overflow += 1
             self.overflow_pages += 1
         self._ref[pid] = 1
+        self._holders[pid] = [owner]
+        self.dirty.add(owner)
         return pid
 
-    def _decref(self, pid: int) -> bool:
-        """Drop one reference; returns True iff the page became free."""
+    def _decref(self, pid: int, owner: str) -> bool:
+        """Drop ``owner``'s reference; returns True iff the page became
+        free.  Remaining co-holders' fractional shares grow, so they are
+        marked dirty too."""
+        holders = self._holders.get(pid)
+        if holders is not None:
+            try:
+                holders.remove(owner)
+            except ValueError:
+                pass
+        self.dirty.add(owner)
         n = self._ref[pid] - 1
         if n > 0:
             self._ref[pid] = n
+            if holders:
+                self.dirty.update(holders)
             return False
         del self._ref[pid]
+        self._holders.pop(pid, None)
         if pid < self.n_pages:
             self._free.append(pid)
         else:
@@ -255,7 +284,7 @@ class PageBlockAllocator:
         if new <= 0:
             return 0
         for _ in range(new):
-            table.append(self._alloc_page())
+            table.append(self._alloc_page(owner))
         return new
 
     def share(self, owner: str, pages: Sequence[int]) -> None:
@@ -272,6 +301,10 @@ class PageBlockAllocator:
             if pid >= self.n_pages:
                 raise ValueError(f"overflow page {pid} cannot be shared")
             self._ref[pid] += 1
+            holders = self._holders.setdefault(pid, [])
+            self.dirty.update(holders)  # their 1/k share just shrank
+            holders.append(owner)
+            self.dirty.add(owner)
             table.append(pid)
 
     def ensure_private(self, owner: str, index: int) -> int:
@@ -286,9 +319,16 @@ class PageBlockAllocator:
         pid = table[index]
         if self._ref.get(pid, 0) <= 1:
             return pid
-        new = self._alloc_page()
+        new = self._alloc_page(owner)
         table[index] = new
         self._ref[pid] -= 1
+        holders = self._holders.get(pid)
+        if holders is not None:
+            try:
+                holders.remove(owner)
+            except ValueError:
+                pass
+            self.dirty.update(holders)  # co-holders' shares grew
         self.cow_events += 1
         return new
 
@@ -302,7 +342,7 @@ class PageBlockAllocator:
         for pid in table:
             if pid == DEMOTED:
                 continue
-            self._decref(pid)
+            self._decref(pid, owner)
             released += 1
         return released
 
@@ -323,7 +363,7 @@ class PageBlockAllocator:
             raise ValueError(f"overflow page {pid} cannot be demoted")
         if self._ref.get(pid, 0) != 1:
             raise ValueError(f"shared page {pid} cannot be demoted")
-        self._decref(pid)
+        self._decref(pid, owner)
         table[index] = DEMOTED
         return pid
 
@@ -334,7 +374,7 @@ class PageBlockAllocator:
         table = self._tables[owner]
         if table[index] != DEMOTED:
             raise ValueError(f"page {owner!r}[{index}] is not demoted")
-        pid = self._alloc_page()
+        pid = self._alloc_page(owner)
         table[index] = pid
         return pid
 
@@ -353,6 +393,8 @@ class PageBlockAllocator:
             return None
         pid = self._free.pop()
         self._ref[pid] = 1
+        self._holders[pid] = [owner]
+        self.dirty.add(owner)
         self._tables.setdefault(owner, []).append(pid)
         return pid
 
@@ -362,7 +404,7 @@ class PageBlockAllocator:
         table = self._tables.get(owner, [])
         for pid in pages:
             table.remove(pid)
-            self._decref(pid)
+            self._decref(pid, owner)
 
     # ------------------------------------------------------------ residency
     def resident(self, owner: str) -> bool:
@@ -381,14 +423,17 @@ class PageBlockAllocator:
         """Page overflow entries back into freed physical pages (the DMA
         that resolves overcommit); returns the number of pages moved."""
         moved = 0
-        for table in self._tables.values():
+        for owner, table in self._tables.items():
             for i, pid in enumerate(table):
                 if pid >= self.n_pages and self._free:
                     # overflow pages are never shared → refcount is 1
                     self._free_overflow.append(pid)
                     del self._ref[pid]
+                    self._holders.pop(pid, None)
                     new = self._free.pop()
                     self._ref[new] = 1
+                    self._holders[new] = [owner]
+                    self.dirty.add(owner)
                     table[i] = new
                     self.overflow_pages -= 1
                     moved += 1
@@ -836,6 +881,9 @@ class PagedKVManager:
     _prefix: Optional[PrefixCache] = None
     _pool_page_bytes: float = 0.0
     tiers: Optional["TieredKVStore"] = None
+    #: request ids whose attributed bytes changed outside the allocator
+    #: (constant-state registration); merged into :meth:`drain_dirty`
+    _dirty: set = field(default_factory=set)
 
     def __post_init__(self) -> None:
         if self.tier_config is not None:
@@ -848,6 +896,7 @@ class PagedKVManager:
         page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
         self._page_bytes[request_id] = page_bytes
         self._state_bytes[request_id] = constant_state_bytes(cfg)
+        self._dirty.add(request_id)
         if self._alloc is None and page_bytes > 0:
             self._alloc = PageBlockAllocator(
                 int(self.capacity_bytes // page_bytes)
@@ -917,7 +966,18 @@ class PagedKVManager:
             pages = self._alloc.free(request_id)
         pb = self._page_bytes.pop(request_id, 0.0)
         sb = self._state_bytes.pop(request_id, 0.0)
+        self._dirty.add(request_id)
         return pages * pb + sb
+
+    def drain_dirty(self) -> set:
+        """Owners whose attributed bytes may have changed since the last
+        drain (registration, release, and every allocator refcount event
+        — including co-holders of shared pages)."""
+        out = self._dirty
+        self._dirty = set()
+        if self._alloc is not None:
+            out |= self._alloc.drain_dirty()
+        return out
 
     # ----------------------------------------------------- tier transitions
     def demote_page(

@@ -23,7 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, List
 
-from repro.core.scheduler import MursConfig
+from repro.sched import MursConfig
 
 
 @dataclass

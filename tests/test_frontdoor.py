@@ -1,0 +1,505 @@
+"""Front-door admission control, open-loop traffic, and typed reports.
+
+Covers the overload surface added around the serving engine:
+
+* token-bucket refill arithmetic;
+* per-policy ``shed_order`` (fair FIFO, MURS usage-rate, priority weight);
+* open-loop trace determinism and validation;
+* :class:`ServeReport` round-trip, SLO scoring, and the deprecated dict
+  shim;
+* the conservation property — every submission a front door ever sees
+  ends in exactly one terminal outcome row (hypothesis-driven over a
+  lightweight fake server, then end-to-end on the real engine);
+* fast vs legacy engine bookkeeping producing identical results.
+"""
+
+import jax
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.models import init_model
+from repro.sched import BasePolicy, FairPolicy, MursConfig, MursPolicy
+from repro.sched.priority import PriorityConfig, PriorityPolicy
+from repro.serve import (
+    COMPLETED,
+    FAILED,
+    LOST,
+    RATE_LIMITED,
+    SHED,
+    UNFINISHED,
+    ClusterConfig,
+    EngineConfig,
+    FrontDoor,
+    FrontDoorConfig,
+    LatencySummary,
+    Request,
+    RequestOutcome,
+    Server,
+    ServeReport,
+    ServingCluster,
+    ServingEngine,
+    SloSpec,
+    TenantProfile,
+    TokenBucket,
+    bursty_trace,
+    diurnal_trace,
+    drive,
+    poisson_trace,
+)
+from repro.serve.kv_cache import kv_bytes_per_token
+from repro.serve.report import percentile
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["internlm2-1.8b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# --------------------------------------------------------------- fake server
+class FakeServer:
+    """Minimal in-memory :class:`Server`: FIFO queue, ``n_slots``
+    concurrent requests, each finishing ``service_ticks`` after it
+    starts.  Fast enough to drive thousands of hypothesis examples."""
+
+    def __init__(self, capacity_bytes=0.0, service_ticks=2, n_slots=2,
+                 bytes_per_token=10.0):
+        self.tick = 0
+        self.capacity_bytes = float(capacity_bytes)
+        self.service_ticks = service_ticks
+        self.n_slots = n_slots
+        self.bytes_per_token = bytes_per_token
+        self.policy = None
+        self.requests = {}
+        self.queue = []
+        self.active = {}  # rid -> finish tick
+        self.done = []
+
+    @property
+    def has_pending(self):
+        return bool(self.queue or self.active)
+
+    def estimate_request_bytes(self, req):
+        return (len(req.prompt) + req.max_new_tokens) * self.bytes_per_token
+
+    def group_demand(self):
+        agg = {}
+        for rid in list(self.queue) + list(self.active):
+            req = self.requests[rid]
+            est = self.estimate_request_bytes(req)
+            agg[req.tenant] = agg.get(req.tenant, 0.0) + est
+        return agg
+
+    def replica_stats(self):
+        return {
+            "capacity_bytes": self.capacity_bytes,
+            "projected_bytes": sum(self.group_demand().values()),
+        }
+
+    def submit(self, req):
+        self.requests[req.request_id] = req
+        req.submit_tick = self.tick
+        self.queue.append(req.request_id)
+        return True
+
+    def step(self):
+        self.tick += 1
+        for rid in [r for r, t in self.active.items() if t <= self.tick]:
+            del self.active[rid]
+            req = self.requests[rid]
+            self.done.append(RequestOutcome(
+                request_id=rid, tenant=req.tenant, outcome=COMPLETED,
+                submit_tick=req.submit_tick, finish_tick=self.tick,
+                first_token_tick=req.submit_tick + 1,
+                tokens=req.max_new_tokens,
+            ))
+        while self.queue and len(self.active) < self.n_slots:
+            self.active[self.queue.pop(0)] = self.tick + self.service_ticks
+
+    def run(self, max_ticks=1000):
+        while self.has_pending and self.tick < max_ticks:
+            self.step()
+        outcomes = list(self.done)
+        for rid in list(self.queue) + list(self.active):
+            req = self.requests[rid]
+            outcomes.append(RequestOutcome(
+                request_id=rid, tenant=req.tenant, outcome=UNFINISHED,
+                submit_tick=req.submit_tick,
+                reason="still queued at tick budget",
+            ))
+        rep = ServeReport(policy="fake", submitted=len(self.requests),
+                          ticks=self.tick, outcomes=outcomes)
+        rep.refresh_summaries()
+        rep.apply_slo()
+        return rep
+
+
+# -------------------------------------------------------------- token bucket
+class TestTokenBucket:
+    def test_starts_full_and_drains(self):
+        b = TokenBucket(rate=0.5, burst=2.0)
+        assert b.try_take(0.0)
+        assert b.try_take(0.0)
+        assert not b.try_take(0.0)
+
+    def test_lazy_refill_arithmetic(self):
+        b = TokenBucket(rate=0.5, burst=2.0)
+        b.try_take(0.0), b.try_take(0.0)  # drain
+        # after 2 ticks: tokens = min(2, 0 + 2*0.5) = 1 -> one take only
+        assert b.try_take(2.0)
+        assert not b.try_take(2.0)
+        # after a long gap the bucket caps at burst, not rate*elapsed
+        b.try_take(1000.0)
+        assert b.tokens == pytest.approx(2.0 - 1.0)
+
+    def test_fractional_rate_epsilon(self):
+        # 1/3 per tick accumulates exactly one token every 3 ticks; the
+        # epsilon in try_take keeps 0.9999... from failing the >= cost test
+        b = TokenBucket(rate=1.0 / 3.0, burst=1.0)
+        assert b.try_take(0.0)
+        for t in (3.0, 6.0, 9.0):
+            assert b.try_take(t), f"refill at t={t} should cover cost 1"
+            assert not b.try_take(t)
+
+    def test_cost_above_burst_never_succeeds(self):
+        b = TokenBucket(rate=10.0, burst=2.0)
+        assert not b.try_take(100.0, cost=3.0)
+
+    def test_zero_rate_never_refills(self):
+        b = TokenBucket(rate=0.0, burst=1.0)
+        assert b.try_take(0.0)
+        assert not b.try_take(10_000.0)
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            TokenBucket(rate=-1.0, burst=1.0)
+        with pytest.raises(ValueError):
+            TokenBucket(rate=1.0, burst=0.0)
+
+
+# ---------------------------------------------------------------- shed order
+def _stats(**rows):
+    """rows: name=(rate, demand_bytes, arrival_seq)"""
+    return {
+        g: {"rate": r, "demand_bytes": d, "arrival_seq": float(s)}
+        for g, (r, d, s) in rows.items()
+    }
+
+
+class TestShedOrder:
+    def test_fair_sheds_fifo(self):
+        stats = _stats(b=(9.0, 9e9, 1), a=(0.0, 0.0, 0), c=(5.0, 1e6, 2))
+        for pol in (BasePolicy(), FairPolicy()):
+            assert pol.shed_order(["b", "a", "c"], stats) == ["a", "b", "c"]
+
+    def test_murs_sheds_highest_rate_first(self):
+        pol = MursPolicy(MursConfig())
+        stats = _stats(a=(1.0, 5e6, 0), b=(8.0, 1e6, 1), c=(3.0, 9e6, 2))
+        assert pol.shed_order(["a", "b", "c"], stats) == ["b", "c", "a"]
+
+    def test_murs_warm_ema_overrides_stat_rows(self):
+        pol = MursPolicy(MursConfig())
+        pol._group_rate = {"a": 9.0, "b": 1.0}
+        # the stats rows say b is hotter, but the policy's own EMA wins
+        stats = _stats(a=(0.0, 0.0, 0), b=(99.0, 0.0, 1))
+        assert pol.shed_order(["a", "b"], stats) == ["a", "b"]
+
+    def test_murs_cold_start_falls_back_to_demand(self):
+        pol = MursPolicy(MursConfig())
+        stats = _stats(a=(0.0, 1e6, 0), b=(0.0, 8e6, 1), c=(0.0, 4e6, 2))
+        assert pol.shed_order(["a", "b", "c"], stats) == ["b", "c", "a"]
+
+    def test_priority_sheds_lowest_weight_first(self):
+        pol = PriorityPolicy(PriorityConfig(weights={"gold": 4.0, "low": 0.5}))
+        stats = _stats(gold=(9.0, 9e9, 0), free=(0.0, 0.0, 1),
+                       low=(0.0, 0.0, 2))
+        # low (0.5) < free (default 1.0) < gold (4.0); rate is ignored
+        assert pol.shed_order(["gold", "free", "low"], stats) == [
+            "low", "free", "gold",
+        ]
+
+    def test_priority_ties_break_fifo(self):
+        pol = PriorityPolicy()
+        stats = _stats(y=(0.0, 0.0, 1), x=(0.0, 0.0, 0))
+        assert pol.shed_order(["y", "x"], stats) == ["x", "y"]
+
+
+# ------------------------------------------------------------------- traffic
+TENANTS = (
+    TenantProfile("interactive", weight=3.0, prompt_tokens=(2, 6),
+                  output_tokens=(2, 8)),
+    TenantProfile("batch", weight=1.0, prompt_tokens=(8, 16),
+                  output_tokens=(16, 32)),
+)
+
+
+def _sig(trace):
+    return [
+        (a.tick, a.request.request_id, tuple(a.request.prompt),
+         a.request.max_new_tokens)
+        for a in trace
+    ]
+
+
+class TestTraffic:
+    def test_same_seed_same_trace(self):
+        kw = dict(rate_per_tick=0.5, n_requests=200, seed=7)
+        assert _sig(poisson_trace(TENANTS, **kw)) == _sig(
+            poisson_trace(TENANTS, **kw)
+        )
+
+    def test_seed_changes_trace(self):
+        a = poisson_trace(TENANTS, rate_per_tick=0.5, n_requests=50, seed=1)
+        b = poisson_trace(TENANTS, rate_per_tick=0.5, n_requests=50, seed=2)
+        assert _sig(a) != _sig(b)
+
+    def test_traces_are_sorted_and_sized(self):
+        for trace in (
+            poisson_trace(TENANTS, rate_per_tick=1.0, n_requests=300, seed=3),
+            diurnal_trace(TENANTS, base_rate_per_tick=1.0, n_requests=300,
+                          seed=3),
+            bursty_trace(TENANTS, rate_per_tick=1.0, n_requests=300, seed=3),
+        ):
+            assert len(trace) == 300
+            ticks = [a.tick for a in trace]
+            assert ticks == sorted(ticks)
+
+    def test_weights_shape_the_mix(self):
+        trace = poisson_trace(TENANTS, rate_per_tick=1.0, n_requests=400,
+                              seed=11)
+        n_interactive = sum(
+            1 for a in trace if a.request.tenant == "interactive"
+        )
+        assert n_interactive > 400 - n_interactive  # 3:1 weights
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            poisson_trace((), rate_per_tick=1.0, n_requests=1)
+        with pytest.raises(ValueError):
+            poisson_trace(TENANTS, rate_per_tick=0.0, n_requests=1)
+        with pytest.raises(ValueError):
+            diurnal_trace(TENANTS, base_rate_per_tick=1.0, n_requests=1,
+                          amplitude=1.5)
+        with pytest.raises(ValueError):
+            bursty_trace(TENANTS, rate_per_tick=1.0, n_requests=1,
+                         burst_factor=0.5)
+
+
+# -------------------------------------------------------------- serve report
+class TestServeReport:
+    def _report(self):
+        rep = ServeReport(policy="murs", submitted=3, ticks=10)
+        rep.outcomes = [
+            RequestOutcome("a", "T", COMPLETED, submit_tick=0, finish_tick=4,
+                           first_token_tick=1, tokens=4),
+            RequestOutcome("b", "T", COMPLETED, submit_tick=0, finish_tick=9,
+                           first_token_tick=6, tokens=4),
+            RequestOutcome("c", "U", SHED, submit_tick=2, finish_tick=2,
+                           reason="projected demand over threshold"),
+        ]
+        rep.refresh_summaries()
+        return rep
+
+    def test_percentile_nearest_rank(self):
+        assert percentile([], 0.5) is None
+        assert percentile([7.0], 0.99) == 7.0
+        vals = list(range(1, 101))
+        assert percentile(vals, 0.50) == 51  # nearest-rank on 0..99 index
+        assert percentile(vals, 0.99) == 99
+        assert percentile(vals, 1.0) == 100
+
+    def test_refresh_counts_and_latency(self):
+        rep = self._report()
+        assert (rep.completed, rep.shed, rep.failed) == (2, 1, 0)
+        assert rep.latency.count == 2 and rep.latency.mean == 6.5
+        assert rep.ttft.p50 in (1, 6)
+
+    def test_slo_scoring_gates_goodput(self):
+        rep = self._report()
+        rep.apply_slo({"T": SloSpec(ttft_ticks=2.0)})
+        assert rep.slo_good == 1  # only "a" met TTFT <= 2
+        assert rep.goodput == pytest.approx(1 / 10)
+        rep.apply_slo()  # no SLO: every completion is good
+        assert rep.slo_good == 2
+
+    def test_slo_skips_unmeasured_dimensions(self):
+        spec = SloSpec(ttft_ticks=1.0, latency_ticks=100.0)
+        row = RequestOutcome("x", "T", COMPLETED, submit_tick=0,
+                             finish_tick=50)  # no first_token_tick
+        assert spec.met(row)  # TTFT unmeasured -> skipped, latency ok
+        assert not spec.met(
+            RequestOutcome("y", "T", FAILED, finish_tick=1)
+        )
+
+    def test_json_round_trip(self):
+        rep = self._report()
+        rep.apply_slo({"T": SloSpec(latency_ticks=100.0)})
+        back = ServeReport.from_json(rep.to_json(include_outcomes=True))
+        assert back.json_str(include_outcomes=True) == rep.json_str(
+            include_outcomes=True
+        )
+        assert back.outcomes[2].reason == rep.outcomes[2].reason
+
+    def test_dict_shim_warns_once_per_access(self):
+        rep = self._report()
+        rep.extras = {"completed": 2, "ticks": 10}
+        with pytest.warns(DeprecationWarning, match="ServeReport"):
+            assert rep["completed"] == 2
+        with pytest.warns(DeprecationWarning):
+            assert rep.get("missing", 5) == 5
+        with pytest.warns(DeprecationWarning):
+            assert "ticks" in rep
+        with pytest.warns(DeprecationWarning):
+            assert set(rep.keys()) == {"completed", "ticks"}
+
+    def test_tenant_summary(self):
+        assert self._report().tenant_summary() == {
+            "T": {COMPLETED: 2},
+            "U": {SHED: 1},
+        }
+
+
+# ------------------------------------------------------------ conservation
+TERMINAL = {COMPLETED, FAILED, SHED, RATE_LIMITED, LOST, UNFINISHED}
+
+
+def _assert_conserved(report, n_submitted):
+    """Every submission -> exactly one terminal outcome row."""
+    assert report.submitted == n_submitted
+    assert len(report.outcomes) == n_submitted
+    ids = [o.request_id for o in report.outcomes]
+    assert len(set(ids)) == len(ids), "duplicate outcome rows"
+    by_outcome = {}
+    for o in report.outcomes:
+        assert o.outcome in TERMINAL, o.outcome
+        if o.outcome != COMPLETED:
+            assert o.reason, f"non-completion without a reason: {o}"
+        by_outcome[o.outcome] = by_outcome.get(o.outcome, 0) + 1
+    assert sum(by_outcome.values()) == n_submitted
+
+
+class TestConservation:
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        rate_x10=st.integers(min_value=1, max_value=30),
+        capacity=st.sampled_from([0.0, 400.0, 2_000.0, 1e9]),
+        bucket_rate_x10=st.sampled_from([None, 1, 5, 50]),
+        policy_name=st.sampled_from(["fair", "murs", "priority"]),
+    )
+    def test_every_submission_gets_one_outcome(
+        self, seed, rate_x10, capacity, bucket_rate_x10, policy_name
+    ):
+        policy = {
+            "fair": FairPolicy,
+            "murs": lambda: MursPolicy(MursConfig()),
+            "priority": PriorityPolicy,
+        }[policy_name]()
+        door = FrontDoor(
+            FakeServer(capacity_bytes=capacity),
+            FrontDoorConfig(
+                pressure_threshold=0.9,
+                default_bucket=(
+                    None if bucket_rate_x10 is None
+                    else (bucket_rate_x10 / 10.0, 2.0)
+                ),
+                policy=policy,
+            ),
+        )
+        trace = poisson_trace(
+            TENANTS, rate_per_tick=rate_x10 / 10.0, n_requests=60, seed=seed
+        )
+        report = drive(door, trace, max_ticks=5_000)
+        _assert_conserved(report, 60)
+
+    def test_unlimited_door_is_transparent(self):
+        door = FrontDoor(FakeServer())
+        trace = poisson_trace(TENANTS, rate_per_tick=0.5, n_requests=40,
+                              seed=5)
+        report = drive(door, trace, max_ticks=5_000)
+        _assert_conserved(report, 40)
+        assert report.completed == 40
+        assert report.shed == 0 and report.rate_limited == 0
+
+    def test_murs_door_sheds_hot_tenant_under_pressure(self):
+        """At a tight capacity the usage-rate order concentrates rejects
+        on the tenant growing the pool fastest (frequent AND heavy)
+        rather than spraying them FIFO."""
+        tenants = (
+            TenantProfile("light", weight=1.0, prompt_tokens=(2, 4),
+                          output_tokens=(2, 4)),
+            TenantProfile("heavy", weight=2.0, prompt_tokens=(8, 16),
+                          output_tokens=(24, 48)),
+        )
+        door = FrontDoor(
+            FakeServer(capacity_bytes=600.0, service_ticks=8, n_slots=1),
+            FrontDoorConfig(pressure_threshold=0.8,
+                            policy=MursPolicy(MursConfig())),
+        )
+        trace = poisson_trace(tenants, rate_per_tick=2.0, n_requests=120,
+                              seed=9)
+        report = drive(door, trace, max_ticks=5_000)
+        _assert_conserved(report, 120)
+        assert report.shed > 0
+        shed_by = report.extras["shed_by_tenant"]
+        assert shed_by.get("heavy", 0) > shed_by.get("light", 0)
+
+
+# ----------------------------------------------------------- server protocol
+class TestServerProtocol:
+    def test_fake_and_door_conform(self):
+        fake = FakeServer()
+        assert isinstance(fake, Server)
+        assert isinstance(FrontDoor(fake), Server)
+
+    def test_engine_and_cluster_conform(self, small_model):
+        cfg, params = small_model
+        eng = ServingEngine(cfg, params, EngineConfig(
+            n_slots=2, max_seq=64, hbm_capacity_bytes=1e9))
+        assert isinstance(eng, Server)
+        cl = ServingCluster(cfg, params, ClusterConfig(
+            engine=lambda: EngineConfig(
+                n_slots=2, max_seq=64, hbm_capacity_bytes=1e9),
+            n_replicas=2))
+        assert isinstance(cl, Server)
+
+
+# ------------------------------------------------- real-engine integration
+class TestEngineIntegration:
+    def test_frontdoor_over_real_engine_conserves(self, small_model):
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 96
+        eng = ServingEngine(cfg, params, EngineConfig(
+            n_slots=2, max_seq=64, hbm_capacity_bytes=cap,
+            policy=MursPolicy(MursConfig.for_serving(period=1.0))))
+        door = FrontDoor(eng, FrontDoorConfig(pressure_threshold=0.9))
+        trace = poisson_trace(TENANTS, rate_per_tick=0.8, n_requests=30,
+                              seed=13)
+        report = drive(door, trace, max_ticks=400)
+        _assert_conserved(report, 30)
+        assert report.completed > 0
+        assert report.goodput > 0.0
+
+    def test_fast_and_legacy_bookkeeping_agree(self, small_model):
+        cfg, params = small_model
+        cap = kv_bytes_per_token(cfg) * 80
+
+        def run(legacy):
+            eng = ServingEngine(cfg, params, EngineConfig(
+                n_slots=2, max_seq=64, hbm_capacity_bytes=cap,
+                policy=MursPolicy(MursConfig.for_serving(period=1.0)),
+                legacy_bookkeeping=legacy))
+            for i in range(3):
+                eng.submit(Request(f"A{i}", "A", list(range(10, 18)), 40))
+            for i in range(4):
+                eng.submit(Request(f"B{i}", "B", list(range(30, 34)), 6))
+            rep = eng.run(max_ticks=200)
+            return rep.extras, eng.replica_stats()
+
+        legacy_extras, legacy_stats = run(True)
+        fast_extras, fast_stats = run(False)
+        assert fast_extras == legacy_extras
+        assert fast_stats == legacy_stats

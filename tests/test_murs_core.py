@@ -8,7 +8,8 @@ from hypothesis import strategies as st
 
 from repro.core.memory_manager import MemoryPool
 from repro.core.sampler import Sampler, TaskStats
-from repro.core.scheduler import MursConfig, MursScheduler
+from repro.sched import MursConfig
+from repro.sched.murs import MursPolicy as MursScheduler
 from repro.core.usage_models import (
     MODEL_EXPONENT,
     RateEstimator,

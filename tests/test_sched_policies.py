@@ -263,16 +263,19 @@ class TestPriorityPolicy:
 
 
 class TestShimCompatibility:
-    def test_core_scheduler_reexports(self):
-        from repro.core.scheduler import (
-            MursConfig as MC,
-            MursScheduler,
-            SchedulingDecision,
-        )
-        from repro.sched.murs import MursPolicy as MP
+    def test_core_scheduler_reexports_with_deprecation(self):
+        import importlib
+        import sys
 
-        assert MursScheduler is MP
-        assert MC is MursConfig
+        sys.modules.pop("repro.core.scheduler", None)
+        with pytest.warns(DeprecationWarning, match="repro.sched"):
+            shim = importlib.import_module("repro.core.scheduler")
+        from repro.sched.murs import MursPolicy as MP
+        from repro.sched.protocol import SchedulingDecision
+
+        assert shim.MursScheduler is MP
+        assert shim.MursConfig is MursConfig
+        assert shim.SchedulingDecision is SchedulingDecision
         assert SchedulingDecision().is_noop
 
     def test_serving_config_preset(self):

@@ -2,7 +2,7 @@
 
 import pytest
 
-from repro.core.scheduler import MursConfig
+from repro.sched import MursConfig
 from repro.core.spark_sim import (
     make_grep,
     make_pr,
@@ -115,7 +115,7 @@ class TestExecutorFuzzLiveness:
     )
     @settings(max_examples=10, deadline=None)
     def test_all_jobs_finish_or_oom(self, n_jobs, heap_gb, rate, agg):
-        from repro.core.scheduler import MursConfig
+        from repro.sched import MursConfig
         from repro.core.service import JobSpec, ServiceExecutor
         from repro.core.tasks import ApiProfile, Phase, make_stage_tasks
         from repro.core.usage_models import UsageModel

@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.configs import ARCHS
-from repro.core.scheduler import MursConfig
+from repro.sched import MursConfig
 from repro.models import init_model
 from repro.serve import EngineConfig, Request, ServingEngine
 from repro.serve.kv_cache import (

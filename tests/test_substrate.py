@@ -284,7 +284,7 @@ class TestElasticReshard:
 # --------------------------------------------- pressure-adaptive microbatch
 class TestPressureAdaptiveAccumulator:
     def _make(self, readings):
-        from repro.core.scheduler import MursConfig
+        from repro.sched import MursConfig
         from repro.train.pressure import PressureAdaptiveAccumulator
 
         it = iter(readings)

@@ -425,7 +425,7 @@ class TestOvercommitResolutionRegression:
         for rid in ("a", "b"):
             req = eng.requests[rid]
             assert req.state in ("prefill", "decoding")
-            req.state = "suspended"
+            eng._set_state(req, "suspended")  # keeps the state index true
             eng._release_slot(req)
         # c suddenly needs 7 pages: deficit 3 > either victim's 2 pages
         eng.kv.grow_to("c", 16 * 7)
