@@ -243,6 +243,40 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
             )
             if not ok:
                 failures.append(f"tiering.{bit} is False")
+    # kernel-cost bit: overload and cluster legs must report tick costs
+    # DERIVED from the roofline model (non-constant, in seconds) — a
+    # present leg with a missing or constant tick_cost section means the
+    # serving loop silently fell back to hand-set cost constants, a hard
+    # FAIL.  Absent legs are skipped, same as the other hard bits.
+    checked = [
+        (f"overload.{mode}", ov_c.get(mode))
+        for mode in ("fair", "murs")
+    ] + [
+        (f"cluster.{mode}", cl_c.get(mode))
+        for mode in ("round_robin", "murs")
+    ]
+    checked = [(label, row) for label, row in checked
+               if isinstance(row, dict)]
+    derived, why = True, []
+    for label, row in checked:
+        tc = row.get("tick_cost")
+        if not isinstance(tc, dict):
+            derived, why = False, why + [f"{label}: no tick_cost"]
+        elif tc.get("source") != "roofline":
+            derived = False
+            why = why + [f"{label}: source={tc.get('source')!r}"]
+        elif tc.get("distinct", 0) <= 1:
+            derived = False
+            why = why + [f"{label}: constant ({tc.get('distinct')})"]
+    if checked:
+        rows.append(
+            ("kernels", "kernel_costs_derived", True, derived, None,
+             "ok" if derived else "FAIL")
+        )
+        if not derived:
+            failures.append(
+                "kernels.kernel_costs_derived is False: " + "; ".join(why)
+            )
     return rows, failures
 
 

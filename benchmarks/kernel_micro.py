@@ -26,7 +26,67 @@ def _time(fn, *args, reps=3, **kw):
     return out, (time.perf_counter() - t0) / reps * 1e6  # µs
 
 
-def main() -> None:
+def _paged_decode_leg(key) -> dict:
+    """Paged-decode sweep over (active batch × pages): the serving hot
+    path's kernel at the shapes the engine actually batches.  Returns the
+    rows recorded under BENCH_serve.json's ``kernels.paged_decode`` key."""
+    rows = {}
+    page, hd = 16, 64
+    for bh, n_pages in ((1, 2), (4, 4), (8, 8), (16, 16)):
+        ks = jax.random.split(key, 5)
+        pool_pages = n_pages * 2  # pool larger than any one table
+        k_pool = jax.random.normal(ks[0], (pool_pages, page, hd), jnp.bfloat16)
+        v_pool = jax.random.normal(ks[1], (pool_pages, page, hd), jnp.bfloat16)
+        q = jax.random.normal(ks[2], (bh, hd), jnp.bfloat16)
+        table = jax.random.randint(ks[3], (bh, n_pages), 0, pool_pages)
+        lens = jax.random.randint(ks[4], (bh,), 1, n_pages * page + 1)
+        out, us = _time(
+            ops.paged_decode_attention, q, k_pool, v_pool, table, lens,
+            reps=1,
+        )
+        gold = ref.paged_decode_attention_ref(q, k_pool, v_pool, table, lens)
+        err = float(
+            jnp.abs(out.astype(jnp.float32) - gold.astype(jnp.float32)).max()
+        )
+        label = f"b{bh}_p{n_pages}"
+        emit(f"kernel.paged_decode.{label}.us_per_call", round(us, 1),
+             f"interpret-mode; max_err={err:.4f}")
+        rows[label] = {"us_per_call": round(us, 1), "max_err": err}
+    return rows
+
+
+def _paged_decode_int8_leg(key) -> dict:
+    """int8-KV variant: per-page ``dist/compression`` codes dequantized
+    inside the page sweep (the compressed host tier's promotion-free
+    read path)."""
+    from repro.dist.compression import quantize
+
+    page, hd, bh, n_pages = 16, 64, 8, 8
+    ks = jax.random.split(key, 5)
+    pool_pages = n_pages * 2
+    kf = jax.random.normal(ks[0], (pool_pages, page, hd), jnp.float32)
+    vf = jax.random.normal(ks[1], (pool_pages, page, hd), jnp.float32)
+    kq, ksc = jax.vmap(quantize)(kf)
+    vq, vsc = jax.vmap(quantize)(vf)
+    q = jax.random.normal(ks[2], (bh, hd), jnp.float32)
+    table = jax.random.randint(ks[3], (bh, n_pages), 0, pool_pages)
+    lens = jax.random.randint(ks[4], (bh,), 1, n_pages * page + 1)
+    out, us = _time(
+        ops.paged_decode_attention_int8, q, kq, vq, ksc, vsc, table, lens,
+        reps=1,
+    )
+    gold = ref.paged_decode_attention_int8_ref(
+        q, kq, vq, ksc, vsc, table, lens
+    )
+    err = float(jnp.abs(out - gold).max())
+    emit("kernel.paged_decode_int8.us_per_call", round(us, 1),
+         f"interpret-mode; max_err={err:.5f} (vs dequantized oracle)")
+    return {
+        f"b{bh}_p{n_pages}": {"us_per_call": round(us, 1), "max_err": err}
+    }
+
+
+def main() -> dict:
     key = jax.random.PRNGKey(0)
     k1, k2, k3 = jax.random.split(key, 3)
 
@@ -76,6 +136,13 @@ def main() -> None:
     err = float(jnp.abs(out - gold).max())
     emit("kernel.ssd_scan.us_per_call", round(us, 1),
          f"interpret-mode; max_err={err:.5f}")
+
+    # paged decode (the serving hot path) + its int8-KV variant: these
+    # rows land in BENCH_serve.json under the "kernels" key
+    return {
+        "paged_decode": _paged_decode_leg(k2),
+        "paged_decode_int8": _paged_decode_int8_leg(k3),
+    }
 
 
 if __name__ == "__main__":

@@ -5,9 +5,12 @@ returns a machine-readable record that is written to ``BENCH_serve.json``
 (throughput, p50/p99 ticks-to-finish, offload count, GC time) so the
 bench trajectory is tracked as an artifact, not just console text.
 
-``--only SUBSTR`` runs the subset of modules whose name contains SUBSTR
-(the CI benchmark-smoke job uses ``--only serve_pressure``); ``--json
-PATH`` overrides the JSON output path.  If ANY selected benchmark raises,
+``--only SUBSTR[,SUBSTR...]`` runs the subset of modules whose name
+contains any of the comma-separated substrings (the CI benchmark-smoke
+job uses ``--only serve_pressure,kernel_micro``); ``--json PATH``
+overrides the JSON output path.  When both serve_pressure and
+kernel_micro run, the kernel microbench rows are merged into the JSON
+record under the ``kernels`` key.  If ANY selected benchmark raises,
 the run exits non-zero and the JSON artifact is NOT written — a partial
 record would silently poison the benchmark trajectory and the CI
 regression gate that consumes it.  The roofline table (§Roofline) is
@@ -46,30 +49,37 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument(
         "--only", default="",
-        help="run only modules whose name contains this substring",
+        help="run only modules whose name contains one of these "
+        "comma-separated substrings",
     )
     ap.add_argument(
         "--json", default="BENCH_serve.json",
         help="path for the machine-readable serving record",
     )
     args = ap.parse_args(argv)
-    modules = [m for m in MODULES if args.only in m]
+    wanted = [s for s in args.only.split(",") if s]
+    modules = [m for m in MODULES if not wanted or any(s in m for s in wanted)]
     if not modules:
         raise SystemExit(f"--only {args.only!r} matches no benchmark module")
 
     print("name,value,derived")
     failures = 0
     bench_record = None
+    kernel_record = None
     for name in modules:
         try:
             mod = importlib.import_module(name)
             result = mod.main()
             if name.endswith("serve_pressure") and isinstance(result, dict):
                 bench_record = result
+            if name.endswith("kernel_micro") and isinstance(result, dict):
+                kernel_record = result
         except Exception:
             failures += 1
             print(f"{name},ERROR,", file=sys.stdout)
             traceback.print_exc()
+    if bench_record is not None and kernel_record is not None:
+        bench_record["kernels"] = kernel_record
     if failures:
         # a partial artifact would poison the benchmark trajectory (and the
         # CI regression gate): write NOTHING and exit non-zero below

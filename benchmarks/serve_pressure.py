@@ -334,6 +334,10 @@ def _collect_cluster(cfg, params, debug: bool = False) -> dict:
             ),
             "p50_ticks_to_finish": _percentile(lat, 0.50),
             "p99_ticks_to_finish": _percentile(lat, 0.99),
+            # roofline-derived per-tick service time (seconds), merged
+            # across replicas — the units straggler detection and
+            # placement scoring now run in
+            "tick_cost": out["tick_cost"],
         }
 
     murs_router = lambda: MursPolicy(MursConfig.for_serving(period=1.0))
@@ -460,6 +464,9 @@ def _collect_overload(cfg, params, debug: bool = False) -> dict:
             "ttft_p95_ticks": ttft.p95,
             "tpot_p50_ticks": tpot.p50,
             "shed_by_tenant": rep.extras["shed_by_tenant"],
+            # roofline-derived per-tick cost stats (seconds): the gate's
+            # kernel_costs_derived bit asserts these are non-constant
+            "tick_cost": rep.extras["tick_cost"],
         }
 
     out = {

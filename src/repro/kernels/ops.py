@@ -74,6 +74,9 @@ __all__ = [
 
 
 from .paged_decode import paged_decode_attention as _paged_decode_attention
+from .paged_decode import (
+    paged_decode_attention_int8 as _paged_decode_attention_int8,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -85,4 +88,15 @@ def paged_decode_attention(q, k_pool, v_pool, page_table, seq_lens, *,
     )
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_int8(q, k_pool, v_pool, k_scales, v_scales,
+                                page_table, seq_lens, *, interpret=None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _paged_decode_attention_int8(
+        q, k_pool, v_pool, k_scales, v_scales, page_table, seq_lens,
+        interpret=interpret,
+    )
+
+
 __all__.append("paged_decode_attention")
+__all__.append("paged_decode_attention_int8")

@@ -78,6 +78,112 @@ def _paged_kernel(
         o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
 
 
+def _paged_kernel_int8(
+    table_ref,  # scalar-prefetch: [BH, max_pages] int32
+    lens_ref,  # scalar-prefetch: [BH] int32
+    k_scale_ref,  # scalar-prefetch: [n_pool_pages] f32 per-page K scale
+    v_scale_ref,  # scalar-prefetch: [n_pool_pages] f32 per-page V scale
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, page: int, n_pages: int,
+):
+    """int8-KV page sweep: pool pages are ``dist/compression.py`` codes
+    (symmetric int8, amax/127 scale) and the dequant happens HERE, between
+    the DMA and the dot — a page promoted from the compressed host tier
+    never needs the separate dequantize/write-back pass ``tick_tiers``
+    otherwise runs."""
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    seq_len = lens_ref[b]
+    pid = table_ref[b, pi]
+    q = q_ref[0].astype(jnp.float32)  # [1, hd]
+    k = k_ref[0].astype(jnp.float32) * k_scale_ref[pid]  # [page, hd]
+    v = v_ref[0].astype(jnp.float32) * v_scale_ref[pid]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [1, page]
+    tok = pi * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    s = jnp.where(tok < seq_len, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def paged_decode_attention_int8(
+    q: jax.Array,  # [BH, hd]
+    k_pool: jax.Array,  # [n_pool_pages, page, hd] int8 codes
+    v_pool: jax.Array,  # [n_pool_pages, page, hd] int8 codes
+    k_scales: jax.Array,  # [n_pool_pages] f32 per-page scale
+    v_scales: jax.Array,  # [n_pool_pages] f32 per-page scale
+    page_table: jax.Array,  # [BH, max_pages] int32
+    seq_lens: jax.Array,  # [BH] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    bh, hd = q.shape
+    _, page, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(
+        _paged_kernel_int8, scale=scale, page=page, n_pages=max_pages
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(bh, max_pages),
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, hd), lambda b, pi, table, lens, ks, vs: (b, 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, page, hd),
+                lambda b, pi, table, lens, ks, vs: (table[b, pi], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, page, hd),
+                lambda b, pi, table, lens, ks, vs: (table[b, pi], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, hd), lambda b, pi, table, lens, ks, vs: (b, 0, 0)
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((1, hd), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bh, 1, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), seq_lens.astype(jnp.int32),
+      k_scales.astype(jnp.float32), v_scales.astype(jnp.float32),
+      q[:, None, :], k_pool, v_pool)
+    return out[:, 0, :]
+
+
 def paged_decode_attention(
     q: jax.Array,  # [BH, hd]
     k_pool: jax.Array,  # [n_pool_pages, page, hd]

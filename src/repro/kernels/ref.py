@@ -126,3 +126,19 @@ def paged_decode_attention_ref(
     s = jnp.where(tok < seq_lens[:, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bk,bkd->bd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def paged_decode_attention_int8_ref(
+    q: jax.Array,  # [BH, hd]
+    k_pool: jax.Array,  # [n_pages, page, hd] int8 codes
+    v_pool: jax.Array,
+    k_scales: jax.Array,  # [n_pages] f32
+    v_scales: jax.Array,
+    page_table: jax.Array,  # [BH, max_pages]
+    seq_lens: jax.Array,  # [BH]
+) -> jax.Array:
+    """Dequantize the whole pool up front, then run the f32 oracle — the
+    exact two-pass flow the in-kernel dequant is meant to eliminate."""
+    k = k_pool.astype(jnp.float32) * k_scales[:, None, None]
+    v = v_pool.astype(jnp.float32) * v_scales[:, None, None]
+    return paged_decode_attention_ref(q, k, v, page_table, seq_lens)

@@ -3,17 +3,21 @@
 from .transformer import (
     backbone_forward,
     decode_step,
+    decode_step_paged,
     forward,
     init_cache,
     init_model,
+    paged_decode_supported,
     prefill,
 )
 
 __all__ = [
     "backbone_forward",
     "decode_step",
+    "decode_step_paged",
     "forward",
     "init_cache",
     "init_model",
+    "paged_decode_supported",
     "prefill",
 ]

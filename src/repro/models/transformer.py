@@ -22,6 +22,7 @@ from repro.dist.sharding import shard
 from . import blocks
 from .layers import (
     apply_mlp,
+    apply_rope,
     bf16_grad,
     dense_init,
     embed_init,
@@ -607,3 +608,124 @@ def decode_step(
     if cross_kv is not None:
         new_caches["cross_kv"] = cross_kv
     return logits, new_caches
+
+
+# ------------------------------------------------------- paged decode (pool)
+def paged_decode_supported(cfg: ArchConfig) -> bool:
+    """True when the whole stack is plain full attention — the layout the
+    paged-decode Pallas kernel serves.  MLA latents, Mamba states,
+    encoder-decoder cross-attention and sliding-window rings keep their
+    own cache shapes and stay on the dense vmapped path."""
+    stack = list(cfg.block_pattern) + list(cfg.suffix_blocks)
+    return (
+        cfg.mla is None
+        and cfg.ssm is None
+        and not cfg.enc_layers
+        and cfg.frontend in (None, "none")
+        and bool(stack)
+        and all(bt == "attn" for bt in stack)
+    )
+
+
+def decode_step_paged(
+    cfg: ArchConfig,
+    params,
+    tokens: Array,  # [B, 1] — compacted active rows (B may be padded)
+    caches,  # the engine's per-slot dense caches (slot axis = n_slots)
+    poss: Array,  # [B] int32 per-row decode position
+    row_slot: Array,  # [B] int32 slot of each row; n_slots for pad rows
+    page_table: Array,  # [B, W] int32 pool page ids (width-trimmed)
+    seq_lens: Array,  # [B] int32 tokens to attend (pos+1; 0 for pad rows)
+    page_src_slot: Array,  # [n_pool] int32 owning slot of each pool page
+    page_src_idx: Array,  # [n_pool] int32 logical page index in that slot
+    *,
+    page_tokens: int,
+    n_pool: int,
+    interpret: bool,
+):
+    """One decode step through :func:`kernels.ops.paged_decode_attention`.
+
+    The per-slot dense caches remain the storage of truth (COW, tier
+    promotion and migration all operate on them); this step materializes
+    the *pool view* the kernel wants by gathering each live pool page from
+    its owning slot via the provenance arrays, then runs ONE kernel call
+    per layer with the kv-head axis folded into the page axis:
+
+        pool row of (kv head g, page pid) = g · n_pool + pid
+        table row of (request b, q head h) = table[b] + (h // G) · n_pool
+
+    so a [B, W] block table becomes [B·H, W] and the whole active batch is
+    a single (B·H, W) grid.  Rows are expected sorted by length
+    (descending) and W trimmed to the longest resident request — short
+    decodes then never pay DMAs for the long tail.  New-token K/V are
+    scatter-written into the slot caches *before* the gather (matching the
+    dense path, which attends positions ``<= pos`` inclusive); pad rows
+    carry ``row_slot == n_slots`` so their writes drop out-of-bounds.
+    Returns (logits [B, 1, V], updated caches).
+    """
+    from repro.kernels import ops as kernel_ops
+
+    x = _embed(cfg, params, tokens)
+    B = tokens.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    P = page_tokens
+
+    # per-q-head rows of the folded table: identical for every layer
+    hoff = (jnp.arange(H, dtype=jnp.int32) // G) * n_pool
+    table_flat = (
+        jnp.repeat(page_table.astype(jnp.int32), H, axis=0)
+        + jnp.tile(hoff, B)[:, None]
+    )
+    lens_flat = jnp.repeat(seq_lens.astype(jnp.int32), H)
+    positions = poss[:, None, None]  # [..., s] with s == 1
+
+    def attn_block(p, x_in, cache):
+        h = rms_norm(x_in, p["ln1"], cfg.norm_eps)
+        ap = p["attn"]
+        q, k_new, v_new = blocks._qkv(ap, cfg, h)  # [B, {H,KV}, 1, hd]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k_new = apply_rope(k_new, positions, cfg.rope_theta)
+        kc, vc = cache  # [n_slots, KV, max_seq, hd]
+        kc = kc.at[row_slot, :, poss].set(k_new[:, :, 0, :], mode="drop")
+        vc = vc.at[row_slot, :, poss].set(v_new[:, :, 0, :], mode="drop")
+        # pool view: pad seq to whole pages, gather page provenance
+        n_slots, _, max_seq, _ = kc.shape
+        lp = -(-max_seq // P)
+        pad = lp * P - max_seq
+        kcp = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else kc
+        vcp = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0))) if pad else vc
+        kcr = kcp.reshape(n_slots, KV, lp, P, hd)
+        vcr = vcp.reshape(n_slots, KV, lp, P, hd)
+        k_pool = kcr[page_src_slot, :, page_src_idx]  # [n_pool, KV, P, hd]
+        v_pool = vcr[page_src_slot, :, page_src_idx]
+        k_pool = k_pool.transpose(1, 0, 2, 3).reshape(KV * n_pool, P, hd)
+        v_pool = v_pool.transpose(1, 0, 2, 3).reshape(KV * n_pool, P, hd)
+        qf = q[:, :, 0, :].reshape(B * H, hd)
+        out = kernel_ops.paged_decode_attention(
+            qf, k_pool, v_pool, table_flat, lens_flat, interpret=interpret
+        )
+        out = out.reshape(B, 1, H * hd)
+        y = jnp.einsum("bsh,hd->bsd", out, ap["wo"])
+        x_out = x_in + y
+        x_out = x_out + _ffn(p, cfg, x_out)
+        return x_out, (kc, vc)
+
+    def unit_fn(h, inputs):
+        unit_p, unit_c = inputs["p"], inputs["c"]
+        new_c = {}
+        for i in range(len(cfg.block_pattern)):
+            h, c = attn_block(unit_p[f"b{i}"], h, unit_c[f"b{i}"])
+            new_c[f"b{i}"] = c
+        return h, new_c
+
+    x, new_unit = jax.lax.scan(
+        unit_fn, x, {"p": params["layers"], "c": caches["unit"]}
+    )
+    new_suffix = []
+    for p_blk, c_blk in zip(params["suffix"], caches["suffix"]):
+        x, c = attn_block(p_blk, x, c_blk)
+        new_suffix.append(c)
+
+    logits = _unembed(cfg, params, x)
+    return logits, {"unit": new_unit, "suffix": new_suffix}

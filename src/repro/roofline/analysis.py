@@ -30,6 +30,7 @@ from repro.configs import ARCHS, SHAPES
 PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
 HBM_BW = 819e9  # bytes/s per chip
 ICI_BW = 50e9  # bytes/s per link
+PCIE_BW = 32e9  # bytes/s host link (Gen4 ×16 class) — KV offload/promote path
 
 CHIPS = {"16x16": 256, "2x16x16": 512}
 
@@ -117,6 +118,84 @@ def memory_traffic_bytes(arch: str, shape_name: str) -> float:
     opt_traffic = 20.0 * n_total
     acts = tokens * L * d * 24.0
     return opt_traffic + acts
+
+
+@dataclass(frozen=True)
+class ServingTickCost:
+    """Roofline-derived cost (seconds) of one :class:`ServingEngine` tick.
+
+    Built once per engine from its ``ArchConfig`` via :func:`tick_cost_model`;
+    the engine feeds it per-tick work counters and gets back the same
+    three-term roofline the dry-run analysis applies to offline shapes:
+
+        memory_s  = (weight stream + KV pages touched + activations) / HBM_BW
+        compute_s = 2·N_active·tokens / PEAK_FLOPS
+        stall_s   = stalled page traffic / PCIE_BW   (serial: DMA blocks decode)
+
+        tick_seconds = max(memory_s, compute_s) + stall_s
+
+    Decode is HBM-bound at serving batch sizes (the *Managed Big Data
+    Analytics Frameworks* throughput analysis in PAPERS.md is the same
+    argument at the framework level), so memory_s dominates in practice;
+    the max() keeps the model honest if a config ever flips compute-bound.
+    A tick that ran no forward pass (admission/bookkeeping only) costs one
+    ``idle_s`` — small but nonzero so cluster straggler statistics, which
+    multiply observed tick cost by host slowdown, keep a live signal.
+    """
+
+    weight_bytes: float  # bf16 weight stream, read once per forward tick
+    active_params: float  # FLOP term: 2·active_params per token
+    kv_write_bytes_per_token: float  # KV appended per prefilled token
+    act_bytes_per_token: float  # activation traffic envelope per token
+    page_bytes: float  # one KV page (the stall DMA unit)
+    idle_s: float = 1e-6
+    hbm_bw: float = HBM_BW
+    peak_flops: float = PEAK_FLOPS
+    pcie_bw: float = PCIE_BW
+
+    def tick_seconds(
+        self,
+        *,
+        decode_tokens: int = 0,
+        prefill_tokens: int = 0,
+        kv_bytes_read: float = 0.0,
+        stall_events: int = 0,
+    ) -> float:
+        """Seconds for one tick that decoded ``decode_tokens`` requests
+        (reading ``kv_bytes_read`` of resident KV), consumed
+        ``prefill_tokens`` of prompt, and hit ``stall_events`` page-pool
+        stalls (each charged one page DMA over the host link)."""
+        tokens = decode_tokens + prefill_tokens
+        stall_s = stall_events * (self.page_bytes / self.pcie_bw)
+        if tokens <= 0:
+            return self.idle_s + stall_s
+        mem = (
+            self.weight_bytes
+            + kv_bytes_read
+            + prefill_tokens * self.kv_write_bytes_per_token
+            + tokens * self.act_bytes_per_token
+        ) / self.hbm_bw
+        comp = 2.0 * self.active_params * tokens / self.peak_flops
+        return max(mem, comp) + stall_s
+
+
+def tick_cost_model(cfg, page_tokens: int = 16) -> ServingTickCost:
+    """Build a :class:`ServingTickCost` from an ``ArchConfig`` instance.
+
+    Mirrors the decode branch of :func:`memory_traffic_bytes` but takes the
+    config object directly (the serving engine holds a cfg, not an ARCHS
+    key) and splits the per-step envelope into per-token coefficients the
+    engine can scale by its actual per-tick batch."""
+    from repro.serve.kv_cache import kv_bytes_per_token
+
+    kv_tok = kv_bytes_per_token(cfg)
+    return ServingTickCost(
+        weight_bytes=2.0 * cfg.param_count(),
+        active_params=float(cfg.active_param_count()),
+        kv_write_bytes_per_token=float(kv_tok),
+        act_bytes_per_token=cfg.n_layers * cfg.d_model * 24.0,
+        page_bytes=float(kv_tok * page_tokens),
+    )
 
 
 @dataclass

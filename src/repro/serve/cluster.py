@@ -68,6 +68,27 @@ class ReplicaCrash(RuntimeError):
     """The failure a crashed replica's requests are retried against."""
 
 
+def _merge_tick_costs(stats: List[dict]) -> dict:
+    """Cluster view of the replicas' roofline tick-cost distributions
+    (same shape as ``ServingEngine.tick_cost_stats``: modeled seconds,
+    tick-weighted mean, min/max envelope, distinct-value count)."""
+    ticks = sum(s["ticks"] for s in stats)
+    return {
+        "source": "roofline",
+        "ticks": ticks,
+        "mean_s": (
+            sum(s["mean_s"] * s["ticks"] for s in stats) / ticks
+            if ticks else 0.0
+        ),
+        "min_s": min(
+            (s["min_s"] for s in stats if s["ticks"]), default=0.0
+        ),
+        "max_s": max((s["max_s"] for s in stats), default=0.0),
+        "distinct": max((s["distinct"] for s in stats), default=0),
+        "paged_decode_ticks": sum(s["paged_decode_ticks"] for s in stats),
+    }
+
+
 @dataclass
 class ClusterConfig:
     """Replica count, routing policy, link model, and fault knobs."""
@@ -545,6 +566,9 @@ class ServingCluster:
             "latency_ticks": lat,
             "ticks": self.tick,
             "tokens_generated": tokens,
+            "tick_cost": _merge_tick_costs(
+                [eng.tick_cost_stats() for eng in self.replicas]
+            ),
             "replicas": [
                 {
                     "completed": len(eng.completed),

@@ -1297,6 +1297,50 @@ class PagedKVManager:
             return np.zeros((len(request_ids), max_pages or 1), np.int32)
         return self._alloc.table_array(request_ids, max_pages)
 
+    def gather_plan(
+        self, request_ids: Sequence[str], slots: Sequence[int]
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, int]:
+        """Export one decode batch for the paged kernel: width-trimmed
+        page tables plus pool-page PROVENANCE — which batch slot's dense
+        cache holds each referenced pool page, and at which logical page
+        index inside that slot.
+
+        ``request_ids`` and ``slots`` are parallel; callers sort rows by
+        sequence length (longest first) so the returned width trims the
+        kernel's page grid to the longest resident request.  Returns
+        ``(tables, src_slot, src_idx, n_pool)``:
+
+        * ``tables``  int32 ``[B, W]`` — W is the smallest power of two
+          covering the longest request's table (bounded compile cache);
+        * ``src_slot``/``src_idx`` int32 ``[n_pool]`` — provenance of
+          every referenced page id (unreferenced ids stay 0: the kernel
+          masks them via ``seq_lens``, so they are never read);
+        * ``n_pool`` — power-of-two exclusive bound on referenced ids.
+
+        A shared (prefix) page may be owned by several rows; any owner's
+        slot cache holds identical values for it, so last-writer-wins
+        provenance is safe.  Raises ``ValueError`` when a request holds
+        demoted pages — those tokens are not in HBM and the caller must
+        keep the request off the kernel path.
+        """
+        rows = [self.page_table(rid) for rid in request_ids]
+        if any(pid < 0 for row in rows for pid in row):
+            raise ValueError(
+                "gather_plan: request holds demoted (non-HBM) pages"
+            )
+        max_pages = max((len(row) for row in rows), default=0)
+        width = 1 << max(max_pages - 1, 0).bit_length()
+        tables = self.table_array(request_ids, max(width, 1))
+        bound = max((pid for row in rows for pid in row), default=0) + 1
+        n_pool = 1 << max(bound - 1, 0).bit_length()
+        src_slot = np.zeros(max(n_pool, 1), np.int32)
+        src_idx = np.zeros(max(n_pool, 1), np.int32)
+        for row, slot in zip(rows, slots):
+            for j, pid in enumerate(row):
+                src_slot[pid] = slot
+                src_idx[pid] = j
+        return tables, src_slot, src_idx, max(n_pool, 1)
+
     def request_pages(self, request_id: str) -> int:
         return self._alloc.pages_held(request_id) if self._alloc else 0
 

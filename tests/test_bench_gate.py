@@ -12,7 +12,13 @@ from benchmarks import run as bench_run
 from benchmarks.gate import compare, main as gate_main
 
 
-def _record(p50=10, p99=20, thr=1.5, wins=True, cl_p99=30, cl_wins=True):
+def _record(p50=10, p99=20, thr=1.5, wins=True, cl_p99=30, cl_wins=True,
+            tick_cost="roofline", distinct=8):
+    tc = (
+        {"tick_cost": {"source": tick_cost, "distinct": distinct,
+                       "ticks": 40, "mean_s": 2e-5}}
+        if tick_cost is not None else {}
+    )
     return {
         "engine": {
             "murs": {
@@ -31,6 +37,7 @@ def _record(p50=10, p99=20, thr=1.5, wins=True, cl_p99=30, cl_wins=True):
             "murs": {
                 "p99_ticks_to_finish": cl_p99,
                 "throughput_tokens_per_tick": 1.2,
+                **tc,
             },
             "cluster_wins": {
                 "migration_roundtrip": cl_wins,
@@ -77,6 +84,19 @@ class TestGateCompare:
         assert any("migration_roundtrip" in f for f in failures)
         assert any("crash_no_loss" in f for f in failures)
         assert any("p99_beats_round_robin" in f for f in failures)
+
+    def test_kernel_costs_derived_is_a_hard_gate(self):
+        """A serving leg that stops reporting roofline-derived tick
+        costs — missing section, wrong source, or a constant value —
+        means the loop fell back to hand-set constants: hard FAIL."""
+        _, failures = compare(_record(), _record(tick_cost=None), 15.0)
+        assert any("no tick_cost" in f for f in failures)
+        _, failures = compare(_record(), _record(tick_cost="handset"), 15.0)
+        assert any("source='handset'" in f for f in failures)
+        _, failures = compare(_record(), _record(distinct=1), 15.0)
+        assert any("constant" in f for f in failures)
+        _, ok = compare(_record(), _record(), 15.0)
+        assert not ok
 
     def test_missing_baseline_passes_with_notice(self, tmp_path, capsys):
         cur = tmp_path / "cur.json"
