@@ -35,8 +35,10 @@ least halves disk spill at equal load), the cluster bits (live
 migration round-trips with nothing lost, a replica crash loses no
 requests, usage-rate placement beats round-robin on p99), and the
 overload bits (usage-rate shedding beats FIFO shedding on goodput at
-equal open-loop load; the door sheds instead of collapsing) as hard
-pass/fail rows — those are correctness claims of the artifact, not
+equal open-loop load; the door sheds instead of collapsing), and the
+elastic bits (a delta cutover ships fewer bytes than a full copy, a
+checkpoint restore replays only the uncovered suffix, autoscaled
+goodput holds against the static fleet) as hard pass/fail rows — those are correctness claims of the artifact, not
 noisy timings, so they gate at any regression.
 
 A policy that completed nothing reports ``None`` percentiles; ``None``
@@ -100,6 +102,17 @@ OVERLOAD_GATED = [
 OVERLOAD_WIN_BITS = (
     "goodput_under_overload",
     "shed_not_collapse",
+)
+
+#: elastic-leg acceptance booleans (hard pass/fail, no threshold): a
+#: delta cutover ships strictly fewer bytes than the monolithic copy it
+#: replaced, a crash restore replays only the checkpoint-uncovered
+#: suffix, and autoscaling's fixed-horizon goodput does not fall below
+#: the static fleet's at equal peak HBM
+ELASTIC_WIN_BITS = (
+    "delta_migration_bytes_below_full_copy",
+    "checkpoint_restore_no_replay_from_zero",
+    "elastic_goodput_ge_static",
 )
 
 
@@ -221,6 +234,19 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
             )
             if not ok:
                 failures.append(f"cluster.{bit} is False")
+    # elastic acceptance bits: delta cutover below full copy, checkpoint
+    # restore beats replay-from-zero, elastic goodput holds — hard
+    # pass/fail
+    elastic_wins = current.get("elastic", {}).get("elastic_wins", {})
+    for bit in ELASTIC_WIN_BITS:
+        if bit in elastic_wins:
+            ok = bool(elastic_wins[bit])
+            rows.append(
+                ("elastic", bit, True, elastic_wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"elastic.{bit} is False")
     # prefix-cache acceptance bits: hard booleans, no threshold
     wins = current.get("prefix_cache", {}).get("sharing_wins", {})
     for bit in ("hit_rate_positive", "peak_pool_lower"):

@@ -24,6 +24,12 @@ ways, round-robin vs usage-rate-aware placement — with live KV
 migration off the throttled replica and a crash-requeue run (the
 ``cluster`` record and its ``cluster_wins`` acceptance bits).
 
+An ELASTIC leg runs the diurnal trace against an autoscaled cluster
+(scale-out on sustained pressure, drain via incremental pre-copy +
+delta cutover on slack, periodic compressed KV checkpoints with a
+mid-stream crash restore) vs a static fleet at equal peak HBM — the
+``elastic`` record and its ``elastic_wins`` acceptance bits.
+
 A fifth leg is OPEN-LOOP OVERLOAD: ≥1000 seeded Poisson arrivals pushed
 through the admission :class:`FrontDoor` at a rate the engine cannot
 absorb, fair vs MURS shedding at equal load.  The record's headline is
@@ -38,6 +44,7 @@ prefix-cache trajectory, and the paired simulator GC time per policy.
 """
 
 import os
+import tempfile
 import time
 
 import jax
@@ -61,6 +68,7 @@ from repro.serve import (
     ServingEngine,
     SloSpec,
     TenantProfile,
+    diurnal_trace,
     drive,
     poisson_trace,
 )
@@ -380,6 +388,149 @@ def _collect_cluster(cfg, params, debug: bool = False) -> dict:
     return legs
 
 
+def _collect_elastic(cfg, params, debug: bool = False) -> dict:
+    """The ELASTIC leg: autoscaling + delta migration + checkpointing
+    against the diurnal trace, vs a static fleet at equal peak HBM.
+
+    The elastic cluster starts at ONE replica with autoscaling on
+    (``scale_pressure`` over ``replica_stats``, hysteresis + cooldown):
+    the diurnal day spawns replicas up to the static fleet's size, the
+    night drains them back via incremental pre-copy + delta cutover.
+    Periodic compressed KV checkpoints run throughout, and a mid-stream
+    replica crash restores from the latest checkpoint — replaying only
+    the uncovered suffix, counted against the from-zero counterfactual.
+    A planned maintenance drain (``drain_replica``) is issued at a busy
+    tick so the delta path moves LIVE work: the pre-copy ships warm
+    pages in the background and the cutover ships only pages dirtied
+    since, recorded against the monolithic-copy counterfactual.
+
+    The static fleet runs the SAME trace on ``max_replicas`` engines
+    with identical per-replica HBM — equal peak capacity — so the
+    goodput comparison isolates what elasticity costs (spin-up lag,
+    migration traffic) against what it saves (``replica_ticks``, the
+    replica-occupancy integral).  Goodput is scored over a FIXED horizon
+    so a slower elastic makespan cannot inflate its own denominator."""
+    del debug  # sized for signal, small enough for the CI smoke job
+    cap = kv_bytes_per_token(cfg) * 80
+    horizon = 400.0
+
+    def engine_factory():
+        return EngineConfig(
+            n_slots=4, max_seq=64, hbm_capacity_bytes=cap,
+            policy=MursPolicy(MursConfig.for_serving(period=1.0)),
+        )
+
+    tenants = [
+        TenantProfile("interactive", weight=2.0, prompt_tokens=(2, 6),
+                      output_tokens=(4, 8)),
+        TenantProfile("batch", weight=1.0, prompt_tokens=(8, 14),
+                      output_tokens=(24, 40)),
+    ]
+    evs = diurnal_trace(
+        tenants, base_rate_per_tick=0.25, n_requests=60,
+        period_ticks=100.0, amplitude=0.9, seed=42,
+    )
+    murs_router = lambda: MursPolicy(MursConfig.for_serving(period=1.0))
+
+    def _run(elastic, drain_at=None, crash_at=None):
+        ckpt_dir = tempfile.mkdtemp(prefix="bench_elastic_ckpt_")
+        if elastic:
+            cc = ClusterConfig(
+                engine=engine_factory, router=murs_router(),
+                net_bytes_per_tick=kv_bytes_per_token(cfg) * 16,
+                n_replicas=1, autoscale=True,
+                min_replicas=1, max_replicas=3,
+                scale_up_pressure=0.6, scale_down_pressure=0.35,
+                scale_sustain_ticks=5, scale_cooldown_ticks=10,
+                checkpoint_every_ticks=10, checkpoint_dir=ckpt_dir,
+            )
+        else:
+            cc = ClusterConfig(
+                engine=engine_factory, router=murs_router(),
+                net_bytes_per_tick=kv_bytes_per_token(cfg) * 16,
+                n_replicas=3,
+            )
+        cl = ServingCluster(cfg, params, cc)
+        k, replica_ticks, crashed, drained = 0, 0, False, False
+        while cl.tick < 600 and (k < len(evs) or cl.has_pending):
+            while k < len(evs) and evs[k].tick <= cl.tick:
+                cl.submit(evs[k].request)
+                k += 1
+            if crash_at is not None and not crashed and cl.tick >= crash_at:
+                crashed = True
+                cl.crash_replica(0)
+            if drain_at is not None and not drained and cl.tick >= drain_at:
+                drained = True
+                live = {
+                    i: sum(
+                        1 for r in cl.replicas[i].requests.values()
+                        if r.state not in ("done", "failed")
+                    )
+                    for i in cl._active_indices()
+                }
+                cl.drain_replica(max(live, key=lambda i: live[i]))
+            replica_ticks += len(cl._active_indices())
+            cl.step()
+        rep = cl.run(max_ticks=0)
+        rep.apply_slo(default=SloSpec(latency_ticks=250.0))
+        return cl, rep, replica_ticks
+
+    def _row(cl, rep, replica_ticks):
+        return {
+            "completed": rep.completed,
+            "lost": rep.extras.get("lost", 0),
+            "makespan_ticks": cl.tick,
+            "slo_good": rep.slo_good,
+            "goodput_at_horizon": round(rep.slo_good / horizon, 4),
+            "replica_ticks": replica_ticks,
+        }
+
+    e_cl, e_rep, e_rt = _run(True, drain_at=65, crash_at=40)
+    s_cl, s_rep, s_rt = _run(False)
+    legs = {
+        "n_requests": len(evs),
+        "horizon_ticks": horizon,
+        "elastic": {
+            **_row(e_cl, e_rep, e_rt),
+            "scale_ups": e_cl.scale_ups,
+            "scale_downs": e_cl.scale_downs,
+            "peak_replicas": e_cl.peak_replicas,
+            "precopies": e_cl.precopies_started,
+            "delta_cutovers": e_cl.delta_cutovers,
+            "precopy_wire_bytes": e_cl.migration_precopy_wire_bytes,
+            "delta_wire_bytes": e_cl.migration_delta_wire_bytes,
+            "full_wire_bytes": e_cl.migration_full_wire_bytes,
+            "ckpt_saved": e_cl.ckpt_saved,
+            "ckpt_restored_requests": e_cl.ckpt_restored_requests,
+            "ckpt_restored_tokens": e_cl.ckpt_restored_tokens,
+            "ckpt_replayed_tokens": e_cl.ckpt_replayed_tokens,
+            "ckpt_from_zero_tokens": e_cl.ckpt_from_zero_tokens,
+        },
+        "static": _row(s_cl, s_rep, s_rt),
+    }
+    el, st = legs["elastic"], legs["static"]
+    legs["elastic_wins"] = {
+        # the delta cutover ships strictly fewer bytes than the
+        # monolithic copy it replaced would have (and at least one ran)
+        "delta_migration_bytes_below_full_copy": (
+            el["delta_cutovers"] >= 1
+            and 0 < el["delta_wire_bytes"] < el["full_wire_bytes"]
+        ),
+        # a crash restores from the checkpoint and replays only the
+        # uncovered suffix — strictly below the from-zero counterfactual
+        "checkpoint_restore_no_replay_from_zero": (
+            el["ckpt_restored_requests"] >= 1
+            and el["ckpt_replayed_tokens"] < el["ckpt_from_zero_tokens"]
+        ),
+        # at equal peak HBM, autoscaling's fixed-horizon goodput does not
+        # fall below the always-on static fleet's
+        "elastic_goodput_ge_static": (
+            el["goodput_at_horizon"] >= st["goodput_at_horizon"]
+        ),
+    }
+    return legs
+
+
 def _overload_tenants():
     """Two tenants in the paper's service shape: a chatty INTERACTIVE
     tenant (3× the arrival weight, tiny requests, tight SLO) and a BATCH
@@ -641,6 +792,9 @@ def collect(debug: bool = False) -> dict:
     # cluster leg: usage-rate placement vs round-robin across replicas,
     # with live migration off a straggler and crash-requeue recovery
     record["cluster"] = _collect_cluster(cfg, params, debug)
+    # elastic leg: autoscaling + delta migration + checkpoint restore on
+    # the diurnal trace, vs a static fleet at equal peak HBM
+    record["elastic"] = _collect_elastic(cfg, params, debug)
     # open-loop overload leg: ≥1000 Poisson arrivals through the front
     # door, fair vs MURS shedding at equal load — goodput is the headline
     record["overload"] = _collect_overload(cfg, params, debug)
@@ -750,6 +904,35 @@ def main() -> dict:
          "KV extracted, moved compressed, re-installed — nothing lost")
     emit("serve.cluster.crash_no_loss", int(wins["crash_no_loss"]),
          "replica crash requeues its requests instead of losing them")
+    el = record["elastic"]
+    for mode in ("elastic", "static"):
+        row = el[mode]
+        emit(f"serve.elastic.{mode}.completed", row["completed"],
+             f"of {el['n_requests']} diurnal arrivals")
+        emit(f"serve.elastic.{mode}.goodput_at_horizon",
+             row["goodput_at_horizon"],
+             f"SLO-met completions / {el['horizon_ticks']:.0f}-tick horizon")
+        emit(f"serve.elastic.{mode}.replica_ticks", row["replica_ticks"],
+             "replica-occupancy integral (what elasticity saves)")
+    er = el["elastic"]
+    emit("serve.elastic.scale_ups", er["scale_ups"])
+    emit("serve.elastic.scale_downs", er["scale_downs"])
+    emit("serve.elastic.delta_cutovers", er["delta_cutovers"],
+         "drain cutovers that shipped only dirty pages")
+    emit("serve.elastic.delta_wire_bytes", er["delta_wire_bytes"],
+         f"vs {er['full_wire_bytes']} monolithic-copy counterfactual")
+    emit("serve.elastic.ckpt_replayed_tokens", er["ckpt_replayed_tokens"],
+         f"vs {er['ckpt_from_zero_tokens']} replay-from-zero counterfactual")
+    ew = el["elastic_wins"]
+    emit("serve.elastic.delta_migration_bytes_below_full_copy",
+         int(ew["delta_migration_bytes_below_full_copy"]),
+         "delta cutover ships strictly fewer bytes than a full copy")
+    emit("serve.elastic.checkpoint_restore_no_replay_from_zero",
+         int(ew["checkpoint_restore_no_replay_from_zero"]),
+         "crash restore replays only the uncovered suffix")
+    emit("serve.elastic.goodput_ge_static",
+         int(ew["elastic_goodput_ge_static"]),
+         "autoscaling matches the static fleet at equal peak HBM")
     ov = record["overload"]
     for mode in ("fair", "murs"):
         row = ov[mode]

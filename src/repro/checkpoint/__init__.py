@@ -1,3 +1,26 @@
-from .checkpointing import AsyncCheckpointer, latest_step_path, restore, save
+"""Checkpointing for training state and serving KV (DESIGN.md §11).
 
-__all__ = ["AsyncCheckpointer", "latest_step_path", "restore", "save"]
+:func:`save` / :func:`restore` move arbitrary pytrees through an atomic,
+compressed, codec-portable on-disk format; :func:`restore_leaves` reads
+self-describing flat checkpoints (the serving cluster's periodic KV
+snapshots) without a target structure; :class:`AsyncCheckpointer`
+backgrounds the serialize-and-write; :func:`latest_step_path` is the
+resume discovery both :class:`repro.dist.fault.RestartManager` and
+``ServingCluster.crash_replica`` use.
+"""
+
+from .checkpointing import (
+    AsyncCheckpointer,
+    latest_step_path,
+    restore,
+    restore_leaves,
+    save,
+)
+
+__all__ = [
+    "AsyncCheckpointer",
+    "latest_step_path",
+    "restore",
+    "restore_leaves",
+    "save",
+]

@@ -130,6 +130,24 @@ def restore(
     return tree, payload["meta"]["step"]
 
 
+def restore_leaves(path: str) -> tuple[list, int]:
+    """Restore a checkpoint's raw leaf LIST without a ``like`` tree.
+
+    For self-describing checkpoints — trees saved as a flat list whose
+    first leaf is its own manifest (the serving cluster's KV snapshots:
+    ``repro.serve.cluster.ServingCluster`` packs a msgpack manifest leaf
+    followed by one array per checkpointed page) — no target structure
+    exists before the file is read, so :func:`restore`'s treedef check
+    is a chicken-and-egg.  Returns ``(leaves, step)`` host-side; the
+    caller interprets the leaves.
+    """
+    with open(path, "rb") as f:
+        blob = f.read()
+    payload = msgpack.unpackb(_decompress(blob), raw=False)
+    leaves = [_unpack_leaf(d) for d in payload["leaves"]]
+    return leaves, payload["meta"]["step"]
+
+
 class AsyncCheckpointer:
     """Snapshot-then-serialize-in-background checkpointer.
 
@@ -143,6 +161,8 @@ class AsyncCheckpointer:
         self._error: Optional[BaseException] = None
 
     def save(self, path: str, tree: PyTree, *, step: int = 0) -> None:
+        """Snapshot to host synchronously, then write on a background
+        thread; a previous in-flight save is awaited first."""
         self.wait()
         host = _to_host(tree)  # synchronous D2H snapshot
 
@@ -156,6 +176,8 @@ class AsyncCheckpointer:
         self._thread.start()
 
     def wait(self) -> None:
+        """Block until the in-flight save (if any) finishes; re-raises
+        any error the writer thread hit."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None

@@ -7,7 +7,8 @@ service-mode data processing systems) as a composable library:
   * :mod:`sampler` — the seasonal per-task metric sampler
   * :mod:`memory_manager` — shared pool (JVM-heap / HBM) accounting
   * :mod:`repro.sched` — Algorithm 1 (yellow/red, suspend/resume, spill
-    guard); :mod:`scheduler` here is a deprecated re-export shim
+    guard); the old ``repro.core.scheduler`` shim has been removed —
+    import from :mod:`repro.sched` (aliases below stay for core's API)
   * :mod:`tasks`, :mod:`service`, :mod:`spark_sim` — the faithful
     reproduction environment for the paper's own evaluation
 """

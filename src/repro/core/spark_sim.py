@@ -22,7 +22,7 @@ from __future__ import annotations
 from dataclasses import replace
 from typing import Dict, List, Optional
 
-from .scheduler import MursConfig
+from repro.sched import MursConfig
 from .service import GcModel, JobSpec, ServiceExecutor, ServiceMetrics
 from .tasks import ApiProfile, Phase, make_stage_tasks  # noqa: F401
 from .usage_models import UsageModel

@@ -12,6 +12,13 @@ Three pieces the trainer composes:
   *current* mesh under the current rules; because restore is host-side
   bytes + ``device_put``, a checkpoint written on one topology restores
   onto any other (grow/shrink/CPU).
+
+The serving cluster composes the same pieces (DESIGN.md §8, §11):
+:class:`StragglerDetector` runs over per-replica tick service times to
+trigger live KV migration, and ``ServingCluster`` applies the
+:class:`RestartManager` retry/backoff policy per crashed *request* —
+with KV checkpoints standing in for parameter checkpoints, so a restore
+replays only the checkpoint-uncovered suffix.
 """
 
 from __future__ import annotations

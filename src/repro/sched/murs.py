@@ -392,6 +392,29 @@ class MursPolicy(BasePolicy):
         slots = float(replica_stats.get("slot_load", 0.0))
         return -(rate_norm * demand + (1.0 - rate_norm) * slots)
 
+    # ------------------------------------------------------- elastic scaling
+    def scale_pressure(self, replica_stats) -> float:
+        """Fleet demand read through the usage-rate lens (paper §III-B
+        applied to the whole fleet): the mean, across replicas, of the
+        committed-peak byte fraction — ``max(demand, projected)``, the
+        same surface ``placement_score`` steers heavy tenants by.  Queued
+        work that no replica has admitted yet still needs future pages,
+        so a replica with a backlog reports pressure ≥ its slot load
+        even while its pool is momentarily empty.  FAIR scales on slot
+        occupancy; MURS scales on where the bytes are going.
+        """
+        if not replica_stats:
+            return 0.0
+        total = 0.0
+        for s in replica_stats:
+            bytes_frac = max(
+                float(s.get("demand_fraction", 0.0)),
+                float(s.get("projected_fraction", 0.0)),
+            )
+            slots = min(float(s.get("slot_load", 0.0)), 2.0) / 2.0
+            total += max(bytes_frac, slots)
+        return min(total / len(replica_stats), 1.0)
+
     # ----------------------------------------------------------- cache hint
     def _inverse_rate_score(self, group: str) -> float:
         """1 − rate/top over the per-group usage-rate EMA, in [0, 1]:

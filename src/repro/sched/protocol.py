@@ -38,6 +38,13 @@ plus two placement hooks:
         placement mistake costs the most future allocation);
         PriorityPolicy scales the same aversion by tenant weight.
 
+    scale_pressure(replica_stats) → fleet-level demand in [0, 1], the
+        signal the cluster's elastic autoscaler thresholds (DESIGN.md
+        §11).  The base/fair reading is mean slot occupancy; MURS reads
+        the projected usage-rate surface instead — the fleet is "full"
+        when its admitted requests will grow into the pool, not merely
+        when its batch rows are busy.
+
 and two memory-placement hints:
 
     cache_pressure(group) → evictability score for the group's COLD cached
@@ -132,6 +139,10 @@ class SchedulingPolicy(Protocol):
         self, group: str, replica_stats: Mapping[str, float]
     ) -> float: ...
 
+    def scale_pressure(
+        self, replica_stats: Sequence[Mapping[str, float]]
+    ) -> float: ...
+
     def note_group_rate(
         self, group: str, rate: float, now: float = 0.0
     ) -> None: ...
@@ -220,6 +231,30 @@ class BasePolicy:
         the router's round-robin tie-break decides (the stock baseline
         spreads requests across replicas with no pressure awareness)."""
         return 0.0
+
+    def scale_pressure(
+        self, replica_stats: Sequence[Mapping[str, float]]
+    ) -> float:
+        """Fleet-level demand signal for the cluster's elastic autoscaler,
+        in [0, 1]: the fraction of the fleet's capacity the policy
+        considers committed.  The scaling controller spawns a replica
+        when this stays above its up-threshold and drains one when it
+        stays below its down-threshold (see
+        ``repro.serve.cluster.ScalingConfig``).
+
+        The base/fair reading is SLOT occupancy — mean ``slot_load``
+        across replicas — because a rate-oblivious policy only sees how
+        many batch rows are busy or queued for.  MURS overrides this with
+        the usage-rate surface (projected byte demand): a fleet whose
+        slots are idle but whose admitted requests will grow into the
+        pool is already overcommitted in the only currency that matters
+        under §III (future allocation), so MURS scales on usage-rate
+        while FAIR scales on slot-load.
+        """
+        if not replica_stats:
+            return 0.0
+        loads = [min(float(s.get("slot_load", 0.0)), 2.0) for s in replica_stats]
+        return min(sum(loads) / len(loads), 1.0)
 
     def note_group_rate(
         self, group: str, rate: float, now: float = 0.0

@@ -1,5 +1,15 @@
+"""Public surface of the serving stack: engine, cluster, front door,
+traffic generators, and the typed :class:`ServeReport` (DESIGN.md
+§§2 and 8–9, 11; operator guide in docs/OPERATIONS.md)."""
+
 from .cluster import ClusterConfig, ServingCluster
-from .engine import EngineConfig, MigrationTicket, Request, ServingEngine
+from .engine import (
+    EngineConfig,
+    MigrationTicket,
+    PrecopySnapshot,
+    Request,
+    ServingEngine,
+)
 from .frontdoor import FrontDoor, FrontDoorConfig, TokenBucket
 from .kv_cache import (
     CACHE_OWNER,
@@ -46,6 +56,7 @@ __all__ = [
     "LOST",
     "LatencySummary",
     "MigrationTicket",
+    "PrecopySnapshot",
     "PageBlockAllocator",
     "PagedKVManager",
     "PrefixCache",

@@ -36,6 +36,33 @@ replicas:
   exponential backoff in ticks) and replays on whichever replica the
   router picks; only a request that exhausts its retry budget is lost.
 
+* **Elastic autoscaling** (DESIGN.md §11) thresholds the routing
+  policy's ``scale_pressure`` — the same projected-demand surfaces
+  placement scoring reads, folded to one fleet-level number in [0, 1]
+  (MURS scales on where the BYTES are going, FAIR on slot occupancy).
+  Sustained pressure above ``scale_up_pressure`` spawns a replica
+  (unparking a drained slot before growing the fleet); sustained slack
+  below ``scale_down_pressure`` **drains** one: new work stops routing
+  to it, and each live request leaves via an *incremental* migration —
+  a :meth:`ServingEngine.precopy_request` snapshot ships in the
+  background while the replica keeps serving, then the cutover
+  :meth:`ServingEngine.export_request` re-ships only the pages the
+  write-epoch ledger marks dirty since the pre-copy.  The cutover
+  (service-interrupting) bytes are gated below the monolithic full-copy
+  counterfactual the ticket records alongside.
+
+* **KV checkpointing** closes the loop with the disk tier: every
+  ``checkpoint_every_ticks`` the cluster packs each replica's
+  :meth:`ServingEngine.snapshot_kv` (shared-prefix pages first, §6
+  lifetime order) into a self-describing ``repro.checkpoint`` file —
+  manifest leaf first, one array leaf per page.  :meth:`crash_replica`
+  then restores victims found in the newest checkpoint via
+  :meth:`ServingEngine.restore_request` and replays only the suffix the
+  checkpoint did not cover, instead of the from-zero reset un-covered
+  victims still get.  Checkpoint bytes are their own stream
+  (``TieredKVStore.note_checkpoint``), distinct from spill AND from
+  migration wire bytes.
+
 Migration traffic is NOT spill (DESIGN.md §8): ``migration.wire_bytes``
 crosses the inter-replica link to keep a request alive somewhere better,
 while spill parks bytes below HBM on the same machine.  The two are
@@ -44,13 +71,24 @@ recorded separately and gated separately.
 
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+import msgpack
+import numpy as np
+
+from repro.checkpoint import latest_step_path, restore_leaves
+from repro.checkpoint import save as checkpoint_save
 from repro.configs.base import ArchConfig
 from repro.dist.fault import RestartManager, StragglerDetector
 from repro.sched import FairPolicy, SchedulingPolicy
-from repro.serve.engine import EngineConfig, Request, ServingEngine
+from repro.serve.engine import (
+    EngineConfig,
+    PrecopySnapshot,
+    Request,
+    ServingEngine,
+)
 from repro.serve.report import (
     COMPLETED,
     FAILED,
@@ -117,12 +155,48 @@ class ClusterConfig:
     max_retries: int = 3
     retry_backoff_ticks: float = 2.0
     max_backoff_ticks: float = 16.0
+    # ---- elastic autoscaling (DESIGN.md §11)
+    #: threshold the router policy's ``scale_pressure`` every tick;
+    #: False → the fleet stays at ``n_replicas`` forever
+    autoscale: bool = False
+    min_replicas: int = 1
+    max_replicas: int = 4
+    #: pressure in [0,1] that must hold for ``scale_sustain_ticks``
+    #: before a replica is added / drained (hysteresis band between)
+    scale_up_pressure: float = 0.75
+    scale_down_pressure: float = 0.30
+    scale_sustain_ticks: int = 25
+    #: ticks between scaling actions (lets the routed load re-settle)
+    scale_cooldown_ticks: int = 50
+    #: drain via incremental pre-copy + dirty-page delta cutover;
+    #: False → monolithic one-shot exports at cutover
+    precopy_drain: bool = True
+    # ---- periodic KV checkpointing (crash restore; 0 → disabled)
+    checkpoint_every_ticks: int = 0
+    checkpoint_dir: Optional[str] = None
+    #: page cap per snapshot — truncates AFTER the §6 shared-first
+    #: ordering, so a tight budget still holds the longest-lived pages
+    checkpoint_page_budget: Optional[int] = None
+    #: newest files kept per replica directory
+    checkpoint_keep: int = 2
 
     def __post_init__(self) -> None:
         if self.n_replicas < 1:
             raise ValueError("n_replicas must be >= 1")
         if self.net_bytes_per_tick <= 0:
             raise ValueError("net_bytes_per_tick must be > 0")
+        if self.min_replicas < 1:
+            raise ValueError("min_replicas must be >= 1")
+        if self.max_replicas < self.min_replicas:
+            raise ValueError("max_replicas must be >= min_replicas")
+        if not self.scale_down_pressure <= self.scale_up_pressure:
+            raise ValueError(
+                "scale_down_pressure must be <= scale_up_pressure"
+            )
+        if self.checkpoint_every_ticks > 0 and not self.checkpoint_dir:
+            raise ValueError(
+                "checkpoint_every_ticks needs a checkpoint_dir"
+            )
 
 
 class ServingCluster:
@@ -181,6 +255,36 @@ class ServingCluster:
         self.migration_raw_bytes = 0.0
         self.migration_wire_bytes = 0.0
         self.straggler_flags = 0  # straggler-pass detections
+        # ---- elastic autoscaling state
+        #: drained replica slots: excluded from routing, stepping, and
+        #: stats; the parallel per-replica lists stay index-stable and a
+        #: scale-up UNPARKS the lowest slot before growing the fleet
+        self._parked: Set[int] = set()
+        #: replica index → tick its drain began (no new work routes
+        #: there; live work leaves via pre-copy + delta cutover)
+        self._draining: Dict[int, int] = {}
+        #: "pre:<rid>" → (PrecopySnapshot, source) while the background
+        #: copy is on the link; cutover fires at delivery
+        self._precopy: Dict[str, Tuple[PrecopySnapshot, int]] = {}
+        self._pressure_high = 0  # consecutive ticks above the up line
+        self._pressure_low = 0  # consecutive ticks below the down line
+        self._last_scale_tick = -(10**9)
+        self.last_scale_pressure = 0.0
+        self.scale_ups = 0
+        self.scale_downs = 0
+        self.peak_replicas = ccfg.n_replicas
+        self.precopies_started = 0
+        self.delta_cutovers = 0
+        self.migration_delta_wire_bytes = 0.0
+        self.migration_full_wire_bytes = 0.0  # monolithic counterfactual
+        self.migration_precopy_wire_bytes = 0.0
+        # ---- checkpoint / restore state
+        self.ckpt_saved = 0
+        self.ckpt_restored_requests = 0
+        self.ckpt_restored_tokens = 0  # token positions restore kept
+        self.ckpt_replayed_tokens = 0  # uncovered suffix actually redone
+        self.ckpt_from_zero_tokens = 0  # what a cold reset would redo
+        self.ckpt_outcomes: Dict[str, int] = {}
 
     # -------------------------------------------------------------- tenants
     def submit(self, req: Request) -> bool:
@@ -205,8 +309,8 @@ class ServingCluster:
         placed (cluster queue, crash-requeued work, migrations in
         flight)."""
         out: Dict[str, float] = {}
-        for eng in self.replicas:
-            for tenant, nbytes in eng.group_demand().items():
+        for i in self._active_indices():
+            for tenant, nbytes in self.replicas[i].group_demand().items():
                 out[tenant] = out.get(tenant, 0.0) + nbytes
         waiting = [r for r in self.queue]
         waiting.extend(r for _, r in self._requeue)
@@ -217,11 +321,20 @@ class ServingCluster:
             )
         return out
 
+    def _active_indices(self) -> List[int]:
+        """Replica indices that are on (not parked).  Draining replicas
+        stay active — they are still serving what they are migrating."""
+        return [
+            i for i in range(len(self.replicas)) if i not in self._parked
+        ]
+
     def replica_stats(self) -> Dict[str, float]:
         """Cluster-aggregate load surface, same keys as the engine's —
-        capacity and projected bytes sum across replicas (plus unplaced
-        work), fractions are byte-weighted over the summed capacity."""
-        per = [eng.replica_stats() for eng in self.replicas]
+        capacity and projected bytes sum across ACTIVE replicas (plus
+        unplaced work), fractions byte-weighted over summed capacity.
+        Parked replicas contribute nothing: their capacity is off."""
+        active = [self.replicas[i] for i in self._active_indices()]
+        per = [eng.replica_stats() for eng in active]
         cap = sum(s["capacity_bytes"] for s in per)
         projected_bytes = sum(s["projected_bytes"] for s in per)
         unplaced = (
@@ -239,14 +352,14 @@ class ServingCluster:
         used_bytes = sum(
             s["used_fraction"] * s["capacity_bytes"] for s in per
         )
-        n_slots = sum(eng.ecfg.n_slots for eng in self.replicas)
+        n_slots = sum(eng.ecfg.n_slots for eng in active)
         return {
             "demand_fraction": demand_bytes / cap if cap > 0 else 0.0,
             "projected_fraction": projected_bytes / cap if cap > 0 else 0.0,
             "used_fraction": used_bytes / cap if cap > 0 else 0.0,
             "slot_load": (
                 sum(s["slot_load"] * eng.ecfg.n_slots
-                    for s, eng in zip(per, self.replicas))
+                    for s, eng in zip(per, active))
                 + unplaced
             ) / max(n_slots, 1),
             "free_slots": float(sum(s["free_slots"] for s in per)),
@@ -274,11 +387,17 @@ class ServingCluster:
         self._slowdown[replica] = factor
 
     def crash_replica(self, replica: int) -> int:
-        """Kill and restart one replica.  Its KV is gone; its requests are
-        not: each live/queued request is reset to a cold start and
-        requeued after a bounded, capped backoff — unless its retry
-        budget is exhausted, in which case it is recorded as lost (and
-        failed).  Returns the number of requests requeued."""
+        """Kill and restart one replica.  Its HBM KV is gone; its
+        requests are not.  A victim found in the replica's newest disk
+        checkpoint restores onto the fresh engine immediately
+        (:meth:`ServingEngine.restore_request`) with its checkpointed
+        position and tokens — only the suffix the checkpoint did not
+        cover replays.  Every other live/queued victim is reset to a
+        cold start and requeued after a bounded, capped backoff —
+        unless its retry budget is exhausted, in which case it is
+        recorded as lost (and failed).  Returns the number of requests
+        requeued (restored victims are not requeued — they never left
+        the replica)."""
         eng = self.replicas[replica]
         self._harvest_replica(replica)  # terminal states survive a crash
         # only DELIVERED work survives in the token count: a live
@@ -290,10 +409,23 @@ class ServingCluster:
             for r in eng.requests.values()
             if r.state in ("done", "failed")
         )
+        # a drain mid-flight dies with the process: pending pre-copies
+        # reference the dead engine's pages and epochs — a cutover
+        # against them after restart would merge stale baselines
+        self._draining.pop(replica, None)
+        self._precopy = {
+            k: v for k, v in self._precopy.items() if v[1] != replica
+        }
+        ckpt = self._read_checkpoint(replica)
+        fresh = ServingEngine(self.cfg, self.params, self.ccfg.engine())
         victims = [rid for rid, _ in eng.migratable_requests()]
         requeued = 0
         for rid in victims:
             req = eng.requests[rid]
+            entry = ckpt.get(rid)
+            if entry is not None:
+                self._restore_victim(fresh, req, entry, replica)
+                continue
             self._home.pop(rid, None)
             rm = self._retry.setdefault(
                 rid,
@@ -316,9 +448,7 @@ class ServingCluster:
         self.requeued += requeued
         # restart: a fresh engine (fresh policy state, empty pool); the
         # detector forgets the dead process's samples
-        self.replicas[replica] = ServingEngine(
-            self.cfg, self.params, self.ccfg.engine()
-        )
+        self.replicas[replica] = fresh
         self.detector.forget(self._host(replica))
         self._slowdown[replica] = 1.0
         self._done_seen[replica] = 0
@@ -340,6 +470,130 @@ class ServingCluster:
         req.snap_key = None
         req.hit_counted = False
 
+    # -------------------------------------------------------- checkpointing
+    def _ckpt_dir(self, replica: int) -> str:
+        return os.path.join(
+            str(self.ccfg.checkpoint_dir), self._host(replica)
+        )
+
+    def _checkpoint_pass(self) -> None:
+        """Every ``checkpoint_every_ticks``: snapshot each active
+        replica's KV (shared-prefix pages first, §6 lifetime order) into
+        a self-describing checkpoint file under the replica's directory,
+        pruning all but the newest ``checkpoint_keep``."""
+        cc = self.ccfg
+        if cc.checkpoint_every_ticks <= 0 or not cc.checkpoint_dir:
+            return
+        if self.tick == 0 or self.tick % cc.checkpoint_every_ticks:
+            return
+        for i in self._active_indices():
+            snap = self.replicas[i].snapshot_kv(cc.checkpoint_page_budget)
+            if snap is not None:
+                self._write_checkpoint(i, snap)
+
+    def _write_checkpoint(self, replica: int, snap: Dict[str, Any]) -> None:
+        """Pack one :meth:`ServingEngine.snapshot_kv` result into the
+        flat self-describing format :func:`repro.checkpoint.
+        restore_leaves` reads back: leaf 0 is a msgpack manifest
+        (epoch + per-request rid/pos/generated/page-index list), then
+        one array leaf per checkpointed page in manifest order."""
+        manifest: Dict[str, Any] = {"epoch": int(snap["epoch"]), "reqs": []}
+        leaves: List[np.ndarray] = [np.zeros(0, dtype=np.uint8)]
+        for entry in snap["reqs"]:
+            idxs = sorted(entry["pages"])
+            manifest["reqs"].append(
+                {
+                    "rid": entry["rid"],
+                    "pos": int(entry["pos"]),
+                    "generated": [int(t) for t in entry["generated"]],
+                    "pages": idxs,
+                }
+            )
+            leaves.extend(np.asarray(entry["pages"][j]) for j in idxs)
+        blob = msgpack.packb(manifest, use_bin_type=True)
+        leaves[0] = np.frombuffer(blob, dtype=np.uint8)
+        d = self._ckpt_dir(replica)
+        checkpoint_save(
+            os.path.join(d, f"ckpt_{self.tick}.ckpt"),
+            leaves,
+            step=self.tick,
+        )
+        self.ckpt_saved += 1
+        keep = max(self.ccfg.checkpoint_keep, 1)
+        names = sorted(
+            (
+                n
+                for n in os.listdir(d)
+                if n.startswith("ckpt_") and n.endswith(".ckpt")
+            ),
+            key=lambda n: int(n[5:-5]),
+        )
+        for n in names[:-keep]:
+            os.unlink(os.path.join(d, n))
+
+    def _read_checkpoint(
+        self, replica: int
+    ) -> Dict[str, Dict[str, Any]]:
+        """Load the replica's newest checkpoint back into
+        ``rid → {"pos", "generated", "pages": {index: payload}}`` (empty
+        when checkpointing is off, no file exists, or the file is
+        unreadable — crash recovery then falls back to cold resets)."""
+        cc = self.ccfg
+        if cc.checkpoint_every_ticks <= 0 or not cc.checkpoint_dir:
+            return {}
+        path = latest_step_path(self._ckpt_dir(replica))
+        if path is None:
+            return {}
+        try:
+            leaves, _step = restore_leaves(path)
+            manifest = msgpack.unpackb(leaves[0].tobytes(), raw=False)
+        except Exception:
+            return {}  # a torn/alien file must not turn crash into loss
+        out: Dict[str, Dict[str, Any]] = {}
+        cursor = 1
+        for entry in manifest["reqs"]:
+            pages: Dict[int, np.ndarray] = {}
+            for idx in entry["pages"]:
+                pages[int(idx)] = leaves[cursor]
+                cursor += 1
+            out[entry["rid"]] = {
+                "pos": int(entry["pos"]),
+                "generated": list(entry["generated"]),
+                "pages": pages,
+            }
+        return out
+
+    def _restore_victim(
+        self,
+        fresh: ServingEngine,
+        req: Request,
+        entry: Dict[str, Any],
+        replica: int,
+    ) -> None:
+        """Land one crash victim from checkpointed state onto the
+        replacement engine: position and tokens roll back to the
+        checkpoint's values (everything after it died with the HBM),
+        then :meth:`ServingEngine.restore_request` replays only what the
+        checkpointed pages do not cover.  The from-zero counterfactual
+        (what the cold-reset path would recompute) is recorded so the
+        bench can gate restored replay strictly below it."""
+        pos_at_crash = req.pos
+        req.slot = -1
+        req.finish_tick = -1
+        req.cached_tokens = 0
+        req.snap_key = None
+        req.pos = int(entry["pos"])
+        req.generated = list(entry["generated"])
+        outcome = fresh.restore_request(req, entry["pages"])
+        self._home[req.request_id] = replica
+        self.ckpt_restored_requests += 1
+        self.ckpt_restored_tokens += req.pos
+        self.ckpt_replayed_tokens += max(pos_at_crash - req.pos, 0)
+        self.ckpt_from_zero_tokens += pos_at_crash
+        self.ckpt_outcomes[outcome] = (
+            self.ckpt_outcomes.get(outcome, 0) + 1
+        )
+
     # -------------------------------------------------------------- routing
     def _host(self, replica: int) -> str:
         return f"r{replica}"
@@ -352,16 +606,22 @@ class ServingCluster:
         that merely LOOKED emptiest when the pass began."""
         if not self.queue:
             return
+        # parked replicas are off; draining replicas take no NEW work
+        # (the whole point of a drain) — but if everything is draining,
+        # serve anyway rather than starve the queue
+        candidates = [
+            i for i in self._active_indices() if i not in self._draining
+        ]
+        if not candidates:
+            candidates = self._active_indices()
         stats = {
-            i: dict(eng.replica_stats())
-            for i, eng in enumerate(self.replicas)
+            i: dict(self.replicas[i].replica_stats()) for i in candidates
         }
         caps = {
-            i: max(eng.pool.capacity, 1.0)
-            for i, eng in enumerate(self.replicas)
+            i: max(self.replicas[i].pool.capacity, 1.0) for i in candidates
         }
         flagged = self._flagged_indices()
-        if flagged and len(flagged) < len(self.replicas):
+        if flagged and any(i not in flagged for i in stats):
             # never route NEW work onto a detected straggler while a
             # healthy replica exists — placement_score has no straggler
             # axis, so the router enforces this exclusion itself
@@ -399,13 +659,28 @@ class ServingCluster:
 
     def _pick_target(self, group: str, exclude: Set[int]) -> int:
         """Best replica for a migrating request, at DELIVERY time — so a
-        target that crashed (or started straggling) while the bytes were
-        in flight is simply never chosen."""
+        target that crashed, started straggling, parked, or began its
+        own drain while the bytes were in flight is simply never chosen
+        (falling back layer by layer when exclusions cover everyone)."""
+        avoid = set(exclude) | self._parked | set(self._draining)
+        cands = [
+            i for i in range(len(self.replicas)) if i not in avoid
+        ]
+        if not cands:  # only excluded replicas left: drop the soft axes
+            cands = [
+                i
+                for i in self._active_indices()
+                if i not in self._draining
+            ]
+        if not cands:
+            cands = self._active_indices()
+        if not cands:
+            cands = list(range(len(self.replicas)))
         best: Optional[Tuple[float, int, int]] = None
-        for i, eng in enumerate(self.replicas):
-            if i in exclude and len(exclude) < len(self.replicas):
-                continue
-            s = self.router.placement_score(group, eng.replica_stats())
+        for i in cands:
+            s = self.router.placement_score(
+                group, self.replicas[i].replica_stats()
+            )
             rr = (i - self._rr_cursor) % len(self.replicas)
             cand = (s, -rr, i)
             if best is None or cand > best:
@@ -431,8 +706,37 @@ class ServingCluster:
         )
         return True
 
+    def _cutover(self, rid: str, snap: PrecopySnapshot, source: int) -> None:
+        """Phase two of an incremental drain: the pre-copy bytes have
+        landed, so export the request NOW with the snapshot as the
+        baseline — the ticket ships only the dirty delta; the pre-copy
+        plus delta replace what one monolithic copy would have moved."""
+        ticket = self.replicas[source].export_request(rid, baseline=snap)
+        if ticket is None:
+            return  # finished (or moved) while the pre-copy was in flight
+        self._inflight[rid] = (ticket, source)
+        self._home[rid] = -1
+        self.migrations_started += 1
+        self.migration_raw_bytes += ticket.raw_bytes
+        self.migration_wire_bytes += ticket.wire_bytes
+        if ticket.full_wire_bytes > 0:
+            # the delta path ran: record cutover vs counterfactual
+            self.delta_cutovers += 1
+            self.migration_delta_wire_bytes += ticket.wire_bytes
+            self.migration_full_wire_bytes += ticket.full_wire_bytes
+            self.migration_precopy_wire_bytes += ticket.precopy_wire_bytes
+        self.link.send(
+            rid, ticket.wire_bytes, self.ccfg.net_bytes_per_tick
+        )
+
     def _deliver_migrations(self) -> None:
         for tr in self.link.tick():
+            key = str(tr.key)
+            if key.startswith("pre:"):
+                pre = self._precopy.pop(key, None)
+                if pre is not None:
+                    self._cutover(key[4:], pre[0], pre[1])
+                continue
             entry = self._inflight.pop(tr.key, None)
             if entry is None:
                 continue
@@ -461,6 +765,8 @@ class ServingCluster:
             return  # everyone is slow: migration would just churn
         for host in flagged:
             i = int(host[1:])
+            if i in self._draining or i in self._parked:
+                continue  # the drain is already emptying it
             if (
                 self.tick - self._last_migration[i]
                 < self.ccfg.migration_cooldown_ticks
@@ -476,6 +782,145 @@ class ServingCluster:
             if moved:
                 self.straggler_flags += 1
                 self._last_migration[i] = self.tick
+
+    # ----------------------------------------------------- elastic scaling
+    def _scale_pass(self) -> None:
+        """Threshold the routing policy's ``scale_pressure`` with
+        hysteresis: the signal must hold past the up/down line for
+        ``scale_sustain_ticks`` consecutive ticks, and actions are
+        ``scale_cooldown_ticks`` apart — a diurnal swell scales the
+        fleet, a single bursty tick does not."""
+        cc = self.ccfg
+        serving = [
+            i for i in self._active_indices() if i not in self._draining
+        ]
+        self.peak_replicas = max(self.peak_replicas, len(serving))
+        if not cc.autoscale or not serving:
+            return
+        stats = [self.replicas[i].replica_stats() for i in serving]
+        pressure = self.router.scale_pressure(stats)
+        self.last_scale_pressure = pressure
+        if pressure >= cc.scale_up_pressure:
+            self._pressure_high += 1
+            self._pressure_low = 0
+        elif pressure <= cc.scale_down_pressure:
+            self._pressure_low += 1
+            self._pressure_high = 0
+        else:  # the hysteresis band: both streaks break
+            self._pressure_high = 0
+            self._pressure_low = 0
+        if self.tick - self._last_scale_tick < cc.scale_cooldown_ticks:
+            return
+        if (
+            self._pressure_high >= cc.scale_sustain_ticks
+            and len(serving) < cc.max_replicas
+        ):
+            self._scale_up()
+            self._pressure_high = 0
+        elif (
+            self._pressure_low >= cc.scale_sustain_ticks
+            and len(serving) > cc.min_replicas
+            and not self._draining  # one drain at a time
+        ):
+            # drain the emptiest replica: fewest live requests to move
+            victim = min(
+                serving,
+                key=lambda i: (
+                    self.replicas[i].replica_stats()["live"],
+                    -i,  # ties drain the highest index
+                ),
+            )
+            self._begin_drain(victim)
+            self._pressure_low = 0
+
+    def _scale_up(self) -> None:
+        """Add one serving replica: unpark the lowest drained slot if
+        one exists (its engine is already fresh), else grow the fleet —
+        every per-replica parallel list grows with it."""
+        if self._parked:
+            self._parked.discard(min(self._parked))
+        else:
+            self.replicas.append(
+                ServingEngine(self.cfg, self.params, self.ccfg.engine())
+            )
+            self._slowdown.append(1.0)
+            self._last_migration.append(-(10**9))
+            self._done_seen.append(0)
+            self._failed_seen.append(0)
+        self.scale_ups += 1
+        self._last_scale_tick = self.tick
+
+    def drain_replica(self, replica: int) -> int:
+        """Operator-initiated drain (planned maintenance, a deploy, or
+        manual scale-in): ``replica`` stops receiving new work and its
+        live requests leave via the same incremental pre-copy + delta
+        cutover an autoscaler drain uses; the slot parks once empty and
+        a later scale-up can unpark it.  Returns how many live requests
+        began a background pre-copy (zero-KV and un-snapshottable work
+        moves monolithically on the next tick instead)."""
+        if replica in self._parked or replica in self._draining:
+            return 0
+        before = self.precopies_started
+        self._begin_drain(replica)
+        return self.precopies_started - before
+
+    def _begin_drain(self, replica: int) -> None:
+        """Start emptying one replica for scale-down.  Routing stops
+        sending it new work immediately; each live request's resident
+        pages pre-copy onto the link WHILE the replica keeps serving it
+        (the request keeps decoding — and dirtying pages — until its
+        pre-copy lands and :meth:`_cutover` ships just the delta)."""
+        self._draining[replica] = self.tick
+        self._last_scale_tick = self.tick
+        if not self.ccfg.precopy_drain:
+            return  # _drain_pass will export monolithically instead
+        eng = self.replicas[replica]
+        for rid, _state in eng.migratable_requests():
+            snap = eng.precopy_request(rid)
+            if snap is None:
+                continue  # queued / constant-state: monolithic later
+            key = "pre:" + rid
+            self._precopy[key] = (snap, replica)
+            self.precopies_started += 1
+            self.migration_raw_bytes += snap.raw_bytes
+            self.migration_wire_bytes += snap.wire_bytes
+            self.link.send(
+                key, snap.wire_bytes, self.ccfg.net_bytes_per_tick
+            )
+
+    def _drain_pass(self) -> None:
+        """Advance every in-progress drain: export whatever is not
+        already pre-copying (queued work ships zero bytes; anything the
+        pre-copy pass could not snapshot goes monolithically), then park
+        the replica once it is empty and its pre-copies have cut over."""
+        for i in list(self._draining):
+            eng = self.replicas[i]
+            pending = {
+                k[4:] for k, (_s, src) in self._precopy.items() if src == i
+            }
+            for rid, _state in eng.migratable_requests():
+                if rid in pending or rid in self._inflight:
+                    continue
+                self.migrate(rid, i)
+            if not eng.has_pending and not pending:
+                self._park(i)
+
+    def _park(self, replica: int) -> None:
+        """Finish a drain: harvest the last completions, switch the slot
+        off, and leave a fresh engine in it so a later unpark starts
+        cold (the drained process's policy state dies with it)."""
+        self._harvest_replica(replica)
+        self._draining.pop(replica, None)
+        self._parked.add(replica)
+        self.replicas[replica] = ServingEngine(
+            self.cfg, self.params, self.ccfg.engine()
+        )
+        self.detector.forget(self._host(replica))
+        self._slowdown[replica] = 1.0
+        self._done_seen[replica] = 0
+        self._failed_seen[replica] = 0
+        self.scale_downs += 1
+        self._last_scale_tick = self.tick
 
     # ------------------------------------------------------------- harvest
     def _harvest_replica(self, i: int) -> None:
@@ -493,13 +938,17 @@ class ServingCluster:
 
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
+        """Advance one cluster tick: requeue due retries, route, deliver
+        migrations, step active replicas (throttled ones skip ticks),
+        then the straggler / drain / autoscale / checkpoint passes."""
         # crash-requeued work whose backoff expired rejoins the queue
         due = [r for t, r in self._requeue if t <= self.tick]
         self._requeue = [(t, r) for t, r in self._requeue if t > self.tick]
         self.queue.extend(due)
         self._route()
         self._deliver_migrations()
-        for i, eng in enumerate(self.replicas):
+        for i in self._active_indices():  # parked replicas are off
+            eng = self.replicas[i]
             # a throttled replica loses real ticks, not just face: at
             # slowdown f it advances once every ~f cluster ticks
             period = max(int(round(self._slowdown[i])), 1)
@@ -516,6 +965,9 @@ class ServingCluster:
             for g, r in eng.policy.group_rates().items():
                 self.router.note_group_rate(g, r, float(self.tick))
         self._straggler_pass()
+        self._drain_pass()
+        self._scale_pass()
+        self._checkpoint_pass()
         self.tick += 1
 
     @property
@@ -523,6 +975,7 @@ class ServingCluster:
         return bool(
             self.queue
             or self._inflight
+            or self._precopy
             or self._requeue
             or any(eng.has_pending for eng in self.replicas)
         )
@@ -530,7 +983,7 @@ class ServingCluster:
     def run(self, max_ticks: int = 2000) -> ServeReport:
         """Tick until drained or out of budget; returns the typed
         :class:`~repro.serve.report.ServeReport` (the legacy dict payload
-        rides in ``report.extras`` and through the deprecation shim).
+        rides in ``report.extras``).
         Cluster outcome rows carry cluster-tick latency only — TTFT/TPOT
         are engine-tick quantities and stay unset (-1/0), which the SLO
         scorer treats as unmeasured, not failed."""
@@ -562,6 +1015,32 @@ class ServingCluster:
                 "completed": self.migrations_completed,
                 "raw_bytes": self.migration_raw_bytes,
                 "wire_bytes": self.migration_wire_bytes,
+            },
+            "autoscale": {
+                "enabled": self.ccfg.autoscale,
+                "scale_ups": self.scale_ups,
+                "scale_downs": self.scale_downs,
+                "peak_replicas": self.peak_replicas,
+                "active_replicas": len(self._active_indices()),
+                "parked": sorted(self._parked),
+                "last_pressure": self.last_scale_pressure,
+            },
+            "delta_migration": {
+                "precopies": self.precopies_started,
+                "delta_cutovers": self.delta_cutovers,
+                "precopy_wire_bytes": self.migration_precopy_wire_bytes,
+                "delta_wire_bytes": self.migration_delta_wire_bytes,
+                # what the same cutovers would have shipped monolithically
+                "full_wire_bytes": self.migration_full_wire_bytes,
+            },
+            "checkpoint": {
+                "saved": self.ckpt_saved,
+                "restored_requests": self.ckpt_restored_requests,
+                "restored_tokens": self.ckpt_restored_tokens,
+                "replayed_tokens": self.ckpt_replayed_tokens,
+                # what cold resets of the same victims would recompute
+                "from_zero_tokens": self.ckpt_from_zero_tokens,
+                "outcomes": dict(self.ckpt_outcomes),
             },
             "latency_ticks": lat,
             "ticks": self.tick,
@@ -635,6 +1114,9 @@ class ServingCluster:
                     "requeued",
                     "straggler_flags",
                     "migrations",
+                    "autoscale",
+                    "delta_migration",
+                    "checkpoint",
                     "replicas",
                 )
             },

@@ -98,6 +98,12 @@ from repro.serve.tiers import TierConfig, wire_bytes_for
 
 @dataclass
 class Request:
+    """One serving request: a prompt, a decode budget, and the engine's
+    working state (slot, materialized position, generated tokens).
+
+    The engine mutates the instance in place as it moves through the
+    lifecycle — submit fresh objects per run."""
+
     request_id: str
     tenant: str
     prompt: List[int]
@@ -166,7 +172,13 @@ class MigrationTicket:
       dequantized tier blocks) for slotless requests; complete coverage
       lets the target install pages instead of replaying prefill;
     * ``raw_bytes`` / ``wire_bytes`` — the migration's traffic accounting
-      (wire = compressed bytes that cross the inter-replica link).
+      (wire = compressed bytes that cross the inter-replica link);
+    * ``full_wire_bytes`` / ``precopy_wire_bytes`` / ``delta_pages`` —
+      filled only by a DELTA cutover (``export_request`` with a
+      ``baseline`` pre-copy): what a monolithic full copy would have
+      shipped at cutover, what the pre-copy already shipped while the
+      source kept serving, and how many dirty pages the delta re-sent
+      (DESIGN.md §11).
     """
 
     request: Request
@@ -175,6 +187,26 @@ class MigrationTicket:
     raw_bytes: float = 0.0
     wire_bytes: float = 0.0
     source_tick: int = 0
+    full_wire_bytes: float = 0.0
+    precopy_wire_bytes: float = 0.0
+    delta_pages: int = 0
+
+
+@dataclass
+class PrecopySnapshot:
+    """Phase one of an incremental (delta) migration: a copy of the
+    request's resident page payloads taken at ``epoch`` WHILE THE SOURCE
+    KEEPS SERVING the request.  The cluster ships these bytes in the
+    background; at cutover :meth:`ServingEngine.export_request` receives
+    the snapshot as its ``baseline`` and re-ships only the pages the
+    write-epoch ledger (:meth:`PagedKVManager.pages_written_since`) says
+    changed after ``epoch`` — the dirty delta (DESIGN.md §11)."""
+
+    request_id: str
+    epoch: int
+    payloads: Dict[int, np.ndarray] = field(default_factory=dict)
+    raw_bytes: float = 0.0
+    wire_bytes: float = 0.0
 
 
 class _AdmissionQueue:
@@ -243,6 +275,9 @@ class _AdmissionQueue:
 
 @dataclass
 class EngineConfig:
+    """Engine knobs: pool size, policy, tiering, kernels (see
+    docs/OPERATIONS.md for the tuning guide)."""
+
     n_slots: int = 4
     max_seq: int = 128
     hbm_capacity_bytes: float = 1e6  # KV pool budget (simulated pressure)
@@ -316,6 +351,8 @@ class EngineConfig:
     max_prefix_snapshots: int = 64
 
     def resolve_policy(self) -> SchedulingPolicy:
+        """The configured policy instance: ``policy`` wins, a legacy
+        ``scheduler`` config wraps into MursPolicy, else FairPolicy."""
         if self.policy is not None and self.scheduler is not None:
             raise ValueError("pass either policy= or scheduler=, not both")
         if self.policy is not None:
@@ -326,6 +363,10 @@ class EngineConfig:
 
 
 class ServingEngine:
+    """One replica: continuous-batching paged serving over a single
+    simulated HBM pool (DESIGN.md §2), scheduled through a pluggable
+    :class:`~repro.sched.protocol.SchedulingPolicy`."""
+
     def __init__(self, cfg: ArchConfig, params, ecfg: EngineConfig) -> None:
         self.cfg = cfg
         self.params = params
@@ -649,7 +690,59 @@ class ServingEngine:
         return True
 
     # ------------------------------------------------------------ migration
-    def export_request(self, request_id: str) -> Optional[MigrationTicket]:
+    def precopy_request(self, request_id: str) -> Optional[PrecopySnapshot]:
+        """Phase one of an incremental drain migration: copy the
+        request's resident page payloads WITHOUT disturbing it — the
+        request keeps its slot, keeps decoding, keeps dirtying pages.
+        The cluster ships the snapshot's bytes in the background and
+        hands it back to :meth:`export_request` as the ``baseline`` at
+        cutover, which then re-ships only the pages written since
+        (DESIGN.md §11).
+
+        Call between :meth:`step` calls (the snapshot's epoch is the
+        last completed tick).  Returns None when nothing useful can be
+        pre-copied: unknown/queued requests, parked imports, recurrent
+        constant-state architectures (their state never travels
+        page-wise), or a request with no extractable payloads — the
+        caller falls back to a monolithic one-shot export.
+        """
+        req = self._live.get(request_id)
+        if (
+            req is None
+            or req.state == "queued"
+            or request_id in self._imports
+            or constant_state_bytes(self.cfg) > 0
+        ):
+            return None
+        table = self.kv.page_table(request_id)
+        if not table:
+            return None
+        snap = PrecopySnapshot(request_id=request_id, epoch=self.tick - 1)
+        frozen = self._frozen_payloads.get(request_id, {})
+        for idx, pid in enumerate(table):
+            if pid == DEMOTED:
+                continue  # compressed block travels at cutover instead
+            payload = (
+                self._page_payload(req.slot, idx)
+                if req.slot >= 0
+                else frozen.get(idx)
+            )
+            if payload is not None:
+                snap.payloads[idx] = payload
+        if not snap.payloads:
+            return None
+        page_bytes = self.kv.bytes_for(self.cfg, 1)
+        snap.raw_bytes = len(snap.payloads) * page_bytes
+        snap.wire_bytes = wire_bytes_for(
+            snap.raw_bytes, len(snap.payloads), self.ecfg.tier_compress
+        )
+        return snap
+
+    def export_request(
+        self,
+        request_id: str,
+        baseline: Optional[PrecopySnapshot] = None,
+    ) -> Optional[MigrationTicket]:
         """Extract a live request's full state for migration to another
         replica; this engine forgets the request entirely (no double
         accounting — the cluster owns it while its bytes are on the wire).
@@ -661,6 +754,15 @@ class ServingEngine:
         as their compressed blocks (:meth:`PagedKVManager.extract_demoted`
         — already int8, already paid the lossy round-trip).  Returns None
         for unknown/terminal requests.
+
+        With ``baseline`` (a :meth:`precopy_request` snapshot of this
+        request) the cutover is INCREMENTAL: the ticket carries the
+        merged payload set but its ``wire_bytes`` charge only the pages
+        the write-epoch ledger marks dirty since the pre-copy — the
+        monolithic counterfactual is recorded in ``full_wire_bytes`` so
+        the bench can gate ``delta < full``.  When the delta cannot be
+        assembled (a dirty page with no extractable payload), the
+        monolithic path below runs unchanged.
         """
         req = self._live.get(request_id)
         if req is None:
@@ -674,7 +776,16 @@ class ServingEngine:
             ticket.page_payloads = parked.page_payloads
             ticket.raw_bytes = parked.raw_bytes
             ticket.wire_bytes = parked.wire_bytes
-        if req.state != "queued" and parked is None:
+        delta_done = False
+        if (
+            baseline is not None
+            and baseline.request_id == request_id
+            and parked is None
+            and req.state != "queued"
+            and constant_state_bytes(self.cfg) == 0
+        ):
+            delta_done = self._export_delta(req, ticket, baseline)
+        if req.state != "queued" and parked is None and not delta_done:
             if req.slot >= 0:
                 ticket.slot_cache = self._extract_slot(req.slot)
             else:
@@ -715,6 +826,63 @@ class ServingEngine:
         self._update_pool()
         self.migrations_out += 1
         return ticket
+
+    def _export_delta(
+        self,
+        req: Request,
+        ticket: MigrationTicket,
+        baseline: PrecopySnapshot,
+    ) -> bool:
+        """Assemble the incremental cutover into ``ticket``: merged
+        payloads = pre-copied pages overlaid with the pages dirtied
+        after the baseline's epoch (plus pages the baseline never saw).
+        Returns False — leaving the ticket untouched for the monolithic
+        path — when any needed delta payload is unextractable."""
+        rid = req.request_id
+        table = self.kv.page_table(rid)
+        resident = [i for i, pid in enumerate(table) if pid != DEMOTED]
+        dirty = self.kv.pages_written_since(rid, baseline.epoch)
+        delta_idx = [
+            i for i in resident if i in dirty or i not in baseline.payloads
+        ]
+        frozen = self._frozen_payloads.get(rid, {})
+        fresh: Dict[int, np.ndarray] = {}
+        for i in delta_idx:
+            payload = (
+                self._page_payload(req.slot, i)
+                if req.slot >= 0
+                else frozen.get(i)
+            )
+            if payload is None:
+                return False
+            fresh[i] = payload
+        merged = dict(baseline.payloads)
+        merged.update(fresh)
+        if not all(i in merged for i in resident):
+            return False  # a clean page the baseline never captured
+        ticket.page_payloads = merged
+        page_bytes = self.kv.bytes_for(self.cfg, 1)
+        delta_raw = len(delta_idx) * page_bytes
+        ticket.raw_bytes += delta_raw
+        if delta_idx:
+            ticket.wire_bytes += wire_bytes_for(
+                delta_raw, len(delta_idx), self.ecfg.tier_compress
+            )
+        ticket.delta_pages = len(delta_idx)
+        ticket.precopy_wire_bytes = baseline.wire_bytes
+        # the monolithic counterfactual: what one-shot cutover would ship
+        resident_bytes = self.kv.request_bytes(rid)
+        ticket.full_wire_bytes = wire_bytes_for(
+            resident_bytes, len(resident), self.ecfg.tier_compress
+        )
+        for idx, block in self.kv.extract_demoted(rid).items():
+            payload = block.decompress()
+            if payload is not None:
+                ticket.page_payloads[idx] = payload
+            ticket.raw_bytes += block.raw_bytes
+            ticket.wire_bytes += block.stored_bytes
+            ticket.full_wire_bytes += block.stored_bytes
+        return True
 
     def import_request(self, ticket: MigrationTicket) -> None:
         """Install a migrated request (the target side of a migration).
@@ -793,12 +961,162 @@ class ServingEngine:
                     self._install_page_payload(
                         slot, idx, ticket.page_payloads[idx]
                     )
+            self.kv.note_write(rid, 0, max(req.pos, 1), self.tick)
             self._set_state(req, "prefill" if req.prefilling else "decoding")
             # fresh rate window on this replica: the sampler must never
             # see the imported progress as one giant burst
             self.sampler.forget(rid)
             del self._imports[rid]
             self._update_pool()
+
+    # ---------------------------------------------------------- checkpointing
+    def snapshot_kv(
+        self, page_budget: Optional[int] = None
+    ) -> Optional[Dict[str, Any]]:
+        """One periodic KV snapshot: the page payloads + token progress a
+        crash restore needs, ordered by DESIGN.md §6 lifetime class —
+        SHARED-PREFIX pages first (they outlive any one request and
+        shield the most replay per byte), then private suffix pages;
+        draft-class pages would never checkpoint (§11).  ``page_budget``
+        truncates after the ordering, so whatever fits is always the
+        longest-lived state.
+
+        Returns ``{"epoch", "reqs": [{"rid", "pos", "generated",
+        "pages": {index: payload}}], "raw_bytes", "stored_bytes"}`` —
+        the cluster packs it into a self-describing checkpoint file —
+        or None when there is nothing page-wise to persist (recurrent
+        constant-state architectures, an empty engine).  Checkpoint
+        bytes are accounted against the disk tier
+        (:meth:`TieredKVStore.note_checkpoint`) as their own stream,
+        distinct from spill.
+        """
+        if constant_state_bytes(self.cfg) > 0:
+            return None
+        # (shared-first rank, rid, idx, payload) — page granularity so a
+        # tight budget still captures every request's shared prefix
+        candidates: List[Tuple[int, str, int, np.ndarray]] = []
+        meta: Dict[str, Request] = {}
+        for rid, req in self._live.items():
+            if req.state not in ("prefill", "decoding", "suspended"):
+                continue
+            if req.pos <= 0:
+                continue
+            frozen = self._frozen_payloads.get(rid, {})
+            if req.slot < 0 and not frozen:
+                continue
+            table = self.kv.page_table(rid)
+            shared = self.kv.shared_page_indices(rid)
+            pages_needed = (
+                req.pos + self.kv.page_tokens - 1
+            ) // self.kv.page_tokens
+            got_any = False
+            for idx in range(min(pages_needed, len(table))):
+                if table[idx] == DEMOTED:
+                    continue
+                payload = (
+                    self._page_payload(req.slot, idx)
+                    if req.slot >= 0
+                    else frozen.get(idx)
+                )
+                if payload is None:
+                    continue
+                rank = 0 if idx in shared else 1
+                candidates.append((rank, rid, idx, payload))
+                got_any = True
+            if got_any:
+                meta[rid] = req
+        if not candidates:
+            return None
+        candidates.sort(key=lambda c: (c[0], c[1], c[2]))
+        if page_budget is not None:
+            candidates = candidates[:page_budget]
+        reqs: Dict[str, Dict[str, Any]] = {}
+        for _, rid, idx, payload in candidates:
+            req = meta[rid]
+            entry = reqs.setdefault(
+                rid,
+                {
+                    "rid": rid,
+                    "pos": req.pos,
+                    "generated": list(req.generated),
+                    "pages": {},
+                },
+            )
+            entry["pages"][idx] = payload
+        page_bytes = self.kv.bytes_for(self.cfg, 1)
+        raw = len(candidates) * page_bytes
+        stored = wire_bytes_for(
+            raw, len(candidates), self.ecfg.tier_compress
+        )
+        if self.kv.tiers is not None:
+            self.kv.tiers.note_checkpoint(raw, stored)
+        return {
+            "epoch": self.tick - 1,
+            "reqs": list(reqs.values()),
+            "raw_bytes": raw,
+            "stored_bytes": stored,
+        }
+
+    def restore_request(
+        self, req: Request, page_payloads: Dict[int, np.ndarray]
+    ) -> str:
+        """Land a crash victim from checkpointed state (the restore side
+        of :meth:`snapshot_kv`; ``req.pos`` / ``req.generated`` must
+        already be rolled back to the checkpoint's values by the caller).
+
+        Contiguous page coverage from index 0 decides how much replays:
+        full coverage lands the request LIVE through the import path
+        (zero recompute); partial coverage rolls ``pos`` back to the
+        last covered page boundary and chunked prefill replays only the
+        uncovered suffix; no coverage falls back to the full replay the
+        suspend/resume machinery uses — which still keeps the restored
+        ``generated`` tokens, so no decode work repeats even then.
+        Returns ``"live"``, ``"suffix"``, ``"replay"``, or ``"queued"``.
+        """
+        rid = req.request_id
+        req.slot = -1
+        self.requests[rid] = req
+        self._track_live(req)
+        self._submitted += 1
+        if req.state == "queued" or req.pos <= 0:
+            self._set_state(req, "queued")
+            req.pos = 0
+            self.queue.append(req)
+            return "queued"
+        self.kv.register(rid, self.cfg)
+        covered = 0
+        while page_payloads.get(covered) is not None:
+            covered += 1
+        pos_covered = covered * self.kv.page_tokens
+        outcome = "live"
+        if pos_covered < req.pos:
+            if covered == 0:
+                self._set_state(req, "suspended")
+                req.pos = 0
+                req.cached_tokens = 0
+                req.snap_key = None
+                self._restore.append(rid)
+                return "replay"
+            # roll back to the covered boundary: the suffix replays
+            req.pos = pos_covered
+            outcome = "suffix"
+        ticket = MigrationTicket(
+            request=req,
+            page_payloads={
+                i: page_payloads[i] for i in range(covered)
+            },
+            source_tick=self.tick,
+        )
+        if not self._payload_covers(ticket):
+            self._set_state(req, "suspended")
+            req.pos = 0
+            req.cached_tokens = 0
+            req.snap_key = None
+            self._restore.append(rid)
+            return "replay"
+        self._set_state(req, "importing")
+        self._imports[rid] = ticket
+        return outcome
 
     # ---------------------------------------------------------- cluster view
     @property
@@ -1271,6 +1589,7 @@ class ServingEngine:
             )
         self._caches = new
         req.pos = len(tokens)
+        self.kv.note_write(req.request_id, 0, len(tokens), self.tick)
         return logits[0, -1]
 
     def _finish_prefill(self, req: Request, last_logits) -> None:
@@ -1323,6 +1642,7 @@ class ServingEngine:
         self._snaps[req.snap_key] = self._snaps.pop(req.snap_key)  # LRU touch
         caches_sub, first_tok, snap_len = snap
         self._install_slot(req.slot, caches_sub)
+        self.kv.note_write(req.request_id, 0, max(snap_len, 1), self.tick)
         matched = min(req.cached_tokens, len(feed))
         count = not req.hit_counted  # replays must not re-count dedup work
         if count:
@@ -1407,6 +1727,9 @@ class ServingEngine:
                 if take > 0:
                     self.kv.grow_to(rid, req.pos + take)
                     self._cow_range(req, req.pos, req.pos + take)
+                    self.kv.note_write(
+                        rid, req.pos, req.pos + take, self.tick
+                    )
                 # power-of-two buckets: O(log chunk) dispatches per tick
                 # and a bounded set of compiled scan widths
                 while take > 0:
@@ -1468,6 +1791,9 @@ class ServingEngine:
             # paths drive the same allocator event sequence.
             self.kv.make_private(
                 req.request_id, (req.pos - 1) // self.kv.page_tokens
+            )
+            self.kv.note_write(
+                req.request_id, req.pos - 1, req.pos, self.tick
             )
             req.generated.append(int(nxt[r]))
             if req.done:
@@ -1637,6 +1963,8 @@ class ServingEngine:
 
     # ----------------------------------------------------------------- tick
     def step(self) -> None:
+        """Advance one tick: admit, prefill a chunk, decode the batch,
+        then the policy/demotion passes; updates ``last_tick_cost``."""
         stalls0 = self.stall_ticks
         self._tick_prefill_tokens = 0
         self._tick_decode_tokens = 0
@@ -1678,6 +2006,7 @@ class ServingEngine:
             req = self.requests.get(rid)
             if req is not None and req.slot >= 0 and payload is not None:
                 self._install_page_payload(req.slot, idx, payload)
+                self.kv.note_page_write(rid, idx, self.tick)
         self._promotion_pass()
         self.kv.reclaim()
         if (
@@ -1975,7 +2304,7 @@ class ServingEngine:
     def run(self, max_ticks: int = 1000) -> ServeReport:
         """Tick until drained or the budget runs out; returns the typed
         :class:`~repro.serve.report.ServeReport` (the legacy dict payload
-        rides in ``report.extras`` and through the deprecation shim)."""
+        rides in ``report.extras``)."""
         while self.tick < max_ticks:
             if not self.has_pending:
                 break

@@ -64,6 +64,7 @@ class TokenBucket:
             self.tokens = self.burst
 
     def try_take(self, now: float, cost: float = 1.0) -> bool:
+        """Lazy-refill then take ``cost`` tokens; False = rate-limited."""
         if now > self.last_tick:
             self.tokens = min(
                 self.burst, self.tokens + (now - self.last_tick) * self.rate
@@ -77,6 +78,9 @@ class TokenBucket:
 
 @dataclass
 class FrontDoorConfig:
+    """Admission knobs: shed threshold, token buckets, SLOs (DESIGN.md
+    §9; tuning table in docs/OPERATIONS.md)."""
+
     #: projected-demand fraction of capacity above which shedding starts;
     #: >= 1.0 still sheds (overcommit by declared peak), inf disables
     pressure_threshold: float = 0.95

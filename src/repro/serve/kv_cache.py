@@ -170,6 +170,8 @@ class PageBlockAllocator:
         self.cow_events = 0  # copy-on-write page splits
 
     def drain_dirty(self) -> set:
+        """Return-and-clear the owners whose page set changed since the
+        last drain (the pool-sync dirty set)."""
         out = self.dirty
         self.dirty = set()
         return out
@@ -884,6 +886,15 @@ class PagedKVManager:
     #: request ids whose attributed bytes changed outside the allocator
     #: (constant-state registration); merged into :meth:`drain_dirty`
     _dirty: set = field(default_factory=set)
+    #: per-request, per-table-index WRITE EPOCHS — the delta-migration
+    #: ledger (DESIGN.md §11).  The engine stamps every cache-write site
+    #: (prefill install, chunked scan, decode append, payload install)
+    #: with its tick; a drain pre-copy records the epoch it snapshotted
+    #: at, and :meth:`pages_written_since` answers which pages the
+    #: cutover must re-ship.  Distinct from the owner-level ``_dirty``
+    #: set above, which tracks BYTE-ATTRIBUTION changes for the pool
+    #: accounting, not page content.
+    _write_epoch: Dict[str, Dict[int, int]] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
         if self.tier_config is not None:
@@ -893,6 +904,8 @@ class PagedKVManager:
 
     # ------------------------------------------------------------ requests
     def register(self, request_id: str, cfg: ArchConfig) -> None:
+        """Start tracking a request: derive its per-page bytes from the
+        arch config and create the allocator on first use."""
         page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
         self._page_bytes[request_id] = page_bytes
         self._state_bytes[request_id] = constant_state_bytes(cfg)
@@ -957,6 +970,8 @@ class PagedKVManager:
         return new * page_bytes, pages
 
     def release(self, request_id: str) -> float:
+        """Free every page the request owns (tier copies included);
+        returns the bytes returned to the pool."""
         pages = 0
         if self._alloc is not None:
             if self.tiers is not None:
@@ -967,6 +982,7 @@ class PagedKVManager:
         pb = self._page_bytes.pop(request_id, 0.0)
         sb = self._state_bytes.pop(request_id, 0.0)
         self._dirty.add(request_id)
+        self._write_epoch.pop(request_id, None)
         return pages * pb + sb
 
     def drain_dirty(self) -> set:
@@ -978,6 +994,41 @@ class PagedKVManager:
         if self._alloc is not None:
             out |= self._alloc.drain_dirty()
         return out
+
+    # ------------------------------------------------------ write epochs
+    def note_write(
+        self, request_id: str, start_tok: int, end_tok: int, epoch: int
+    ) -> None:
+        """Stamp the pages covering tokens ``[start_tok, end_tok)`` as
+        written at ``epoch`` (the engine tick).  Every engine cache-write
+        site calls this; the delta-migration cutover ships only pages
+        whose stamp is newer than the pre-copy's epoch."""
+        if end_tok <= start_tok:
+            return
+        ledger = self._write_epoch.setdefault(request_id, {})
+        first = start_tok // self.page_tokens
+        last = (end_tok - 1) // self.page_tokens
+        for idx in range(first, last + 1):
+            ledger[idx] = epoch
+
+    def note_page_write(
+        self, request_id: str, page_index: int, epoch: int
+    ) -> None:
+        """Stamp one table index as written at ``epoch`` (payload
+        installs land whole pages, not token spans)."""
+        self._write_epoch.setdefault(request_id, {})[page_index] = epoch
+
+    def pages_written_since(self, request_id: str, epoch: int) -> set:
+        """Table indices written STRICTLY AFTER ``epoch`` — the dirty
+        delta between a pre-copy snapshot taken at ``epoch`` and now.
+        Pages never stamped (e.g. installed before the ledger existed)
+        are conservatively treated as dirty by the caller, not here."""
+        ledger = self._write_epoch.get(request_id, {})
+        return {idx for idx, e in ledger.items() if e > epoch}
+
+    def write_epochs(self, request_id: str) -> Dict[int, int]:
+        """The request's full write-epoch ledger (copy)."""
+        return dict(self._write_epoch.get(request_id, {}))
 
     # ----------------------------------------------------- tier transitions
     def demote_page(
@@ -1021,12 +1072,29 @@ class PagedKVManager:
             and self._alloc.refcount(pid) == 1
         )
 
+    def shared_page_indices(self, request_id: str) -> set:
+        """Table indices backed by SHARED physical pages (refcount > 1:
+        cached prefixes and co-held prompt pages) — the long-lived
+        lifetime class of DESIGN.md §6, and therefore the pages a KV
+        checkpoint persists first (§11): they outlive any one request
+        and shield the most replay work per byte."""
+        if self._alloc is None:
+            return set()
+        return {
+            i
+            for i, pid in enumerate(self._alloc.table(request_id))
+            if 0 <= pid < self._alloc.n_pages
+            and self._alloc.refcount(pid) > 1
+        }
+
     def has_demoted(self, request_id: str) -> bool:
+        """True if any of the request's pages live below HBM."""
         if self._alloc is None:
             return False
         return bool(self._alloc.demoted_indices(request_id))
 
     def demoted_page_count(self, request_id: str) -> int:
+        """Number of the request's pages currently demoted to a tier."""
         if self._alloc is None:
             return 0
         return len(self._alloc.demoted_indices(request_id))
@@ -1142,6 +1210,8 @@ class PagedKVManager:
         return self.tiers.inflight_promotions if self.tiers is not None else 0
 
     def tier_stats(self) -> Dict[str, float]:
+        """Tier-hierarchy counters for the report (empty-shape when
+        tiering is disabled)."""
         if self.tiers is None:
             return {"enabled": False}
         stats: Dict[str, float] = {"enabled": True}

@@ -15,15 +15,14 @@ carries:
   metric: a system that "completes" every request 50× past its latency
   target has throughput but no goodput.
 
-The legacy dict payload lives in :attr:`ServeReport.extras`; dict-style
-access (``report["completed"]``) still works for one release via a
-``__getitem__`` shim that emits a :class:`DeprecationWarning`.
+The legacy dict payload lives in :attr:`ServeReport.extras`.  (The
+one-release ``__getitem__`` dict-access shim has been removed: use the
+typed fields, or ``report.extras[...]`` for legacy keys.)
 """
 
 from __future__ import annotations
 
 import json
-import warnings
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence
 
@@ -70,6 +69,8 @@ class SloSpec:
     latency_ticks: Optional[float] = None
 
     def met(self, outcome: "RequestOutcome") -> bool:
+        """True if a COMPLETED outcome satisfies every configured bound
+        (TTFT / TPOT / end-to-end, in ticks)."""
         if outcome.outcome != COMPLETED:
             return False
         for bound, value in (
@@ -98,12 +99,14 @@ class RequestOutcome:
 
     @property
     def latency_ticks(self) -> Optional[int]:
+        """End-to-end submit→finish ticks; None while unfinished."""
         if self.finish_tick < 0:
             return None
         return self.finish_tick - self.submit_tick
 
     @property
     def ttft_ticks(self) -> Optional[int]:
+        """Submit→first-token ticks; None before the first token."""
         if self.first_token_tick < 0:
             return None
         return self.first_token_tick - self.submit_tick
@@ -130,6 +133,7 @@ class LatencySummary:
 
     @classmethod
     def from_values(cls, values: Sequence[float]) -> "LatencySummary":
+        """Percentile summary of the non-None values (empty-safe)."""
         vals = sorted(v for v in values if v is not None)
         if not vals:
             return cls()
@@ -171,7 +175,7 @@ class ServeReport:
     tiering: Optional[Dict[str, Any]] = None
     prefix: Optional[Dict[str, Any]] = None
     cluster: Optional[Dict[str, Any]] = None
-    #: the full legacy dict payload — the dict-compat shim reads this
+    #: the full legacy dict payload (reach it explicitly: ``.extras``)
     extras: Dict[str, Any] = field(default_factory=dict, repr=False)
 
     # ------------------------------------------------------------- scoring
@@ -250,6 +254,8 @@ class ServeReport:
 
     @classmethod
     def from_json(cls, payload: Mapping[str, Any]) -> "ServeReport":
+        """Rebuild a report from :meth:`to_json` output (artifact
+        round-trip; unknown keys are ignored)."""
         rep = cls(
             policy=payload.get("policy", ""),
             submitted=payload.get("submitted", 0),
@@ -278,28 +284,3 @@ class ServeReport:
 
     def json_str(self, include_outcomes: bool = False) -> str:
         return json.dumps(self.to_json(include_outcomes), sort_keys=True)
-
-    # -------------------------------------------------- dict-compat (one release)
-    def _deprecated(self) -> None:
-        warnings.warn(
-            "dict-style access to serving results is deprecated; use the "
-            "typed ServeReport fields (or .extras for legacy keys)",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-
-    def __getitem__(self, key: str) -> Any:
-        self._deprecated()
-        return self.extras[key]
-
-    def get(self, key: str, default: Any = None) -> Any:
-        self._deprecated()
-        return self.extras.get(key, default)
-
-    def __contains__(self, key: object) -> bool:
-        self._deprecated()
-        return key in self.extras
-
-    def keys(self):
-        self._deprecated()
-        return self.extras.keys()

@@ -123,6 +123,8 @@ class CompressedBlock:
     def compress(
         cls, raw_bytes: float, payload: Optional[np.ndarray], compress: bool
     ) -> "CompressedBlock":
+        """Build a block: int8-quantize the payload when ``compress``
+        (recording the measured round-trip error), else store raw."""
         if not compress:
             return cls(raw_bytes=raw_bytes, stored_bytes=raw_bytes)
         stored = raw_bytes * _INT8_RATIO + _SCALE_BYTES
@@ -140,6 +142,7 @@ class CompressedBlock:
         )
 
     def decompress(self) -> Optional[np.ndarray]:
+        """Dequantized payload, or None for a byte-count-only block."""
         if self.codes is None:
             return None
         return np.asarray(dequantize(self.codes, self.scale))
@@ -192,6 +195,8 @@ class PcieLink:
         )
 
     def cancel(self, key: Hashable) -> Optional[_Transfer]:
+        """Pull a queued transfer off the link (e.g. its owner died);
+        returns it, or None if not queued."""
         for i, tr in enumerate(self._queue):
             if tr.key == key:
                 return self._queue.pop(i)
@@ -245,6 +250,12 @@ class TieredKVStore:
         self.extractions = 0  # blocks handed to a migration (not garbage)
         self.max_quant_error = 0.0
         self.host_peak_bytes = 0.0  # high-water mark of host occupancy
+        # ---- checkpoint traffic (DESIGN.md §11: a third byte stream,
+        # distinct from spill and migration — durable snapshot writes
+        # through the disk tier's buffered write path)
+        self.checkpoint_bytes = 0.0  # compressed snapshot bytes written
+        self.checkpoint_raw_bytes = 0.0  # pre-compression page bytes
+        self.checkpoints = 0
 
     # ------------------------------------------------------------- queries
     def location(self, key: Hashable) -> str:
@@ -421,6 +432,20 @@ class TieredKVStore:
             if victim == arriving:
                 break
 
+    # ----------------------------------------------------------- checkpoints
+    def note_checkpoint(self, raw_bytes: float, stored_bytes: float) -> None:
+        """Account one KV snapshot written through the disk tier.
+
+        Checkpoint writes ride the buffered disk-write path (cost bytes,
+        not link time — same model as host→disk eviction), but they are a
+        SEPARATE byte stream from spill: spill is pages falling out of
+        the fast tiers under pressure, a checkpoint is a durable copy of
+        pages that stay resident (DESIGN.md §11 keeps the two metrics
+        from being conflated)."""
+        self.checkpoint_raw_bytes += max(raw_bytes, 0.0)
+        self.checkpoint_bytes += max(stored_bytes, 0.0)
+        self.checkpoints += 1
+
     # ---------------------------------------------------------------- stats
     def stats(self) -> Dict[str, float]:
         """Machine-readable tier trajectory for ``BENCH_serve.json``."""
@@ -439,4 +464,7 @@ class TieredKVStore:
             "transfers_completed": self.link.completed_transfers,
             "transfers_in_flight": self.link.in_flight,
             "max_quant_error": self.max_quant_error,
+            "checkpoint_bytes": self.checkpoint_bytes,
+            "checkpoint_raw_bytes": self.checkpoint_raw_bytes,
+            "checkpoints": self.checkpoints,
         }

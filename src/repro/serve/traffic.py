@@ -57,6 +57,7 @@ class TenantProfile:
     vocab: int = 31
 
     def make_request(self, rnd: random.Random, index: int) -> Request:
+        """Draw one request from the tenant's prompt/output ranges."""
         prompt = [
             1 + rnd.randrange(self.vocab)
             for _ in range(rnd.randint(*self.prompt_tokens))
@@ -71,6 +72,8 @@ class TenantProfile:
 
 @dataclass(frozen=True)
 class Arrival:
+    """One traced arrival: the tick it lands and the request itself."""
+
     tick: int
     request: Request
 

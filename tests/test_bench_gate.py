@@ -13,7 +13,7 @@ from benchmarks.gate import compare, main as gate_main
 
 
 def _record(p50=10, p99=20, thr=1.5, wins=True, cl_p99=30, cl_wins=True,
-            tick_cost="roofline", distinct=8):
+            tick_cost="roofline", distinct=8, el_wins=True):
     tc = (
         {"tick_cost": {"source": tick_cost, "distinct": distinct,
                        "ticks": 40, "mean_s": 2e-5}}
@@ -43,6 +43,13 @@ def _record(p50=10, p99=20, thr=1.5, wins=True, cl_p99=30, cl_wins=True,
                 "migration_roundtrip": cl_wins,
                 "crash_no_loss": cl_wins,
                 "p99_beats_round_robin": cl_wins,
+            },
+        },
+        "elastic": {
+            "elastic_wins": {
+                "delta_migration_bytes_below_full_copy": el_wins,
+                "checkpoint_restore_no_replay_from_zero": el_wins,
+                "elastic_goodput_ge_static": el_wins,
             },
         },
     }
@@ -84,6 +91,18 @@ class TestGateCompare:
         assert any("migration_roundtrip" in f for f in failures)
         assert any("crash_no_loss" in f for f in failures)
         assert any("p99_beats_round_robin" in f for f in failures)
+
+    def test_elastic_wins_are_hard_gates(self):
+        _, failures = compare(_record(), _record(el_wins=False), 15.0)
+        assert any(
+            "delta_migration_bytes_below_full_copy" in f for f in failures
+        )
+        assert any(
+            "checkpoint_restore_no_replay_from_zero" in f for f in failures
+        )
+        assert any("elastic_goodput_ge_static" in f for f in failures)
+        _, ok = compare(_record(), _record(), 15.0)
+        assert not ok
 
     def test_kernel_costs_derived_is_a_hard_gate(self):
         """A serving leg that stops reporting roofline-derived tick

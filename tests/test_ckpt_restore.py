@@ -1,0 +1,270 @@
+"""Checkpoint / delta-migration / restore properties (DESIGN.md §11).
+
+The state-management layer added for elastic serving makes three hard
+promises, each pinned here:
+
+* **Determinism survives recovery** — greedy decode is deterministic, so
+  a request restored from a KV checkpoint (or re-run from zero) must
+  produce bit-identical tokens to an undisturbed run;
+* **A restore beats a cold reset** — replay work after a crash with a
+  checkpoint is strictly less than the replay-from-zero counterfactual
+  whenever the checkpoint covered anything;
+* **One page, one tier** — a restored page lands in HBM through the
+  import path and nowhere else: the page table and the compressed tier
+  store never both claim the same (request, page) at once.
+
+The hypothesis stream drives random submit/step/crash interleavings
+against periodic checkpoints, the way `test_cluster` does for the
+migration plane.
+"""
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.models import init_model
+from repro.serve import (
+    ClusterConfig,
+    EngineConfig,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.serve.kv_cache import DEMOTED, kv_bytes_per_token
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["internlm2-1.8b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _engine_factory(cfg, tokens=120, n_slots=3):
+    cap = kv_bytes_per_token(cfg) * tokens
+
+    def make():
+        return EngineConfig(
+            n_slots=n_slots, max_seq=64, hbm_capacity_bytes=cap
+        )
+
+    return make
+
+
+def _prompts(n):
+    return [[2 + (7 * i + j) % 40 for j in range(6 + i)] for i in range(n)]
+
+
+def _reference_tokens(cfg, params, prompts, max_new):
+    """Undisturbed single-engine run: the bit-exact answer key."""
+    eng = ServingEngine(cfg, params, _engine_factory(cfg)())
+    for i, p in enumerate(prompts):
+        eng.submit(Request(f"q{i}", "T", list(p), max_new))
+    eng.run(max_ticks=600)
+    return {
+        rid: list(r.generated) for rid, r in eng.requests.items()
+    }
+
+
+def _assert_one_tier_per_page(cl):
+    """The page table and the compressed tier store must never both
+    hold the same (request, page): DEMOTED table entries have a block,
+    resident entries must not."""
+    for eng in cl.replicas:
+        tiers = eng.kv.tiers
+        block_keys = set()
+        if tiers is not None:
+            block_keys = {
+                k for k in tiers._blocks if k and k[0] == "req"
+            }
+        for rid in eng.requests:
+            table = eng.kv.page_table(rid)
+            for idx, pid in enumerate(table):
+                key = ("req", rid, idx)
+                if pid == DEMOTED:
+                    assert key in block_keys, (
+                        f"{key} demoted but no tier block"
+                    )
+                else:
+                    assert key not in block_keys, (
+                        f"{key} resident in HBM AND in a tier"
+                    )
+
+
+class TestCrashRestoreProperties:
+    @settings(max_examples=5, deadline=None)
+    @given(
+        ops=st.lists(
+            st.tuples(
+                st.sampled_from(["step", "crash"]),
+                st.integers(min_value=0, max_value=7),
+            ),
+            min_size=3,
+            max_size=10,
+        )
+    )
+    def test_random_crash_restore_stream(self, small_model, ops):
+        """Random step/crash interleavings against periodic KV
+        checkpoints: tokens stay bit-identical to an undisturbed run,
+        restored replay is strictly cheaper than replay-from-zero, and
+        no page ever sits in two tiers at once."""
+        cfg, params = small_model
+        prompts = _prompts(3)
+        max_new = 8
+        reference = _reference_tokens(cfg, params, prompts, max_new)
+        ckpt_dir = tempfile.mkdtemp(prefix="ckpt_prop_")
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=2,
+                max_retries=4, retry_backoff_ticks=1.0,
+                max_backoff_ticks=2.0,
+                checkpoint_every_ticks=3, checkpoint_dir=ckpt_dir,
+            ),
+        )
+        for i, p in enumerate(prompts):
+            cl.submit(Request(f"q{i}", "T", list(p), max_new))
+        # collect tokens AT completion — a later crash of the same
+        # replica would otherwise discard the finished history
+        final = {}
+
+        def harvest():
+            for eng in cl.replicas:
+                for rid, r in eng.requests.items():
+                    if r.state == "done":
+                        final[rid] = list(r.generated)
+
+        n_crashes = 0
+        for kind, arg in ops:
+            if kind == "step":
+                for _ in range(1 + arg):
+                    cl.step()
+                    harvest()
+            elif kind == "crash" and n_crashes < 2:
+                n_crashes += 1
+                cl.crash_replica(arg % 2)
+                _assert_one_tier_per_page(cl)
+        while cl.has_pending and cl.tick < 800:
+            cl.step()
+            harvest()
+        _assert_one_tier_per_page(cl)
+        assert sorted(cl.completed) == [f"q{i}" for i in range(3)]
+        # (1) bit-identical greedy tokens, crash or no crash
+        for rid, toks in final.items():
+            assert toks == reference[rid], f"{rid} diverged after restore"
+        # (2) restored replay strictly below the from-zero counterfactual
+        if cl.ckpt_restored_tokens > 0:
+            assert (
+                cl.ckpt_replayed_tokens < cl.ckpt_from_zero_tokens
+            ), "a covering checkpoint must beat a cold reset"
+        # conservation: kept + replayed work covers the from-zero work
+        if cl.ckpt_restored_requests:
+            assert (
+                cl.ckpt_restored_tokens + cl.ckpt_replayed_tokens
+                >= cl.ckpt_from_zero_tokens
+            )
+
+    def test_checkpoint_file_roundtrip(self, small_model, tmp_path):
+        """_write_checkpoint / _read_checkpoint invert each other: rid,
+        pos, generated, and every page payload come back bit-exact from
+        the self-describing file."""
+        cfg, params = small_model
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=1,
+                checkpoint_every_ticks=4,
+                checkpoint_dir=str(tmp_path),
+            ),
+        )
+        for i, p in enumerate(_prompts(2)):
+            cl.submit(Request(f"q{i}", "T", list(p), 12))
+        for _ in range(6):
+            cl.step()
+        snap = cl.replicas[0].snapshot_kv()
+        assert snap is not None and snap["reqs"]
+        cl._write_checkpoint(0, snap)
+        back = cl._read_checkpoint(0)
+        for entry in snap["reqs"]:
+            rid = entry["rid"]
+            assert back[rid]["pos"] == entry["pos"]
+            assert back[rid]["generated"] == [
+                int(t) for t in entry["generated"]
+            ]
+            for idx, payload in entry["pages"].items():
+                np.testing.assert_array_equal(
+                    back[rid]["pages"][idx], np.asarray(payload)
+                )
+
+    def test_checkpoint_pruning_keeps_newest(self, small_model, tmp_path):
+        cfg, params = small_model
+        cl = ServingCluster(
+            cfg, params,
+            ClusterConfig(
+                engine=_engine_factory(cfg), n_replicas=1,
+                checkpoint_every_ticks=2,
+                checkpoint_dir=str(tmp_path), checkpoint_keep=2,
+            ),
+        )
+        for i, p in enumerate(_prompts(2)):
+            cl.submit(Request(f"q{i}", "T", list(p), 20))
+        for _ in range(12):
+            cl.step()
+        files = sorted(os.listdir(tmp_path / "r0"))
+        assert len(files) <= 2
+        assert cl.ckpt_saved > 2  # older files were written, then pruned
+
+
+class TestDeltaMigration:
+    def test_delta_cutover_ships_fewer_bytes_than_full(self, small_model):
+        """Engine-level delta protocol: a cutover against a pre-copy
+        baseline charges only the dirty pages — strictly below the
+        monolithic counterfactual once clean pages exist — and the
+        merged payloads still cover the whole resident set."""
+        cfg, params = small_model
+        eng = ServingEngine(cfg, params, _engine_factory(cfg)())
+        eng.submit(Request("m0", "T", list(range(2, 20)), 24))
+        for _ in range(6):
+            eng.step()
+        snap = eng.precopy_request("m0")
+        assert snap is not None and snap.payloads
+        for _ in range(3):  # keep serving: only the tail page dirties
+            eng.step()
+        ticket = eng.export_request("m0", baseline=snap)
+        assert ticket is not None
+        assert ticket.full_wire_bytes > 0, "delta path must have run"
+        assert ticket.wire_bytes < ticket.full_wire_bytes
+        assert ticket.precopy_wire_bytes == snap.wire_bytes
+        assert 0 < ticket.delta_pages < len(ticket.page_payloads)
+        # the merged set covers everything a monolithic copy would
+        req = ticket.request
+        pages_needed = -(-req.pos // eng.kv.page_tokens)
+        assert all(
+            i in ticket.page_payloads for i in range(pages_needed)
+        )
+
+    def test_import_after_delta_cutover_is_bit_exact(self, small_model):
+        """The migrated request continues on the target with the same
+        tokens an undisturbed engine produces."""
+        cfg, params = small_model
+        prompts = _prompts(1)
+        reference = _reference_tokens(cfg, params, prompts, 10)
+        src = ServingEngine(cfg, params, _engine_factory(cfg)())
+        src.submit(Request("q0", "T", list(prompts[0]), 10))
+        for _ in range(4):
+            src.step()
+        snap = src.precopy_request("q0")
+        for _ in range(2):
+            src.step()
+        ticket = src.export_request("q0", baseline=snap)
+        assert ticket is not None
+        dst = ServingEngine(cfg, params, _engine_factory(cfg)())
+        dst.import_request(ticket)
+        dst.run(max_ticks=200)
+        assert list(dst.requests["q0"].generated) == reference["q0"]

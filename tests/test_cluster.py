@@ -171,7 +171,7 @@ class TestStragglerPass:
         for i in range(4):
             cl.submit(Request(f"A{i}", "A", list(range(10, 18)), 24))
         cl.set_slowdown(0, 8.0)
-        out = cl.run(max_ticks=400)
+        out = cl.run(max_ticks=400).extras
         assert out["straggler_flags"] >= 1
         assert out["migrations"]["completed"] >= 1
         assert out["completed"] == 4 and out["failed"] == 0
@@ -214,7 +214,7 @@ class TestStragglerPass:
         )
         for i in range(4):
             cl.submit(Request(f"A{i}", "A", list(range(10, 18)), 12))
-        out = cl.run(max_ticks=400)
+        out = cl.run(max_ticks=400).extras
         assert out["migrations"]["started"] == 0
         assert out["completed"] == 4
 
@@ -248,7 +248,7 @@ class TestMigrationRoundTrip:
         ticket, _ = cl._inflight["r"]
         assert ticket.raw_bytes == pytest.approx(src_bytes)
         assert 0 < ticket.wire_bytes < ticket.raw_bytes  # compressed wire
-        out = cl.run(max_ticks=300)
+        out = cl.run(max_ticks=300).extras
         tgt = cl._home["r"]
         assert tgt != src
         tgt_req = cl.replicas[tgt].requests["r"]
@@ -291,7 +291,7 @@ class TestMigrationRoundTrip:
         assert suspended is not None, "pressure never suspended anyone"
         rid, src = suspended
         assert cl.migrate(rid, src)
-        out = cl.run(max_ticks=500)
+        out = cl.run(max_ticks=500).extras
         assert out["completed"] == 3 and out["failed"] == 0
         tgt = cl._home[rid]
         assert cl.replicas[tgt].requests[rid].state == "done"
@@ -313,7 +313,7 @@ class TestMigrationRoundTrip:
         assert cl.migrate(rid, 0)
         ticket, _ = cl._inflight[rid]
         assert ticket.wire_bytes == 0.0 and ticket.raw_bytes == 0.0
-        out = cl.run(max_ticks=300)
+        out = cl.run(max_ticks=300).extras
         assert out["completed"] == 4
 
 
@@ -335,7 +335,7 @@ class TestCrashRecovery:
             cl.step()
         requeued = cl.crash_replica(0)
         assert requeued > 0
-        out = cl.run(max_ticks=600)
+        out = cl.run(max_ticks=600).extras
         assert out["completed"] == 4
         assert out["failed"] == 0 and out["lost"] == 0
         assert out["crashes"] == 1 and out["requeued"] == requeued
@@ -355,7 +355,7 @@ class TestCrashRecovery:
         pre = len(cl.replicas[0].requests["x"].generated)
         assert pre > 0  # it really did generate before the crash
         cl.crash_replica(0)
-        out = cl.run(max_ticks=300)
+        out = cl.run(max_ticks=300).extras
         assert out["completed"] == 1
         assert out["tokens_generated"] == 12  # not 12 + pre
 
@@ -378,7 +378,7 @@ class TestCrashRecovery:
         for _ in range(4):
             cl.step()
         cl.crash_replica(0)  # budget exhausted: lost, recorded as failed
-        out = cl.run(max_ticks=200)
+        out = cl.run(max_ticks=200).extras
         assert out["lost"] == 1
         assert out["failed"] == 1
         assert out["completed"] == 0
@@ -431,7 +431,7 @@ class TestNoLossNoDuplication:
             elif kind == "crash" and n_crashes < 2:
                 n_crashes += 1
                 cl.crash_replica(arg % 2)
-        out = cl.run(max_ticks=500)
+        out = cl.run(max_ticks=500).extras
         assert out["in_flight_unfinished"] == 0
         # terminal exactly once, somewhere
         terminal = sorted(cl.completed + cl.failed)

@@ -343,17 +343,16 @@ class TestServeReport:
         )
         assert back.outcomes[2].reason == rep.outcomes[2].reason
 
-    def test_dict_shim_warns_once_per_access(self):
+    def test_dict_shim_removed(self):
+        """The one-release ``__getitem__`` compat shim is gone: legacy
+        keys are reached explicitly through ``.extras`` only."""
         rep = self._report()
         rep.extras = {"completed": 2, "ticks": 10}
-        with pytest.warns(DeprecationWarning, match="ServeReport"):
-            assert rep["completed"] == 2
-        with pytest.warns(DeprecationWarning):
-            assert rep.get("missing", 5) == 5
-        with pytest.warns(DeprecationWarning):
-            assert "ticks" in rep
-        with pytest.warns(DeprecationWarning):
-            assert set(rep.keys()) == {"completed", "ticks"}
+        with pytest.raises(TypeError):
+            rep["completed"]
+        assert not hasattr(rep, "get")
+        assert not hasattr(rep, "keys")
+        assert rep.extras["completed"] == 2
 
     def test_tenant_summary(self):
         assert self._report().tenant_summary() == {

@@ -32,7 +32,6 @@ def test_sweep_covers_known_subsystems():
     sweep silently passing on an empty/namespace-mangled layout)."""
     mods = set(_all_modules())
     for required in (
-        "repro.core.scheduler",
         "repro.dist.sharding",
         "repro.dist.compression",
         "repro.dist.fault",

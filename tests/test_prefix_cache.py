@@ -330,7 +330,7 @@ class TestEnginePrefixSharing:
         eng.submit(Request("cold", "T", prompt, 6))
         eng.run(max_ticks=100)
         eng.submit(Request("warm", "T", prompt, 6))
-        out = eng.run(max_ticks=200)
+        out = eng.run(max_ticks=200).extras
         assert (
             eng.requests["warm"].generated == eng.requests["cold"].generated
         )
@@ -363,7 +363,7 @@ class TestEnginePrefixSharing:
             eng.submit(Request("a", "T", base, 4))
             eng.run(max_ticks=100)
             eng.submit(Request("b", "T", longer, 4))
-            out = eng.run(max_ticks=200)
+            out = eng.run(max_ticks=200).extras
             outs[mode] = (eng.requests["b"].generated, out)
         assert outs["cache"][0] == outs["nocache"][0]
         assert outs["cache"][1]["prefix_cache"]["hit_tokens"] >= len(base)
@@ -397,7 +397,7 @@ class TestEnginePrefixSharing:
                 eng.submit(
                     Request(f"u{i}", f"tenant{i}", system + [100 + i], 4)
                 )
-            out = eng.run(max_ticks=300)
+            out = eng.run(max_ticks=300).extras
             assert out["failed"] == 0 and out["completed"] == 4
             peaks[mode] = out["peak_used_fraction"]
             rates[mode] = out["prefix_cache"].get("token_hit_rate", 0.0)
@@ -429,7 +429,7 @@ class TestEnginePrefixSharing:
                     4,
                 )
             )
-        out = eng.run(max_ticks=400)
+        out = eng.run(max_ticks=400).extras
         assert out["failed"] == 0 and out["completed"] == 4
         assert out["prefix_cache"]["evictions"] > 0
         assert eng.kv.overflow_pages == 0

@@ -263,19 +263,22 @@ class TestPriorityPolicy:
 
 
 class TestShimCompatibility:
-    def test_core_scheduler_reexports_with_deprecation(self):
+    def test_core_scheduler_shim_removed(self):
+        """The one-release ``repro.core.scheduler`` re-export shim is
+        gone; the canonical names live in :mod:`repro.sched` (and
+        ``repro.core`` still re-exports them for its own API)."""
         import importlib
         import sys
 
         sys.modules.pop("repro.core.scheduler", None)
-        with pytest.warns(DeprecationWarning, match="repro.sched"):
-            shim = importlib.import_module("repro.core.scheduler")
+        with pytest.raises(ModuleNotFoundError):
+            importlib.import_module("repro.core.scheduler")
+        import repro.core as core
         from repro.sched.murs import MursPolicy as MP
         from repro.sched.protocol import SchedulingDecision
 
-        assert shim.MursScheduler is MP
-        assert shim.MursConfig is MursConfig
-        assert shim.SchedulingDecision is SchedulingDecision
+        assert core.MursScheduler is MP
+        assert core.MursConfig is MursConfig
         assert SchedulingDecision().is_noop
 
     def test_serving_config_preset(self):

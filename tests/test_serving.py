@@ -123,7 +123,7 @@ class TestChunkedPrefill:
             # the decode batch genuinely overlaps an in-flight prefill
             eng.submit(Request("short", "U", list(range(3, 7)), 8))
             eng.submit(Request("long", "T", prompt, 8))
-            out = eng.run(max_ticks=100)
+            out = eng.run(max_ticks=100).extras
             outs[name] = (
                 eng.requests["long"].generated,
                 eng.requests["short"].generated,
@@ -168,7 +168,7 @@ class TestEngineUnderPressure:
             )
             for r in _requests():
                 eng.submit(r)
-            out[mode] = eng.run(max_ticks=400)
+            out[mode] = eng.run(max_ticks=400).extras
         return out
 
     def test_fair_spills_under_pressure(self, results):
@@ -202,7 +202,7 @@ class TestEngineUnderPressure:
             )
             for r in _requests():
                 eng.submit(r)
-            out[mode] = eng.run(max_ticks=400)
+            out[mode] = eng.run(max_ticks=400).extras
         assert out["fair"]["failed"] > 0
         assert out["murs"]["failed"] == 0
         assert out["murs"]["completed"] == 7
@@ -218,7 +218,7 @@ class TestEngineUnderPressure:
         )
         for r in _requests():
             eng.submit(r)
-        out = eng.run(max_ticks=400)
+        out = eng.run(max_ticks=400).extras
         assert out["failed"] == 0
         assert out["suspensions"] == 0
         assert out["completed"] == 7
@@ -269,7 +269,7 @@ class TestMetricPopulations:
             EngineConfig(n_slots=2, max_seq=64, hbm_capacity_bytes=1e12),
         )
         eng.submit(Request("ok", "T", list(range(4)), 4))
-        out = eng.run(max_ticks=100)
+        out = eng.run(max_ticks=100).extras
         assert len(out["ttft_ticks"]) == 1
         assert out["ttft_failed_ticks"] == []
         # a request that produced a first token and then failed must land
@@ -278,7 +278,7 @@ class TestMetricPopulations:
         shed.state = "failed"
         shed.first_token_tick = 7
         eng.requests["shed"] = shed
-        out = eng.run(max_ticks=eng.tick)
+        out = eng.run(max_ticks=eng.tick).extras
         assert len(out["ttft_ticks"]) == 1
         assert out["ttft_failed_ticks"] == [7]
         assert len(out["ttft_ticks"]) == len(out["latency_ticks"])
@@ -296,7 +296,7 @@ class TestMemoryModelClassification:
                          scheduler=MursConfig(period=1.0)),
         )
         eng.submit(Request("r", "T", list(range(8)), 20))
-        out = eng.run(max_ticks=200)
+        out = eng.run(max_ticks=200).extras
         assert out["memory_models"]["r"] == "linear"
 
     def test_fair_offloads_murs_avoids(self, small_model):
@@ -317,7 +317,7 @@ class TestMemoryModelClassification:
                      for i in range(2)]
             for r in reqs:
                 eng.submit(r)
-            out = eng.run(max_ticks=600)
+            out = eng.run(max_ticks=600).extras
             counts[mode] = out
         assert counts["fair"]["offload_events"] > 0
         assert (

@@ -460,7 +460,7 @@ class TestOvercommitResolutionRegression:
         )
         eng.submit(Request("r0", "T", list(range(6)), 4))
         eng.submit(Request("r1", "U", list(range(8)), 4))
-        out = eng.run(max_ticks=200)
+        out = eng.run(max_ticks=200).extras
         assert out["failed"] == 0 and out["completed"] == 2
         assert eng.kv.used_fraction == 0.0
 
@@ -484,7 +484,7 @@ class TestEngineTiering:
         )
         for i in range(3):
             eng.submit(Request(f"a{i}", "A", list(range(10, 18)), 30))
-        out = eng.run(max_ticks=600)
+        out = eng.run(max_ticks=600).extras
         assert out["failed"] == 0 and out["completed"] == 3
         assert out["offload_events"] > 0
         assert out["tiers"]["disk_spill_bytes"] > 0
@@ -509,7 +509,7 @@ class TestEngineTiering:
         )
         for i in range(3):
             eng.submit(Request(f"a{i}", "A", list(range(10, 18)), 30))
-        out = eng.run(max_ticks=600)
+        out = eng.run(max_ticks=600).extras
         assert out["failed"] == 0 and out["completed"] == 3
         assert out["offload_events"] == 0, "reactive path must stay silent"
         assert out["proactive_demotions"] > 0, "the mechanism must fire"

@@ -1,0 +1,224 @@
+"""Documentation consistency gate: links, § references, coverage.
+
+CI's ``docs`` job runs this on every push.  Four checks, all cheap and
+all hard failures:
+
+1. **Relative links resolve.**  Every ``[text](path)`` in the repo's
+   markdown whose target is a relative path (optionally with a
+   ``#fragment``) must point at an existing file or directory.
+   External URLs and pure in-page anchors are skipped.
+
+2. **§ references resolve.**  Markdown prose leans on ``DESIGN.md``
+   section numbers ("see §7", "DESIGN.md §11").  Every ``§N`` cited in
+   a markdown file must correspond to an actual ``## N.`` header in
+   DESIGN.md — a renumbering that orphans citations fails here, not in
+   a reviewer's head.  (``§II``-style Roman numerals cite the *paper*
+   and are exempt; ranges like ``§§2–8`` check both endpoints.)
+
+3. **Docstring coverage floor.**  Every public module, class, and
+   public method/function under ``repro.serve`` and
+   ``repro.checkpoint`` must carry a docstring — the two packages the
+   operations guide documents.  Parsed with ``ast`` (no imports, no
+   jax): underscore names, dunders except ``__init__``'s class, and
+   nested function bodies are exempt.
+
+4. **BENCH_serve.json keys are documented.**  Every leaf metric name in
+   the committed ``BENCH_baseline.json`` (same shape the live record
+   has) must appear in ``docs/OPERATIONS.md`` — a new benchmark key
+   without operator documentation fails the gate that merges it.
+
+Usage::
+
+    python tools/check_docs.py [--root .]
+"""
+
+import argparse
+import ast
+import json
+import os
+import re
+import sys
+
+MARKDOWN_FILES = (
+    "README.md",
+    "DESIGN.md",
+    "ROADMAP.md",
+    "docs/OPERATIONS.md",
+)
+
+#: packages under the docstring-coverage floor (src/-relative)
+COVERED_PACKAGES = ("src/repro/serve", "src/repro/checkpoint")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SECTION_REF_RE = re.compile(r"§§?(\d+)(?:[–-](\d+))?")
+DESIGN_HEADER_RE = re.compile(r"^## (\d+)\.", re.MULTILINE)
+
+
+def _strip_code_blocks(text: str) -> str:
+    """Fenced code blocks may contain ``](`` sequences and § examples
+    that are not prose citations."""
+    return re.sub(r"```.*?```", "", text, flags=re.DOTALL)
+
+
+def check_links(root: str) -> list:
+    errors = []
+    for md in MARKDOWN_FILES:
+        path = os.path.join(root, md)
+        if not os.path.exists(path):
+            continue
+        text = _strip_code_blocks(open(path, encoding="utf-8").read())
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), rel)
+            )
+            if not os.path.exists(resolved):
+                errors.append(f"{md}: broken relative link -> {target}")
+    return errors
+
+
+def check_section_refs(root: str) -> list:
+    design = open(
+        os.path.join(root, "DESIGN.md"), encoding="utf-8"
+    ).read()
+    known = {int(n) for n in DESIGN_HEADER_RE.findall(design)}
+    errors = []
+    for md in MARKDOWN_FILES:
+        path = os.path.join(root, md)
+        if not os.path.exists(path):
+            continue
+        text = _strip_code_blocks(open(path, encoding="utf-8").read())
+        for lineno, line in enumerate(text.splitlines(), 1):
+            for m in SECTION_REF_RE.finditer(line):
+                cited = {int(m.group(1))}
+                if m.group(2):
+                    cited.add(int(m.group(2)))
+                for n in cited - known:
+                    errors.append(
+                        f"{md}:{lineno}: cites §{n} but DESIGN.md has "
+                        f"no '## {n}.' header"
+                    )
+    return errors
+
+
+def _missing_docstrings(path: str, modname: str) -> list:
+    tree = ast.parse(open(path, encoding="utf-8").read(), filename=path)
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{modname}: module docstring")
+
+    def public(name: str) -> bool:
+        return not name.startswith("_") or name == "__init__"
+
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and public(node.name):
+            if ast.get_docstring(node) is None:
+                missing.append(f"{modname}.{node.name}: class docstring")
+            for sub in node.body:
+                if (
+                    isinstance(
+                        sub, (ast.FunctionDef, ast.AsyncFunctionDef)
+                    )
+                    and public(sub.name)
+                    and sub.name != "__init__"
+                    and ast.get_docstring(sub) is None
+                    # a @property forwarding one attribute documents
+                    # itself; still require docstrings on real logic
+                    and len(sub.body) > 1
+                ):
+                    missing.append(
+                        f"{modname}.{node.name}.{sub.name}: docstring"
+                    )
+        elif isinstance(
+            node, (ast.FunctionDef, ast.AsyncFunctionDef)
+        ) and public(node.name):
+            if ast.get_docstring(node) is None:
+                missing.append(f"{modname}.{node.name}: docstring")
+    return missing
+
+
+def check_docstrings(root: str) -> list:
+    errors = []
+    for pkg in COVERED_PACKAGES:
+        base = os.path.join(root, pkg)
+        for dirpath, _dirnames, filenames in os.walk(base):
+            for fn in sorted(filenames):
+                if not fn.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fn)
+                rel = os.path.relpath(path, os.path.join(root, "src"))
+                modname = rel[:-3].replace(os.sep, ".")
+                errors.extend(_missing_docstrings(path, modname))
+    return errors
+
+
+def _leaf_keys(obj, out):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            if isinstance(v, dict):
+                _leaf_keys(v, out)
+            else:
+                out.add(str(k))
+    return out
+
+
+#: leaf keys that are run parameters / derived micro-detail, not
+#: operator-facing metrics (kernel microbench cells are shape-keyed and
+#: documented as a pattern, not per-cell)
+DOC_EXEMPT = re.compile(
+    r"^(arch|debug|seed|n_requests|n_arrivals|horizon_ticks|"
+    r"service_mode|hbm_capacity_tokens|b\d+_p\d+|us_per_call|max_err|"
+    r"interpret|mean_s|min_s|max_s|source|distinct|paged_decode_ticks)$"
+)
+
+
+def check_bench_keys(root: str) -> list:
+    bench_path = os.path.join(root, "BENCH_baseline.json")
+    ops_path = os.path.join(root, "docs", "OPERATIONS.md")
+    if not os.path.exists(bench_path):
+        return [f"missing {bench_path} (commit the benchmark baseline)"]
+    if not os.path.exists(ops_path):
+        return ["missing docs/OPERATIONS.md"]
+    record = json.load(open(bench_path, encoding="utf-8"))
+    ops = open(ops_path, encoding="utf-8").read()
+    errors = []
+    for key in sorted(_leaf_keys(record, set())):
+        if DOC_EXEMPT.match(key):
+            continue
+        if key not in ops:
+            errors.append(
+                f"BENCH_serve.json key '{key}' is not documented in "
+                "docs/OPERATIONS.md"
+            )
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default=".")
+    args = ap.parse_args(argv)
+    checks = (
+        ("relative links", check_links),
+        ("§ references", check_section_refs),
+        ("docstring coverage", check_docstrings),
+        ("bench-key documentation", check_bench_keys),
+    )
+    failed = False
+    for name, fn in checks:
+        errors = fn(args.root)
+        if errors:
+            failed = True
+            print(f"FAIL {name} ({len(errors)}):", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+        else:
+            print(f"ok   {name}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
