@@ -29,13 +29,21 @@ and per overload front-door mode (fair / murs):
     completed                      higher is better
     throughput_tokens_per_tick     higher is better
 
+and per model-zoo routing mode (fair / murs):
+
+    p99_ticks_to_finish            lower is better (mixed-fleet tail)
+    completed                      higher is better
+
 plus the prefix-cache acceptance bits (hit rate positive, shared peak
 below the no-sharing baseline), the tiering bit (proactive demotion at
 least halves disk spill at equal load), the cluster bits (live
 migration round-trips with nothing lost, a replica crash loses no
 requests, usage-rate placement beats round-robin on p99), and the
 overload bits (usage-rate shedding beats FIFO shedding on goodput at
-equal open-loop load; the door sheds instead of collapsing), and the
+equal open-loop load; the door sheds instead of collapsing), the
+model-zoo bits (every architecture class completes on the mixed fleet,
+the router never places a request on an incapable replica, class-aware
+routing's tail no worse than round-robin's), and the
 elastic bits (a delta cutover ships fewer bytes than a full copy, a
 checkpoint restore replays only the uncovered suffix, autoscaled
 goodput holds against the static fleet) as hard pass/fail rows — those are correctness claims of the artifact, not
@@ -102,6 +110,23 @@ OVERLOAD_GATED = [
 OVERLOAD_WIN_BITS = (
     "goodput_under_overload",
     "shed_not_collapse",
+)
+
+#: model-zoo-leg metrics, gated per routing mode (fair / murs)
+MODEL_ZOO_GATED = [
+    ("p99_ticks_to_finish", "lower_is_better"),
+    ("completed", "higher_is_better"),
+]
+
+#: model-zoo-leg acceptance booleans (hard pass/fail, no threshold):
+#: every architecture class completes its whole stream on the mixed
+#: fleet, the router never places a request on a replica hosting a
+#: different arch (zero misroutes / unroutable), and class-aware
+#: routing's tail is no worse than round-robin's
+MODEL_ZOO_WIN_BITS = (
+    "mixed_fleet_completes_all_archs",
+    "router_never_places_on_incapable_replica",
+    "murs_p99_le_fair_p99",
 )
 
 #: elastic-leg acceptance booleans (hard pass/fail, no threshold): a
@@ -209,6 +234,31 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
                 c_row.get(metric), threshold_pct, rows, failures,
                 none_fails=True,
             )
+    # model-zoo-leg metrics: heterogeneous-fleet tail and completions
+    mz_b = baseline.get("model_zoo", {})
+    mz_c = current.get("model_zoo", {})
+    for mode in ("fair", "murs"):
+        b_row, c_row = mz_b.get(mode), mz_c.get(mode)
+        if not isinstance(b_row, dict) or not isinstance(c_row, dict):
+            continue
+        for metric, direction in MODEL_ZOO_GATED:
+            _compare_row(
+                f"model_zoo.{mode}", metric, direction, b_row.get(metric),
+                c_row.get(metric), threshold_pct, rows, failures,
+                none_fails=True,
+            )
+    # model-zoo acceptance bits: all archs complete on the mixed fleet,
+    # the router respects capability, MURS tail no worse — hard pass/fail
+    mz_wins = mz_c.get("model_zoo_wins", {})
+    for bit in MODEL_ZOO_WIN_BITS:
+        if bit in mz_wins:
+            ok = bool(mz_wins[bit])
+            rows.append(
+                ("model_zoo", bit, True, mz_wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"model_zoo.{bit} is False")
     # overload acceptance bits: MURS shedding beats FIFO shedding on
     # goodput at equal load, and shedding prevents collapse — hard
     # pass/fail

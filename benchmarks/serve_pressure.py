@@ -388,6 +388,144 @@ def _collect_cluster(cfg, params, debug: bool = False) -> dict:
     return legs
 
 
+def _collect_model_zoo(debug: bool = False) -> dict:
+    """The MODEL-ZOO leg: a heterogeneous fleet serving three architecture
+    memory classes at once, fair vs MURS routing at equal load.
+
+    Four replicas host three DIFFERENT models: two run a paged-KV
+    transformer (internlm2 smoke), one a constant-state SSM (mamba2
+    smoke), one a paged-KV MoE (granite smoke).  Every request carries
+    ``Request.model`` and the router may only place it on a replica that
+    hosts that architecture — the capability partition the tentpole
+    added.  The transformer traffic has a real placement choice (two
+    capable replicas); the SSM and MoE tenants each have exactly one, so
+    the leg also proves single-capable routing never misroutes.
+
+    The pair differs ONLY in the router: FairPolicy round-robins inside
+    each capability set, MursPolicy blends slot load with the per-tenant
+    usage-rate EMA — clamped by the DECLARED memory class, so the
+    constant-state tenant's EMA never marks it heavy no matter how long
+    its decodes run.  The acceptance bits: every arch completes all its
+    requests, zero misroutes/unroutable rows ever happen, and the MURS
+    tail is no worse than fair's."""
+    del debug  # sized for signal, small enough for the CI smoke job
+    zoo = [
+        ("internlm2-1.8b", "T"),   # paged_kv — hosted twice (see below)
+        ("mamba2-2.7b", "M"),      # constant_state
+        ("granite-moe-3b-a800m", "E"),   # paged_kv, MoE routing weights
+    ]
+    cfgs = {name: ARCHS[name].smoke() for name, _ in zoo}
+    prms = {
+        name: init_model(cfg, jax.random.PRNGKey(i))
+        for i, (name, cfg) in enumerate(cfgs.items())
+    }
+    tcfg = cfgs["internlm2-1.8b"]
+    cap = max(
+        kv_bytes_per_token(c) * 80 + c.constant_state_bytes()
+        for c in cfgs.values()
+    )
+    models = [
+        (cfgs["internlm2-1.8b"], prms["internlm2-1.8b"]),
+        (cfgs["internlm2-1.8b"], prms["internlm2-1.8b"]),
+        (cfgs["mamba2-2.7b"], prms["mamba2-2.7b"]),
+        (cfgs["granite-moe-3b-a800m"], prms["granite-moe-3b-a800m"]),
+    ]
+
+    def engine_factory():
+        return EngineConfig(
+            n_slots=3, max_seq=64, hbm_capacity_bytes=cap,
+            policy=MursPolicy(MursConfig.for_serving(period=1.0)),
+        )
+
+    def _arrival_stream():
+        t_model = cfgs["internlm2-1.8b"].name
+        m_model = cfgs["mamba2-2.7b"].name
+        e_model = cfgs["granite-moe-3b-a800m"].name
+        evs, t = [], 0
+        for i in range(4):
+            evs.append((t, Request(f"T{i}", "T", list(range(10, 18)), 24,
+                                   model=t_model)))
+            evs.append((t + 1, Request(f"M{i}", "M", list(range(30, 36)), 8,
+                                       model=m_model)))
+            if i < 3:
+                evs.append((t + 1, Request(f"E{i}", "E", list(range(50, 56)),
+                                           8, model=e_model)))
+            t += 2
+        return evs
+
+    def _run(router):
+        cl = ServingCluster(
+            tcfg, prms["internlm2-1.8b"],
+            ClusterConfig(
+                engine=engine_factory, n_replicas=4, router=router,
+                net_bytes_per_tick=kv_bytes_per_token(tcfg) * 16,
+            ),
+            models=models,
+        )
+        evs, k = _arrival_stream(), 0
+        while cl.tick < 600 and (k < len(evs) or cl.has_pending):
+            while k < len(evs) and evs[k][0] <= cl.tick:
+                cl.submit(evs[k][1])
+                k += 1
+            cl.step()
+        rep = cl.run(max_ticks=600)
+        out = rep.extras
+        lat = out["latency_ticks"]
+        return {
+            "completed": rep.completed,
+            "failed": rep.failed,
+            "unroutable": out["unroutable"],
+            "misroutes": out["misroutes"],
+            "hosted_models": out["hosted_models"],
+            "makespan_ticks": out["ticks"],
+            "p50_ticks_to_finish": _percentile(lat, 0.50),
+            "p99_ticks_to_finish": _percentile(lat, 0.99),
+            "per_model": rep.model_summary(),
+        }
+
+    legs = {
+        "fair": _run(FairPolicy()),
+        "murs": _run(MursPolicy(MursConfig.for_serving(period=1.0))),
+    }
+    n = len(_arrival_stream())
+    arch_names = [cfgs[name].name for name, _ in zoo]
+    legs["n_requests"] = n
+    legs["fleet"] = {
+        "replicas": [c.name for c, _ in models],
+        "memory_classes": {
+            cfgs[name].name: cfgs[name].memory_class() for name, _ in zoo
+        },
+    }
+    fair, murs = legs["fair"], legs["murs"]
+
+    def _all_archs_complete(row):
+        per = row["per_model"]
+        return row["completed"] == n and all(
+            per.get(a, {}).get("completed", 0) > 0 for a in arch_names
+        )
+
+    legs["model_zoo_wins"] = {
+        # the ISSUE's acceptance criteria, recorded in the artifact:
+        # every architecture class completes its whole stream, both ways
+        "mixed_fleet_completes_all_archs": (
+            _all_archs_complete(fair) and _all_archs_complete(murs)
+        ),
+        # no request was ever handed to a replica hosting a different
+        # arch (engine-level misroute counter) or dropped as unroutable
+        "router_never_places_on_incapable_replica": (
+            fair["misroutes"] == 0 and murs["misroutes"] == 0
+            and fair["unroutable"] == 0 and murs["unroutable"] == 0
+        ),
+        # class-aware routing's tail is no worse than round-robin's
+        "murs_p99_le_fair_p99": (
+            murs["p99_ticks_to_finish"] is not None
+            and fair["p99_ticks_to_finish"] is not None
+            and murs["p99_ticks_to_finish"] <= fair["p99_ticks_to_finish"]
+        ),
+    }
+    return legs
+
+
 def _collect_elastic(cfg, params, debug: bool = False) -> dict:
     """The ELASTIC leg: autoscaling + delta migration + checkpointing
     against the diurnal trace, vs a static fleet at equal peak HBM.
@@ -792,6 +930,9 @@ def collect(debug: bool = False) -> dict:
     # cluster leg: usage-rate placement vs round-robin across replicas,
     # with live migration off a straggler and crash-requeue recovery
     record["cluster"] = _collect_cluster(cfg, params, debug)
+    # model-zoo leg: a heterogeneous fleet (paged-KV transformer + MoE +
+    # constant-state SSM) behind the capability-aware router, fair vs MURS
+    record["model_zoo"] = _collect_model_zoo(debug)
     # elastic leg: autoscaling + delta migration + checkpoint restore on
     # the diurnal trace, vs a static fleet at equal peak HBM
     record["elastic"] = _collect_elastic(cfg, params, debug)
@@ -904,6 +1045,26 @@ def main() -> dict:
          "KV extracted, moved compressed, re-installed — nothing lost")
     emit("serve.cluster.crash_no_loss", int(wins["crash_no_loss"]),
          "replica crash requeues its requests instead of losing them")
+    mz = record["model_zoo"]
+    for mode in ("fair", "murs"):
+        row = mz[mode]
+        emit(f"serve.model_zoo.{mode}.completed", row["completed"],
+             f"of {mz['n_requests']} requests across 3 architectures")
+        emit(f"serve.model_zoo.{mode}.p99_ticks", row["p99_ticks_to_finish"])
+        emit(f"serve.model_zoo.{mode}.unroutable", row["unroutable"],
+             "requests with no capable replica (must be 0 here)")
+        emit(f"serve.model_zoo.{mode}.misroutes", row["misroutes"],
+             "requests landed on a replica hosting a different arch")
+    mw = mz["model_zoo_wins"]
+    emit("serve.model_zoo.mixed_fleet_completes_all_archs",
+         int(mw["mixed_fleet_completes_all_archs"]),
+         "every architecture class completes its whole stream, both routers")
+    emit("serve.model_zoo.router_never_places_on_incapable_replica",
+         int(mw["router_never_places_on_incapable_replica"]),
+         "zero misroutes and zero unroutable rows in either leg")
+    emit("serve.model_zoo.murs_p99_le_fair_p99",
+         int(mw["murs_p99_le_fair_p99"]),
+         "class-aware routing's tail no worse than round-robin's")
     el = record["elastic"]
     for mode in ("elastic", "static"):
         row = el[mode]

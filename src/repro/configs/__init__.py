@@ -2,7 +2,16 @@
 
 from typing import Dict
 
-from .base import ArchConfig, MLAConfig, MoEConfig, SSMConfig, ShapeConfig, SHAPES
+from .base import (
+    ArchConfig,
+    MEMORY_CLASSES,
+    MLAConfig,
+    MoEConfig,
+    ModelSpec,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+)
 from .granite_moe_3b_a800m import CONFIG as granite_moe_3b_a800m
 from .deepseek_v2_236b import CONFIG as deepseek_v2_236b
 from .internlm2_1_8b import CONFIG as internlm2_1_8b
@@ -39,6 +48,8 @@ def get_arch(name: str) -> ArchConfig:
 
 __all__ = [
     "ArchConfig",
+    "MEMORY_CLASSES",
+    "ModelSpec",
     "MoEConfig",
     "MLAConfig",
     "SSMConfig",

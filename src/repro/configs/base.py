@@ -71,6 +71,21 @@ class SSMConfig:
         return self.d_inner(d_model) // self.head_dim
 
 
+# --------------------------------------------------------- memory classes
+#: how an architecture's per-request serving state grows (DESIGN.md §12):
+#: ``paged_kv`` grows linearly with context (pool pages), ``constant_state``
+#: is O(1) regardless of context (mamba conv+SSD state, sliding windows),
+#: ``encoder_decoder`` adds a one-shot encoder-side block at prefill on top
+#: of decoder KV, and ``zero_kv`` holds no serving state at all (degenerate
+#: configs; useful as the zero-pool control).
+MEMORY_CLASSES: Tuple[str, ...] = (
+    "paged_kv",
+    "constant_state",
+    "encoder_decoder",
+    "zero_kv",
+)
+
+
 # ------------------------------------------------------------- arch config
 @dataclass(frozen=True)
 class ArchConfig:
@@ -214,6 +229,96 @@ class ArchConfig:
             counts[b] = counts.get(b, 0) + 1
         return counts
 
+    # ----------------------------------------------------- serving byte model
+    def kv_bytes_per_token(self, dtype_bytes: int = 2) -> float:
+        """Marginal HBM bytes appended per decoded token — the pool-page
+        growth rate the paged KV manager allocates against.
+
+        Full-attention blocks append one K+V (or one MLA latent) per
+        token; local/sliding-window blocks are bounded by the window and
+        mamba blocks by their state, so both contribute 0 here (their
+        bytes live in :meth:`constant_state_bytes`)."""
+        counts = self._block_counts()
+        per_tok = 0.0
+        if self.mla is not None:
+            lat = self.mla.kv_lora_rank + self.mla.qk_rope_head_dim
+            per_tok += (
+                counts.get("attn", 0) + counts.get("local_attn", 0)
+            ) * lat * dtype_bytes
+        else:
+            kv = 2 * self.n_kv_heads * self.head_dim * dtype_bytes
+            per_tok += counts.get("attn", 0) * kv
+            per_tok += counts.get("shared_attn", 0) * kv
+        return per_tok
+
+    def constant_state_bytes(self, dtype_bytes: int = 2) -> float:
+        """Fixed per-request state bytes, independent of context length:
+        mamba conv tail + SSD state (f32), and sliding-window KV rings
+        for non-MLA local-attention blocks."""
+        counts = self._block_counts()
+        total = 0.0
+        if self.ssm is not None and counts.get("mamba", 0):
+            di = self.ssm.d_inner(self.d_model)
+            conv = (
+                (self.ssm.d_conv - 1)
+                * (di + 2 * self.ssm.d_state)
+                * dtype_bytes
+            )
+            state = (
+                self.ssm.n_heads(self.d_model)
+                * self.ssm.head_dim
+                * self.ssm.d_state
+                * 4
+            )
+            total += counts["mamba"] * (conv + state)
+        if self.mla is None and counts.get("local_attn", 0):
+            kv = 2 * self.n_kv_heads * self.head_dim * dtype_bytes
+            total += counts["local_attn"] * kv * self.sliding_window
+        return total
+
+    def encoder_bytes(self, prompt_tokens: int, dtype_bytes: int = 2) -> float:
+        """One-shot encoder-side bytes an encoder-decoder pays at prefill:
+        cross-attention K+V over the encoder positions, per encoder layer.
+        0 for decoder-only architectures."""
+        if not self.enc_layers or prompt_tokens <= 0:
+            return 0.0
+        enc_positions = max(1, prompt_tokens // max(1, self.enc_seq_divisor))
+        kv = 2 * self.n_kv_heads * self.head_dim * dtype_bytes
+        return float(self.enc_layers * enc_positions * kv)
+
+    def context_bytes(self, n_tokens: int, dtype_bytes: int = 2) -> float:
+        """Total per-request serving bytes at a context of ``n_tokens`` —
+        linear term + constant state + encoder side.  Monotone
+        non-decreasing in ``n_tokens`` for every architecture (the smoke
+        test's invariant)."""
+        n = max(0, n_tokens)
+        return (
+            self.kv_bytes_per_token(dtype_bytes) * n
+            + self.constant_state_bytes(dtype_bytes)
+            + self.encoder_bytes(n, dtype_bytes)
+        )
+
+    def memory_class(self) -> str:
+        """Which of :data:`MEMORY_CLASSES` this architecture belongs to.
+
+        Encoder-decoder wins over the others (whisper also carries
+        decoder KV); otherwise any linear KV growth makes it
+        ``paged_kv`` (zamba2's shared-attn KV keeps the hybrid here),
+        pure O(1) state is ``constant_state`` (mamba2), and a config
+        with no serving state at all is ``zero_kv``."""
+        if self.enc_layers:
+            return "encoder_decoder"
+        if self.kv_bytes_per_token() > 0:
+            return "paged_kv"
+        if self.constant_state_bytes() > 0:
+            return "constant_state"
+        return "zero_kv"
+
+    def spec(self) -> "ModelSpec":
+        """The frozen :class:`ModelSpec` serving layers key slots,
+        replicas, and policy decisions by."""
+        return ModelSpec.from_config(self)
+
     def _block_params(self, blk: str) -> float:
         d = self.d_model
         hd = self.head_dim
@@ -255,3 +360,48 @@ class ArchConfig:
         else:
             mlp = 3 * d * self.d_ff  # gated (SwiGLU) MLP
         return attn + mlp + 2 * d  # + norms
+
+
+# -------------------------------------------------------------- model spec
+@dataclass(frozen=True)
+class ModelSpec:
+    """The serving identity of one architecture: arch id + memory class +
+    the byte-model scalars every layer above configs keys decisions by
+    (engine admission, pool geometry, policy scoring, cluster routing).
+
+    Derived from :class:`ArchConfig` via :meth:`from_config` /
+    :meth:`ArchConfig.spec`; hashable and frozen so it can key dicts and
+    cross replica boundaries by value."""
+
+    arch: str
+    memory_class: str  # one of MEMORY_CLASSES
+    kv_bytes_per_token: float
+    constant_state_bytes: float
+    enc_layers: int = 0
+    enc_seq_divisor: int = 1
+
+    def __post_init__(self) -> None:
+        if self.memory_class not in MEMORY_CLASSES:
+            raise ValueError(
+                f"{self.arch}: unknown memory class "
+                f"{self.memory_class!r}; expected one of {MEMORY_CLASSES}"
+            )
+
+    @classmethod
+    def from_config(cls, cfg: ArchConfig) -> "ModelSpec":
+        """Snapshot the config's serving-relevant byte model."""
+        return cls(
+            arch=cfg.name,
+            memory_class=cfg.memory_class(),
+            kv_bytes_per_token=cfg.kv_bytes_per_token(),
+            constant_state_bytes=cfg.constant_state_bytes(),
+            enc_layers=cfg.enc_layers,
+            enc_seq_divisor=cfg.enc_seq_divisor,
+        )
+
+    @property
+    def grows_with_context(self) -> bool:
+        """True when per-request bytes scale with context length — the
+        axis MURS usage-rate classification runs on.  A constant-state
+        tenant's demand is flat no matter how long it decodes."""
+        return self.kv_bytes_per_token > 0

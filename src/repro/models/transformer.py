@@ -627,6 +627,17 @@ def paged_decode_supported(cfg: ArchConfig) -> bool:
     )
 
 
+def _quantize_pool_int8(pool: Array):
+    """Per-page absmax int8 quantization of a ``[n, P, hd]`` pool view:
+    returns (codes int8, scales f32 [n]) in the layout
+    :func:`kernels.ops.paged_decode_attention_int8` consumes.  The scale
+    floor keeps all-zero (never-written pad) pages from dividing by 0."""
+    absmax = jnp.max(jnp.abs(pool), axis=(1, 2))
+    scales = jnp.maximum(absmax / 127.0, 1e-8).astype(jnp.float32)
+    codes = jnp.round(pool / scales[:, None, None]).astype(jnp.int8)
+    return codes, scales
+
+
 def decode_step_paged(
     cfg: ArchConfig,
     params,
@@ -642,8 +653,14 @@ def decode_step_paged(
     page_tokens: int,
     n_pool: int,
     interpret: bool,
+    int8: bool = False,
 ):
     """One decode step through :func:`kernels.ops.paged_decode_attention`.
+
+    With ``int8=True`` the gathered pool views are absmax-quantized per
+    page row and attention runs through
+    :func:`kernels.ops.paged_decode_attention_int8` instead — the f32
+    kernel stays available as the differential oracle (``int8=False``).
 
     The per-slot dense caches remain the storage of truth (COW, tier
     promotion and migration all operate on them); this step materializes
@@ -702,9 +719,18 @@ def decode_step_paged(
         k_pool = k_pool.transpose(1, 0, 2, 3).reshape(KV * n_pool, P, hd)
         v_pool = v_pool.transpose(1, 0, 2, 3).reshape(KV * n_pool, P, hd)
         qf = q[:, :, 0, :].reshape(B * H, hd)
-        out = kernel_ops.paged_decode_attention(
-            qf, k_pool, v_pool, table_flat, lens_flat, interpret=interpret
-        )
+        if int8:
+            k_codes, k_scales = _quantize_pool_int8(k_pool)
+            v_codes, v_scales = _quantize_pool_int8(v_pool)
+            out = kernel_ops.paged_decode_attention_int8(
+                qf, k_codes, v_codes, k_scales, v_scales,
+                table_flat, lens_flat, interpret=interpret,
+            )
+        else:
+            out = kernel_ops.paged_decode_attention(
+                qf, k_pool, v_pool, table_flat, lens_flat,
+                interpret=interpret,
+            )
         out = out.reshape(B, 1, H * hd)
         y = jnp.einsum("bsh,hd->bsd", out, ap["wo"])
         x_out = x_in + y

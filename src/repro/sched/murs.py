@@ -44,6 +44,12 @@ if TYPE_CHECKING:
 
 __all__ = ["MursConfig", "MursPolicy"]
 
+#: architecture memory classes whose byte demand does NOT grow with
+#: context length (``configs.MEMORY_CLASSES`` subset): a mamba2 tenant's
+#: state is the same size at token 1 and token 10k, so its usage RATE is
+#: structurally ~zero no matter what the online EMA momentarily reads
+FLAT_CLASSES = ("constant_state", "zero_kv")
+
 
 @dataclass(frozen=True)
 class MursConfig:
@@ -129,6 +135,10 @@ class MursPolicy(BasePolicy):
         #: tenant's pressure score toward uniform.
         self._group_rate: Dict[str, float] = {}
         self._group_seen: Dict[str, float] = {}
+        #: per-group DECLARED architecture memory class (note_group_class)
+        #: — the static prior the online EMA is read through: a group of
+        #: FLAT_CLASSES never counts as high-rate, whatever its EMA says
+        self._group_class: Dict[str, str] = {}
         self._group_rate_horizon: float = 50.0 * max(
             self.period, self.config.resume_immunity
         )
@@ -345,6 +355,23 @@ class MursPolicy(BasePolicy):
     def group_rates(self) -> Dict[str, float]:
         return dict(self._group_rate)
 
+    # ------------------------------------------------------ memory classes
+    def note_group_class(self, group: str, memory_class: str) -> None:
+        """Record the declared architecture class of ``group``'s model —
+        the §III function classes generalized to architectures: the
+        class is knowable BEFORE any request runs, so every rate-driven
+        hook below can clamp a structurally-flat tenant to low-rate even
+        while its EMA is still warming up (or momentarily polluted by
+        its fixed-state registration burst)."""
+        self._group_class[group] = memory_class
+
+    def group_classes(self) -> Dict[str, str]:
+        return dict(self._group_class)
+
+    def _flat_group(self, group: str) -> bool:
+        """True when the group's declared class cannot grow the pool."""
+        return self._group_class.get(group) in FLAT_CLASSES
+
     def shed_order(self, groups, stats) -> List[str]:
         """Shed the highest-usage-rate group FIRST (paper §III at the
         front door): its admitted traffic grows the pool fastest, so
@@ -357,7 +384,12 @@ class MursPolicy(BasePolicy):
 
         def key(g: str):
             row = stats.get(g, {})
-            rate = self._group_rate.get(g, row.get("rate", 0.0))
+            # a structurally flat tenant (mamba / zero-KV) cannot grow the
+            # pool: shedding it buys nothing per §III, so it sheds LAST
+            if self._flat_group(g):
+                rate = 0.0
+            else:
+                rate = self._group_rate.get(g, row.get("rate", 0.0))
             return (
                 -rate,
                 -row.get("demand_bytes", 0.0),
@@ -402,16 +434,25 @@ class MursPolicy(BasePolicy):
         so a replica with a backlog reports pressure ≥ its slot load
         even while its pool is momentarily empty.  FAIR scales on slot
         occupancy; MURS scales on where the bytes are going.
+
+        A replica that DECLARES a flat memory class (constant-state /
+        zero-KV model) contributes its slot occupancy alone: its byte
+        fractions are bounded by construction — its bytes never grow
+        with context, so scaling it is a throughput decision, not a
+        memory-pressure one.
         """
         if not replica_stats:
             return 0.0
         total = 0.0
         for s in replica_stats:
+            slots = min(float(s.get("slot_load", 0.0)), 2.0) / 2.0
+            if str(s.get("memory_class", "")) in FLAT_CLASSES:
+                total += slots
+                continue
             bytes_frac = max(
                 float(s.get("demand_fraction", 0.0)),
                 float(s.get("projected_fraction", 0.0)),
             )
-            slots = min(float(s.get("slot_load", 0.0)), 2.0) / 2.0
             total += max(bytes_frac, slots)
         return min(total / len(replica_stats), 1.0)
 
@@ -419,7 +460,13 @@ class MursPolicy(BasePolicy):
     def _inverse_rate_score(self, group: str) -> float:
         """1 − rate/top over the per-group usage-rate EMA, in [0, 1]:
         LOW-rate tenants score HIGH.  Unseen groups sit in the middle
-        (0.5) so the hint never starves LRU / size tie-breaks."""
+        (0.5) so the hint never starves LRU / size tie-breaks.  A group
+        DECLARED flat (constant-state / zero-KV architecture) pins to
+        1.0: its demand cannot grow, so it is definitively low-rate —
+        its placement reads slot occupancy, its frozen state demotes
+        first, and its (empty) prefix cache never shields anything."""
+        if self._flat_group(group):
+            return 1.0
         rate = self._group_rate.get(group)
         if rate is None or not self._group_rate:
             return 0.5

@@ -149,6 +149,10 @@ class SchedulingPolicy(Protocol):
 
     def group_rates(self) -> Mapping[str, float]: ...
 
+    def note_group_class(self, group: str, memory_class: str) -> None: ...
+
+    def group_classes(self) -> Mapping[str, str]: ...
+
     def cache_pressure(self, group: str) -> float: ...
 
     def demotion_pressure(self, group: str) -> float: ...
@@ -268,6 +272,20 @@ class BasePolicy:
         """The policy's current per-group usage-rate estimates (empty for
         rate-oblivious policies) — what a cluster forwards from replica
         policies into its router."""
+        return {}
+
+    def note_group_class(self, group: str, memory_class: str) -> None:
+        """Declare the ARCHITECTURE memory class of ``group``'s model
+        (one of ``configs.MEMORY_CLASSES``) — the static generalization
+        of the paper's per-API-function classes.  A mamba tenant's byte
+        demand is constant no matter how long its requests run; a
+        long-context transformer tenant's grows linearly.  The base
+        policy is class-oblivious and ignores it."""
+
+    def group_classes(self) -> Mapping[str, str]:
+        """Per-group declared memory classes (empty for class-oblivious
+        policies) — mirrors :meth:`group_rates` for the cluster's
+        forwarding path."""
         return {}
 
     def shed_order(

@@ -211,15 +211,33 @@ class ServingCluster:
     """
 
     def __init__(
-        self, cfg: ArchConfig, params: Any, ccfg: ClusterConfig
+        self,
+        cfg: ArchConfig,
+        params: Any,
+        ccfg: ClusterConfig,
+        models: Optional[List[Tuple[ArchConfig, Any]]] = None,
     ) -> None:
         self.cfg = cfg
         self.params = params
         self.ccfg = ccfg
         self.router: SchedulingPolicy = ccfg.router or FairPolicy()
+        #: per-replica hosted model — ``models[i]`` is the (ArchConfig,
+        #: params) replica ``i`` serves.  Default: every replica hosts
+        #: the cluster's single model (the homogeneous fleet).  A
+        #: heterogeneous model zoo passes one entry per replica; the
+        #: router then only places a request on replicas hosting its
+        #: declared ``Request.model``.
+        if models is None:
+            models = [(cfg, params)] * ccfg.n_replicas
+        if len(models) != ccfg.n_replicas:
+            raise ValueError(
+                f"models must have one (cfg, params) entry per replica: "
+                f"got {len(models)} for {ccfg.n_replicas} replicas"
+            )
+        self._models: List[Tuple[ArchConfig, Any]] = list(models)
         self.replicas: List[ServingEngine] = [
-            ServingEngine(cfg, params, ccfg.engine())
-            for _ in range(ccfg.n_replicas)
+            ServingEngine(mcfg, mparams, ccfg.engine())
+            for mcfg, mparams in self._models
         ]
         self.link = PcieLink()  # the inter-replica network, same semantics
         self.detector = StragglerDetector(
@@ -248,6 +266,13 @@ class ServingCluster:
         self.completed: List[str] = []
         self.failed: List[str] = []
         self.lost: List[str] = []  # retry budget exhausted after crashes
+        #: typed router rejections: no active (or revivable) replica
+        #: hosts the request's model — recorded in ``failed`` too, with
+        #: the reason on the outcome row (never a silent drop)
+        self.unroutable: List[str] = []
+        #: requests that died at the router (never reached an engine) —
+        #: kept so their outcome rows still carry tenant/model/reason
+        self._unrouted: Dict[str, Request] = {}
         self.crashes = 0
         self.requeued = 0
         self.migrations_started = 0
@@ -299,8 +324,28 @@ class ServingCluster:
         """The cluster-scope policy a wrapping FrontDoor sheds with."""
         return self.router
 
+    def hosted_models(self) -> List[str]:
+        """Arch name each replica slot hosts (parked slots included —
+        an unpark revives the same model)."""
+        return [mcfg.name for mcfg, _ in self._models]
+
+    def _capable(self, replica: int, req: Request) -> bool:
+        """True when ``replica`` hosts the request's declared model (an
+        untagged request runs anywhere — the homogeneous-fleet case)."""
+        return (
+            not req.model or self._models[replica][0].name == req.model
+        )
+
+    def _capable_for_model(self, replica: int, model: str) -> bool:
+        return not model or self._models[replica][0].name == model
+
     def estimate_request_bytes(self, req: Request) -> float:
-        """Page-rounded peak bytes (all replicas share one ArchConfig)."""
+        """Page-rounded peak bytes, sized by a replica that HOSTS the
+        request's model — a mamba request's demand must never be priced
+        with a transformer's per-token geometry."""
+        for i in range(len(self.replicas)):
+            if self._capable(i, req):
+                return self.replicas[i].estimate_request_bytes(req)
         return self.replicas[0].estimate_request_bytes(req)
 
     def group_demand(self) -> Dict[str, float]:
@@ -417,7 +462,8 @@ class ServingCluster:
             k: v for k, v in self._precopy.items() if v[1] != replica
         }
         ckpt = self._read_checkpoint(replica)
-        fresh = ServingEngine(self.cfg, self.params, self.ccfg.engine())
+        mcfg, mparams = self._models[replica]
+        fresh = ServingEngine(mcfg, mparams, self.ccfg.engine())
         victims = [rid for rid, _ in eng.migratable_requests()]
         requeued = 0
         for rid in victims:
@@ -598,12 +644,48 @@ class ServingCluster:
     def _host(self, replica: int) -> str:
         return f"r{replica}"
 
+    def _fail_unroutable(self, req: Request, why: str) -> None:
+        """Typed router rejection: the request ends FAILED with an
+        ``unroutable:`` reason on its outcome row — never a division
+        error on an empty fleet, never a silent drop."""
+        rid = req.request_id
+        req.state = "failed"
+        req.fail_reason = f"unroutable: {why}"
+        req.finish_tick = self.tick
+        self._submit_tick.setdefault(rid, self.tick)
+        self._finish_tick[rid] = self.tick
+        self.unroutable.append(rid)
+        self.failed.append(rid)
+        self._unrouted[rid] = req
+        self._home.pop(rid, None)
+        self._retry.pop(rid, None)
+
+    def _unpark_capable(self, req: Request) -> Optional[int]:
+        """Revive a parked replica that hosts ``req.model`` (autoscale
+        fleets only — a hand-parked fleet stays parked and the request
+        fails typed instead).  Returns the revived index or None."""
+        if not self.ccfg.autoscale:
+            return None
+        for i in sorted(self._parked):
+            if self._capable(i, req):
+                self._parked.discard(i)
+                self.scale_ups += 1
+                self._last_scale_tick = self.tick
+                return i
+        return None
+
     def _route(self) -> None:
         """Place every queued request: score each (request, replica) pair
         via the router policy's ``placement_score``, place best-first,
         and fold each placement's estimated bytes/slot back into the
         stats so one routing pass cannot stack a burst onto the replica
-        that merely LOOKED emptiest when the pass began."""
+        that merely LOOKED emptiest when the pass began.
+
+        Capability comes first: a request tagged with a model only ever
+        scores replicas HOSTING that model.  A request no scored replica
+        can host falls back layer by layer — flagged stragglers, then a
+        parked capable slot (autoscale revives it) — and only then fails
+        with a typed ``unroutable`` outcome."""
         if not self.queue:
             return
         # parked replicas are off; draining replicas take no NEW work
@@ -614,6 +696,27 @@ class ServingCluster:
         ]
         if not candidates:
             candidates = self._active_indices()
+        if not candidates:
+            # all-parked fleet: revive a slot (autoscale) or fail typed —
+            # the scoring loop below must never see an empty stats map
+            pending, self.queue = self.queue, []
+            still: List[Request] = []
+            for req in pending:
+                revived = self._unpark_capable(req)
+                if revived is not None:
+                    candidates.append(revived)
+                    still.append(req)
+                elif candidates and any(
+                    self._capable(i, req) for i in candidates
+                ):
+                    still.append(req)
+                else:
+                    self._fail_unroutable(req, "all replicas parked")
+            if not candidates:
+                return
+            self.queue = still
+            if not self.queue:
+                return
         stats = {
             i: dict(self.replicas[i].replica_stats()) for i in candidates
         }
@@ -626,11 +729,41 @@ class ServingCluster:
             # healthy replica exists — placement_score has no straggler
             # axis, so the router enforces this exclusion itself
             stats = {i: s for i, s in stats.items() if i not in flagged}
+
+        def admit_stats(i: int) -> None:
+            stats[i] = dict(self.replicas[i].replica_stats())
+            caps[i] = max(self.replicas[i].pool.capacity, 1.0)
+
         pending, self.queue = self.queue, []
+        routable: List[Request] = []
+        for req in pending:
+            if any(self._capable(i, req) for i in stats):
+                routable.append(req)
+                continue
+            # sole capable replica was excluded as a straggler: routing
+            # to a slow host beats failing the request
+            fallback = next(
+                (i for i in candidates if self._capable(i, req)), None
+            )
+            if fallback is not None:
+                admit_stats(fallback)
+                routable.append(req)
+                continue
+            revived = self._unpark_capable(req)
+            if revived is not None:
+                admit_stats(revived)
+                routable.append(req)
+                continue
+            self._fail_unroutable(
+                req, f"no active replica hosts model {req.model!r}"
+            )
+        pending = routable
         while pending:
-            best: Optional[Tuple[float, int, int]] = None  # score, qpos, -i
+            best: Optional[Tuple[float, int, int, int]] = None
             for qpos, req in enumerate(pending):
                 for i in stats:
+                    if not self._capable(i, req):
+                        continue
                     s = self.router.placement_score(req.tenant, stats[i])
                     # ties (score AND queue order) break round-robin via
                     # the cursor distance, so the base policy's all-zero
@@ -639,6 +772,12 @@ class ServingCluster:
                     cand = (s, -qpos, -rr, i)
                     if best is None or cand > best:
                         best = cand
+            if best is None:  # defensive: partition above guarantees not
+                for req in pending:
+                    self._fail_unroutable(
+                        req, f"no scored replica hosts model {req.model!r}"
+                    )
+                return
             _, nqpos, _, target = best
             req = pending.pop(-nqpos)
             eng = self.replicas[target]
@@ -657,25 +796,42 @@ class ServingCluster:
     def _flagged_indices(self) -> Set[int]:
         return {int(h[1:]) for h in self.detector.stragglers()}
 
-    def _pick_target(self, group: str, exclude: Set[int]) -> int:
+    def _pick_target(
+        self, group: str, exclude: Set[int], model: str = ""
+    ) -> Optional[int]:
         """Best replica for a migrating request, at DELIVERY time — so a
         target that crashed, started straggling, parked, or began its
         own drain while the bytes were in flight is simply never chosen
-        (falling back layer by layer when exclusions cover everyone)."""
+        (falling back layer by layer when exclusions cover everyone).
+
+        ``model`` is a HARD filter at every layer: migration refuses
+        cross-arch targets outright — a transformer's KV pages mean
+        nothing to a mamba replica.  Returns None when no capable
+        replica exists at all."""
+
+        def hosts(i: int) -> bool:
+            return self._capable_for_model(i, model)
+
         avoid = set(exclude) | self._parked | set(self._draining)
         cands = [
-            i for i in range(len(self.replicas)) if i not in avoid
+            i
+            for i in range(len(self.replicas))
+            if i not in avoid and hosts(i)
         ]
         if not cands:  # only excluded replicas left: drop the soft axes
             cands = [
                 i
                 for i in self._active_indices()
-                if i not in self._draining
+                if i not in self._draining and hosts(i)
             ]
         if not cands:
-            cands = self._active_indices()
+            cands = [i for i in self._active_indices() if hosts(i)]
         if not cands:
-            cands = list(range(len(self.replicas)))
+            cands = [
+                i for i in range(len(self.replicas)) if hosts(i)
+            ]
+        if not cands:
+            return None  # no capable replica anywhere: caller decides
         best: Optional[Tuple[float, int, int]] = None
         for i in cands:
             s = self.router.placement_score(
@@ -687,12 +843,30 @@ class ServingCluster:
                 best = cand
         return best[2]
 
+    def _has_capable_target(self, model: str, exclude: Set[int]) -> bool:
+        """Any non-parked replica outside ``exclude`` hosting ``model``?
+        Consulted BEFORE exporting a request off its source — an export
+        with nowhere to land would strand the only copy of its state."""
+        return any(
+            i not in exclude
+            and i not in self._parked
+            and self._capable_for_model(i, model)
+            for i in range(len(self.replicas))
+        )
+
     # ------------------------------------------------------------ migration
     def migrate(self, request_id: str, source: int) -> bool:
         """Begin live migration of one request off ``source``: extract its
         state, put the compressed bytes on the inter-replica link, and
         deliver to the best target when the transfer completes.  Returns
-        False when the request is not there / not migratable."""
+        False when the request is not there / not migratable — or when
+        NO other replica hosts its model (migration refuses cross-arch
+        targets, so exporting would strand the state)."""
+        req = self.replicas[source].requests.get(request_id)
+        if req is not None and not self._has_capable_target(
+            req.model, exclude={source}
+        ):
+            return False
         ticket = self.replicas[source].export_request(request_id)
         if ticket is None:
             return False
@@ -711,6 +885,11 @@ class ServingCluster:
         landed, so export the request NOW with the snapshot as the
         baseline — the ticket ships only the dirty delta; the pre-copy
         plus delta replace what one monolithic copy would have moved."""
+        req = self.replicas[source].requests.get(rid)
+        if req is not None and not self._has_capable_target(
+            req.model, exclude={source}
+        ):
+            return  # nowhere capable to land: the request stays put
         ticket = self.replicas[source].export_request(rid, baseline=snap)
         if ticket is None:
             return  # finished (or moved) while the pre-copy was in flight
@@ -747,7 +926,18 @@ class ServingCluster:
             target = self._pick_target(
                 ticket.request.tenant,
                 exclude={source} | self._flagged_indices(),
+                model=ticket.request.model,
             )
+            if target is None:
+                # every capable replica vanished while the bytes were on
+                # the wire (crash + repark): fail typed, never import
+                # cross-arch and never drop silently
+                self._fail_unroutable(
+                    ticket.request,
+                    f"no capable migration target for model "
+                    f"{ticket.request.model!r}",
+                )
+                continue
             self.replicas[target].import_request(ticket)
             self._home[tr.key] = target
             self.migrations_completed += 1
@@ -795,7 +985,14 @@ class ServingCluster:
             i for i in self._active_indices() if i not in self._draining
         ]
         self.peak_replicas = max(self.peak_replicas, len(serving))
-        if not cc.autoscale or not serving:
+        if not cc.autoscale:
+            return
+        if not serving:
+            # an all-parked fleet with autoscale on must be able to
+            # revive itself: pending work IS maximal pressure (the mean
+            # over zero replicas would divide by nothing / read as calm)
+            if self.queue or self._requeue or self._inflight:
+                self._scale_up()
             return
         stats = [self.replicas[i].replica_stats() for i in serving]
         pressure = self.router.scale_pressure(stats)
@@ -840,6 +1037,8 @@ class ServingCluster:
         if self._parked:
             self._parked.discard(min(self._parked))
         else:
+            # a grown slot hosts the cluster's default model
+            self._models.append((self.cfg, self.params))
             self.replicas.append(
                 ServingEngine(self.cfg, self.params, self.ccfg.engine())
             )
@@ -912,8 +1111,9 @@ class ServingCluster:
         self._harvest_replica(replica)
         self._draining.pop(replica, None)
         self._parked.add(replica)
+        mcfg, mparams = self._models[replica]
         self.replicas[replica] = ServingEngine(
-            self.cfg, self.params, self.ccfg.engine()
+            mcfg, mparams, self.ccfg.engine()
         )
         self.detector.forget(self._host(replica))
         self._slowdown[replica] = 1.0
@@ -964,6 +1164,11 @@ class ServingCluster:
             # propose, so this is its only rate feed)
             for g, r in eng.policy.group_rates().items():
                 self.router.note_group_rate(g, r, float(self.tick))
+            # forward declared architecture classes the same way: the
+            # router's shed/placement hooks clamp structurally-flat
+            # (constant-state) tenants even before any EMA warms up
+            for g, c in eng.policy.group_classes().items():
+                self.router.note_group_class(g, c)
         self._straggler_pass()
         self._drain_pass()
         self._scale_pass()
@@ -1002,10 +1207,13 @@ class ServingCluster:
         legacy = {
             "policy": self.router.name,
             "n_replicas": len(self.replicas),
+            "hosted_models": self.hosted_models(),
             "submitted": len(self._submit_tick),
             "completed": len(self.completed),
             "failed": len(self.failed),
             "lost": len(self.lost),
+            "unroutable": len(self.unroutable),
+            "misroutes": sum(eng.misroutes for eng in self.replicas),
             "in_flight_unfinished": len(self._inflight),
             "crashes": self.crashes,
             "requeued": self.requeued,
@@ -1068,14 +1276,27 @@ class ServingCluster:
             for rid, r in eng.requests.items():
                 tok_by_rid[rid] = len(r.generated)
         tenant_of: Dict[str, str] = {}
+        model_of: Dict[str, str] = {}
+        reason_of: Dict[str, str] = {}
         for eng in self.replicas:
             for rid, r in eng.requests.items():
                 tenant_of[rid] = r.tenant
-        for source in (self.queue, [r for _, r in self._requeue]):
+                model_of[rid] = r.model
+                if r.fail_reason:
+                    reason_of[rid] = r.fail_reason
+        for source in (
+            self.queue,
+            [r for _, r in self._requeue],
+            self._unrouted.values(),
+        ):
             for req in source:
                 tenant_of[req.request_id] = req.tenant
+                model_of[req.request_id] = req.model
+                if req.fail_reason:
+                    reason_of[req.request_id] = req.fail_reason
         for ticket, _ in self._inflight.values():
             tenant_of[ticket.request.request_id] = ticket.request.tenant
+            model_of[ticket.request.request_id] = ticket.request.model
         lost_set = set(self.lost)
         terminal: Dict[str, str] = {}
         for rid in self.completed:
@@ -1095,8 +1316,11 @@ class ServingCluster:
                     finish_tick=self._finish_tick.get(rid, -1),
                     tokens=tok_by_rid.get(rid, 0),
                     reason=(
-                        "crash retries exhausted" if kind == LOST else ""
+                        "crash retries exhausted"
+                        if kind == LOST
+                        else reason_of.get(rid, "")
                     ),
+                    model=model_of.get(rid, ""),
                 )
             )
         rep = ServeReport(
@@ -1117,6 +1341,8 @@ class ServingCluster:
                     "autoscale",
                     "delta_migration",
                     "checkpoint",
+                    "hosted_models",
+                    "unroutable",
                     "replicas",
                 )
             },

@@ -84,7 +84,6 @@ from repro.serve.kv_cache import (
     CACHE_OWNER,
     DEMOTED,
     PagedKVManager,
-    constant_state_bytes,
 )
 from repro.serve.report import (
     COMPLETED,
@@ -131,6 +130,13 @@ class Request:
     #: why the request failed ("" while not failed) — surfaced in the
     #: ServeReport outcome row
     fail_reason: str = ""
+    #: arch name this request targets ("" → whatever model the engine
+    #: that first sees it serves).  In a heterogeneous fleet the cluster
+    #: router only places the request on replicas hosting this model;
+    #: an engine handed a request for a model it does not serve fails it
+    #: with a typed ``wrong_model`` outcome instead of silently decoding
+    #: through the wrong weights
+    model: str = ""
 
     @property
     def total_tokens(self) -> int:
@@ -339,6 +345,12 @@ class EngineConfig:
     #: oracle (same spirit as ``legacy_bookkeeping``): identical greedy
     #: tokens by construction, so tests can diff the two paths
     paged_decode: bool = True
+    #: quantize the paged KV pools to int8 (per pool-row absmax scales)
+    #: and decode through ``paged_decode_attention_int8``.  Off by
+    #: default: the f32 ``paged_decode_attention`` path stays the
+    #: differential oracle (tests diff the two).  Only takes effect when
+    #: ``paged_decode`` is active for the architecture.
+    paged_decode_int8: bool = False
     #: run the Pallas kernel in interpret mode (Python emulation, what CPU
     #: CI exercises); None → auto: interpret everywhere except a real TPU
     #: backend, where the kernel compiles to Mosaic
@@ -371,6 +383,10 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.ecfg = ecfg
+        #: the model this replica hosts, as an explicit spec (arch id +
+        #: memory class + byte model) — every byte-accounting and
+        #: migration gate below keys off this, not an implicit global
+        self.spec = cfg.spec()
         self.pool = MemoryPool(capacity=ecfg.hbm_capacity_bytes)
         pcie = (
             ecfg.pcie_bytes_per_tick
@@ -448,6 +464,10 @@ class ServingEngine:
         self._imports: Dict[str, MigrationTicket] = {}
         self.migrations_in = 0
         self.migrations_out = 0
+        #: requests submitted here that declared a DIFFERENT model — each
+        #: is failed with a typed ``wrong_model`` outcome (the router
+        #: should never let this happen; the counter is the evidence)
+        self.misroutes = 0
         #: modeled cost of the last step() in SECONDS — the replica's tick
         #: service time a cluster's straggler pass observes.  Derived from
         #: the roofline (weight stream + KV pages touched over HBM
@@ -602,12 +622,16 @@ class ServingEngine:
         # dense vmapped path above stays as the differential oracle and
         # serves cache shapes the kernel doesn't (MLA, SSM, rings, enc-dec)
         self._paged_ok = ecfg.paged_decode and paged_decode_supported(cfg)
+        #: int8-quantized kernel path (satellite of the PR 7 stretch):
+        #: only meaningful when the paged kernel serves decode at all
+        self._paged_int8 = ecfg.paged_decode_int8 and self._paged_ok
         self._kernel_interpret = (
             ecfg.kernel_interpret
             if ecfg.kernel_interpret is not None
             else jax.default_backend() != "tpu"
         )
         self.paged_decode_ticks = 0  # decode ticks served by the kernel
+        self.paged_int8_ticks = 0  # … of which through the int8 kernel
 
         def _paged_step(
             params, caches, tok, row_slot, poss, tables, lens,
@@ -617,6 +641,7 @@ class ServingEngine:
                 cfg, params, tok, caches, poss, row_slot, tables, lens,
                 src_slot, src_idx, page_tokens=self.kv.page_tokens,
                 n_pool=n_pool, interpret=self._kernel_interpret,
+                int8=self._paged_int8,
             )
             # batch argmax on device: ONE transfer back per tick
             return jnp.argmax(logits[:, 0, :], axis=-1), new_caches
@@ -683,10 +708,26 @@ class ServingEngine:
         engine never rejects at the door — put a
         :class:`repro.serve.frontdoor.FrontDoor` in front for that)."""
         req.submit_tick = self.tick
-        self.queue.append(req)
+        if not req.model:
+            req.model = self.cfg.name
         self.requests[req.request_id] = req
-        self._track_live(req)
         self._submitted += 1
+        if req.model != self.cfg.name:
+            # a misroute: this replica does not host the request's model.
+            # Decoding it through the wrong weights would be silently
+            # wrong output — fail typed instead, and count the event so
+            # the model_zoo gate can assert the router never causes one.
+            self.misroutes += 1
+            req.state = "failed"
+            req.finish_tick = self.tick
+            req.fail_reason = (
+                f"wrong_model: replica hosts {self.cfg.name!r}, "
+                f"request targets {req.model!r}"
+            )
+            self.failed.append(req.request_id)
+            return True
+        self.queue.append(req)
+        self._track_live(req)
         return True
 
     # ------------------------------------------------------------ migration
@@ -711,7 +752,7 @@ class ServingEngine:
             req is None
             or req.state == "queued"
             or request_id in self._imports
-            or constant_state_bytes(self.cfg) > 0
+            or self.spec.constant_state_bytes > 0
         ):
             return None
         table = self.kv.page_table(request_id)
@@ -782,7 +823,7 @@ class ServingEngine:
             and baseline.request_id == request_id
             and parked is None
             and req.state != "queued"
-            and constant_state_bytes(self.cfg) == 0
+            and self.spec.constant_state_bytes == 0
         ):
             delta_done = self._export_delta(req, ticket, baseline)
         if req.state != "queued" and parked is None and not delta_done:
@@ -907,7 +948,7 @@ class ServingEngine:
         if req.state == "queued":
             self.queue.append(req)
             return
-        self.kv.register(rid, self.cfg)
+        self.kv.register(rid, self.cfg, prompt_tokens=len(req.prompt))
         if ticket.slot_cache is not None or self._payload_covers(ticket):
             self._set_state(req, "importing")
             self._imports[rid] = ticket
@@ -923,7 +964,7 @@ class ServingEngine:
         cache on this replica: every materialized page shipped a value
         array, and the architecture keeps no recurrent constant state
         (mamba/ring-buffer state never travels page-wise)."""
-        if constant_state_bytes(self.cfg) > 0:
+        if self.spec.constant_state_bytes > 0:
             return False
         req = ticket.request
         pages = (req.pos + self.kv.page_tokens - 1) // self.kv.page_tokens
@@ -990,7 +1031,7 @@ class ServingEngine:
         (:meth:`TieredKVStore.note_checkpoint`) as their own stream,
         distinct from spill.
         """
-        if constant_state_bytes(self.cfg) > 0:
+        if self.spec.constant_state_bytes > 0:
             return None
         # (shared-first rank, rid, idx, payload) — page granularity so a
         # tight budget still captures every request's shared prefix
@@ -1159,11 +1200,13 @@ class ServingEngine:
         )
         return [(r.request_id, r.state) for r in live]
 
-    def replica_stats(self) -> Dict[str, float]:
+    def replica_stats(self) -> Dict[str, Any]:
         """The load surface a cluster router scores placements against
         (see ``SchedulingPolicy.placement_score``), and the admission
         surface a :class:`~repro.serve.frontdoor.FrontDoor` sheds
-        against (``capacity_bytes`` / ``projected_bytes``)."""
+        against (``capacity_bytes`` / ``projected_bytes``).  ``model``
+        and ``memory_class`` declare what this replica hosts — the
+        router's capability filter."""
         cap = self.pool.capacity
         if self.ecfg.legacy_bookkeeping:
             # committed future demand: every non-terminal request here
@@ -1201,6 +1244,8 @@ class ServingEngine:
             "tick_cost": self.last_tick_cost,
             "capacity_bytes": float(cap),
             "projected_bytes": float(projected_bytes),
+            "model": self.cfg.name,
+            "memory_class": self.spec.memory_class,
         }
 
     def tick_cost_stats(self) -> Dict[str, Any]:
@@ -1237,8 +1282,17 @@ class ServingEngine:
         (prompt + max_new_tokens — the §III-B projected need, known at
         admission) — the router's inbound-load estimate.  Allocates
         nothing; prompt-only sizing would make a 40-token decode and a
-        4-token decode look identical to placement."""
-        return self.kv.bytes_for(self.cfg, req.total_tokens)
+        4-token decode look identical to placement.
+
+        Per-model: the paged term is zero for a constant-state (mamba)
+        model, whose whole estimate is its fixed state; an
+        encoder-decoder model adds the encoder-side KV its prompt pins
+        for the request's lifetime."""
+        return (
+            self.kv.bytes_for(self.cfg, req.total_tokens)
+            + self.spec.constant_state_bytes
+            + self.cfg.encoder_bytes(len(req.prompt))
+        )
 
     # ------------------------------------------------------------ accounting
     def _update_pool(self) -> None:
@@ -1386,6 +1440,9 @@ class ServingEngine:
             prompt_bytes, protected = self.kv.admission_probe(
                 self.cfg, req.prompt
             )
+            # encoder-decoder models pin the encoder-side cross-attention
+            # KV at prefill too — admission must count it with the prompt
+            prompt_bytes += self.cfg.encoder_bytes(len(req.prompt))
             if prompt_bytes > headroom:
                 # can never fit, even into an empty pool: fail fast
                 # (OOM semantics) instead of blocking the queue forever
@@ -1421,7 +1478,9 @@ class ServingEngine:
             self.queue.remove(req)
             if by_tenant is not None:
                 by_tenant[tenant].pop(0)
-            self.kv.register(req.request_id, self.cfg)
+            self.kv.register(
+                req.request_id, self.cfg, prompt_tokens=len(req.prompt)
+            )
             if self.ecfg.prefix_cache:
                 # the trie hands over every page of the longest cached
                 # prefix by reference — prefill will start at the first
@@ -1882,6 +1941,8 @@ class ServingEngine:
             self.params, self._caches, *staged, n_pool2
         )
         self.paged_decode_ticks += 1
+        if self._paged_int8:
+            self.paged_int8_ticks += 1
         nxt = np.asarray(nxt)
         row_of = {slot: r for r, (slot, _) in enumerate(order)}
         return nxt[[row_of[slot] for slot, _ in active]]
@@ -1912,9 +1973,18 @@ class ServingEngine:
                 group=r.tenant,
             )
         stats = self.sampler.stats([r.request_id for r in active])
-        # expose the online §III classification on each request
+        # expose the online §III classification on each request, and tell
+        # the policy the DECLARED architecture class of each group it is
+        # about to score (on this engine, every group runs this model)
+        seen_groups = set()
         for st in stats:
             self.requests[st.task_id].memory_model = st.model.value
+        for r in active:
+            if r.tenant not in seen_groups:
+                seen_groups.add(r.tenant)
+                self.policy.note_group_class(
+                    r.tenant, self.spec.memory_class
+                )
         frozen = self.sampler.stats(
             [
                 r.request_id
@@ -2340,6 +2410,10 @@ class ServingEngine:
         prefix["prefill_tokens_skipped"] = self.prefix_hit_tokens
         legacy = {
             "policy": self.policy.name,
+            "model": self.cfg.name,
+            "memory_class": self.spec.memory_class,
+            "misroutes": self.misroutes,
+            "paged_int8_ticks": self.paged_int8_ticks,
             "completed": len(self.completed),
             "failed": len(self.failed),
             "suspensions": self.suspensions,
@@ -2380,6 +2454,7 @@ class ServingEngine:
                         finish_tick=r.finish_tick,
                         first_token_tick=r.first_token_tick,
                         tokens=len(r.generated),
+                        model=r.model,
                     )
                 )
             elif r.state == "failed":
@@ -2393,6 +2468,7 @@ class ServingEngine:
                         first_token_tick=r.first_token_tick,
                         tokens=len(r.generated),
                         reason=r.fail_reason,
+                        model=r.model,
                     )
                 )
             else:
@@ -2405,6 +2481,7 @@ class ServingEngine:
                         first_token_tick=r.first_token_tick,
                         tokens=len(r.generated),
                         reason=f"still {r.state} at tick budget",
+                        model=r.model,
                     )
                 )
         rep = ServeReport(

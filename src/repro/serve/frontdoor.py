@@ -158,6 +158,7 @@ class FrontDoor:
                 submit_tick=now,
                 finish_tick=now,
                 reason=reason,
+                model=req.model,
             )
         )
         if outcome == SHED:
@@ -237,4 +238,5 @@ class FrontDoor:
         report.extras["shed"] = self.shed_count
         report.extras["rate_limited"] = self.rate_limited_count
         report.extras["shed_by_tenant"] = dict(self.shed_by_tenant)
+        report.extras["per_model"] = report.model_summary()
         return report

@@ -88,45 +88,20 @@ CACHE_OWNER = "__prefix_cache__"
 DEMOTED = -1
 
 
-def _block_counts(cfg: ArchConfig) -> Dict[str, int]:
-    counts: Dict[str, int] = {}
-    for b in (
-        list(cfg.block_pattern) * cfg.resolved_pattern_repeats
-        + list(cfg.suffix_blocks)
-    ):
-        counts[b] = counts.get(b, 0) + 1
-    return counts
-
-
 def kv_bytes_per_token(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
-    """Marginal HBM bytes per generated token (the memory-usage *rate*)."""
-    counts = _block_counts(cfg)
-    per_tok = 0.0
-    if cfg.mla is not None:
-        lat = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
-        per_tok += (counts.get("attn", 0) + counts.get("local_attn", 0)) * lat * dtype_bytes
-    else:
-        kv = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
-        per_tok += counts.get("attn", 0) * kv
-        per_tok += counts.get("shared_attn", 0) * kv
-        # local layers stop growing once past the window → marginal 0 there
-    return per_tok
+    """Marginal HBM bytes per generated token (the memory-usage *rate*).
+
+    Thin wrapper over :meth:`ArchConfig.kv_bytes_per_token` — the byte
+    model lives on the config so layers that never import serve (cluster
+    routing, policy scoring, benchmarks) read the same numbers."""
+    return cfg.kv_bytes_per_token(dtype_bytes)
 
 
 def constant_state_bytes(cfg: ArchConfig, dtype_bytes: int = 2) -> float:
-    """Sequence-length-independent state (mamba states, local windows)."""
-    counts = _block_counts(cfg)
-    total = 0.0
-    if cfg.ssm is not None and counts.get("mamba"):
-        ssm = cfg.ssm
-        di = ssm.d_inner(cfg.d_model)
-        conv = (ssm.d_conv - 1) * (di + 2 * ssm.d_state) * dtype_bytes
-        state = ssm.n_heads(cfg.d_model) * ssm.head_dim * ssm.d_state * 4
-        total += counts["mamba"] * (conv + state)
-    if cfg.mla is None and counts.get("local_attn"):
-        kv = 2 * cfg.n_kv_heads * cfg.head_dim * dtype_bytes
-        total += counts["local_attn"] * kv * cfg.sliding_window
-    return total
+    """Sequence-length-independent state (mamba states, local windows).
+
+    Thin wrapper over :meth:`ArchConfig.constant_state_bytes`."""
+    return cfg.constant_state_bytes(dtype_bytes)
 
 
 class PageBlockAllocator:
@@ -862,7 +837,13 @@ class PagedKVManager:
     The page pool is sized lazily on the first :meth:`register` (the page
     byte size depends on the architecture): ``n_pages = ⌊capacity /
     page_bytes⌋``.  Architectures with zero marginal KV bytes (mamba:
-    constant state) hold no pages at all.
+    constant state) hold no pages at all.  One pool can host MIXED page
+    owners — requests registered under different :class:`ArchConfig`\\ s
+    keep their own per-page byte geometry for attribution
+    (:meth:`request_bytes`, :meth:`page_bytes_of`), while prefix-trie
+    sharing stays restricted to the arch that sized the pool
+    (:attr:`pool_arch`): token ids alone do not identify KV values
+    across architectures.
 
     With ``enable_prefix_cache`` a :class:`PrefixCache` trie is attached:
     :meth:`match_prefix` / :meth:`insert_prefix` are the serving engine's
@@ -879,9 +860,17 @@ class PagedKVManager:
     tier_config: Optional["TierConfig"] = None
     _page_bytes: Dict[str, float] = field(default_factory=dict)
     _state_bytes: Dict[str, float] = field(default_factory=dict)
+    #: request id → arch name it registered under — one pool can host
+    #: MIXED page owners (a model-zoo engine), each with its own
+    #: per-page byte geometry; the prefix trie stays single-arch (token
+    #: ids alone do not identify KV values across architectures)
+    _arch: Dict[str, str] = field(default_factory=dict)
     _alloc: Optional[PageBlockAllocator] = None
     _prefix: Optional[PrefixCache] = None
     _pool_page_bytes: float = 0.0
+    #: arch whose geometry sized the physical pool (first nonzero
+    #: registrant); only its requests may share trie pages
+    _pool_arch: Optional[str] = None
     tiers: Optional["TieredKVStore"] = None
     #: request ids whose attributed bytes changed outside the allocator
     #: (constant-state registration); merged into :meth:`drain_dirty`
@@ -903,24 +892,61 @@ class PagedKVManager:
             self.tiers = TieredKVStore(self.tier_config)
 
     # ------------------------------------------------------------ requests
-    def register(self, request_id: str, cfg: ArchConfig) -> None:
+    def register(
+        self, request_id: str, cfg: ArchConfig, prompt_tokens: int = 0
+    ) -> None:
         """Start tracking a request: derive its per-page bytes from the
-        arch config and create the allocator on first use."""
+        arch config and create the allocator on first use.
+
+        Requests of DIFFERENT architectures may register into one pool
+        (mixed page owners): each keeps its own per-page byte geometry
+        for attribution (:meth:`request_bytes`), while physical page
+        count is sized once, by the first nonzero-KV registrant.
+
+        ``prompt_tokens`` adds the encoder-side cross-attention KV an
+        encoder-decoder model pins for this prompt (zero elsewhere) into
+        the request's fixed state bytes — it is written once at prefill
+        and never grows with decode, so it rides with the constant-state
+        term rather than the paged per-token term."""
         page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
         self._page_bytes[request_id] = page_bytes
-        self._state_bytes[request_id] = constant_state_bytes(cfg)
+        self._state_bytes[request_id] = constant_state_bytes(
+            cfg
+        ) + cfg.encoder_bytes(prompt_tokens)
+        self._arch[request_id] = cfg.name
         self._dirty.add(request_id)
         if self._alloc is None and page_bytes > 0:
             self._alloc = PageBlockAllocator(
                 int(self.capacity_bytes // page_bytes)
             )
             self._pool_page_bytes = page_bytes
+            self._pool_arch = cfg.name
             if self.enable_prefix_cache:
                 self._prefix = PrefixCache(self._alloc, self.page_tokens)
                 self._prefix.promote_cb = self._promote_cache_node
                 self._prefix.on_host_drop = self._drop_cache_tier_copy
         if self._alloc is not None and page_bytes > 0:
             self._alloc.grow_to(request_id, 0)  # materialize an empty table
+
+    @property
+    def pool_arch(self) -> Optional[str]:
+        """Arch name whose page geometry sized the pool (None before the
+        first nonzero-KV registration)."""
+        return self._pool_arch
+
+    def page_bytes_of(self, request_id: str) -> float:
+        """The request's own per-page byte size (its model's geometry —
+        NOT necessarily the pool's)."""
+        return self._page_bytes.get(request_id, 0.0)
+
+    def _prefix_eligible(self, request_id: str) -> bool:
+        """Prefix pages are only shareable within the pool's arch: the
+        trie is keyed by token ids alone, and identical tokens under
+        different architectures hold different KV values."""
+        return (
+            self._pool_arch is None
+            or self._arch.get(request_id, self._pool_arch) == self._pool_arch
+        )
 
     def grow_to(self, request_id: str, n_tokens: int) -> float:
         """Ensure pages cover ``n_tokens``; returns newly allocated bytes.
@@ -958,7 +984,9 @@ class PagedKVManager:
         was checked."""
         total = (len(tokens) + self.page_tokens - 1) // self.page_tokens
         page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
-        if self._prefix is None:
+        if self._prefix is None or (
+            self._pool_arch is not None and cfg.name != self._pool_arch
+        ):
             return total * page_bytes, ()
         matched, _, pages = self._prefix.probe(tokens)
         new = max(total - len(pages), 0)
@@ -1240,6 +1268,8 @@ class PagedKVManager:
         re-sharing your own published prefix is not a cache hit."""
         if self._prefix is None or self._alloc is None:
             return 0, None
+        if not self._prefix_eligible(request_id):
+            return 0, None
         if self._alloc.pages_held(request_id) > 0:
             raise ValueError(
                 f"match_prefix needs an empty table for {request_id!r}"
@@ -1255,8 +1285,11 @@ class PagedKVManager:
         now: float = 0.0,
     ) -> int:
         """Publish a finished prefill's pages into the trie; returns the
-        number of newly cached pages."""
+        number of newly cached pages.  Off-pool-arch requests publish
+        nothing (their KV is not shareable under the pool's trie)."""
         if self._prefix is None or self._alloc is None:
+            return 0
+        if not self._prefix_eligible(request_id):
             return 0
         return self._prefix.insert(
             self._alloc.table(request_id), tokens, group, snap_key, now

@@ -96,6 +96,9 @@ class RequestOutcome:
     first_token_tick: int = -1  # -1 = never emitted a token
     tokens: int = 0  # tokens actually generated
     reason: str = ""  # optional detail (shed reason, failure mode)
+    #: arch name the request targeted ("" = the run's single implicit
+    #: model) — heterogeneous-fleet runs key per-model goodput on this
+    model: str = ""
 
     @property
     def latency_ticks(self) -> Optional[int]:
@@ -222,6 +225,31 @@ class ServeReport:
         for o in self.outcomes:
             row = out.setdefault(o.tenant, {})
             row[o.outcome] = row.get(o.outcome, 0) + 1
+        return out
+
+    def model_summary(self) -> Dict[str, Dict[str, Any]]:
+        """Per-model outcome counts, goodput, and completed-latency p99 —
+        the heterogeneous-fleet view (which architecture class is being
+        starved / shed / failed).  Rows with no model tag group under
+        ``""``.  ``goodput`` here counts completions per tick (the SLO
+        scoring, if any, already happened in :meth:`apply_slo` — per-model
+        ``slo_good`` splits that same population)."""
+        out: Dict[str, Dict[str, Any]] = {}
+        for o in self.outcomes:
+            row = out.setdefault(
+                o.model,
+                {"outcomes": {}, "completed_latency": []},
+            )
+            counts = row["outcomes"]
+            counts[o.outcome] = counts.get(o.outcome, 0) + 1
+            if o.outcome == COMPLETED and o.latency_ticks is not None:
+                row["completed_latency"].append(o.latency_ticks)
+        for model, row in out.items():
+            lat = sorted(row.pop("completed_latency"))
+            done = row["outcomes"].get(COMPLETED, 0)
+            row["completed"] = done
+            row["goodput"] = done / max(1, self.ticks)
+            row["latency_p99"] = percentile(lat, 0.99)
         return out
 
     # --------------------------------------------------------------- (de)ser

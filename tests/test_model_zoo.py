@@ -1,0 +1,306 @@
+"""Heterogeneous model-zoo serving: specs, byte models, capability routing.
+
+The multi-layer refactor made architecture a first-class dimension —
+every request/slot/replica/policy decision keys on an explicit
+``ModelSpec`` derived from ``ArchConfig`` (DESIGN.md §12).  This suite
+pins the three layers the refactor touched:
+
+* **configs** — every architecture in the zoo constructs, declares a
+  valid memory class, and exposes a non-negative byte model monotone in
+  context length (the satellite smoke over all ten configs);
+* **cluster** — capability routing: a request only lands on a replica
+  hosting its model, a request nobody hosts fails TYPED (never a
+  division error or a silent drop), and an all-parked fleet either
+  revives (autoscale) or fails typed too;
+* **engine** — the ``wrong_model`` typed failure and the int8 paged
+  decode flag (``paged_decode_int8``), with the f32 path as the
+  differential oracle for completion behavior.
+"""
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, MEMORY_CLASSES, ModelSpec
+from repro.models import init_model
+from repro.sched import FairPolicy, MursConfig, MursPolicy
+from repro.serve import (
+    ClusterConfig,
+    EngineConfig,
+    Request,
+    ServingCluster,
+    ServingEngine,
+)
+from repro.serve.kv_cache import kv_bytes_per_token
+
+ALL_ARCHS = sorted(ARCHS)
+
+#: the declared class each architecture's byte model must induce —
+#: drift here means the byte model itself changed (DESIGN.md §12 table)
+EXPECTED_CLASS = {
+    "deepseek-v2-236b": "paged_kv",
+    "gemma3-1b": "paged_kv",
+    "granite-moe-3b-a800m": "paged_kv",
+    "internlm2-1.8b": "paged_kv",
+    "internvl2-26b": "paged_kv",
+    "mamba2-2.7b": "constant_state",
+    "qwen1.5-110b": "paged_kv",
+    "stablelm-1.6b": "paged_kv",
+    "whisper-base": "encoder_decoder",
+    "zamba2-1.2b": "paged_kv",
+}
+
+
+# --------------------------------------------------------------- configs
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_spec_constructs_and_classifies(arch):
+    """Every zoo architecture yields a frozen ModelSpec with a declared
+    memory class from the closed vocabulary."""
+    cfg = ARCHS[arch].smoke()
+    spec = cfg.spec()
+    assert isinstance(spec, ModelSpec)
+    assert spec.arch == cfg.name
+    assert spec.memory_class in MEMORY_CLASSES
+    assert spec.memory_class == cfg.memory_class()
+    assert spec.memory_class == EXPECTED_CLASS[arch]
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_byte_model_non_negative_and_monotone(arch):
+    """context_bytes is >= 0 everywhere and non-decreasing in context
+    length — admission estimates must never shrink as a request grows."""
+    cfg = ARCHS[arch].smoke()
+    assert cfg.kv_bytes_per_token() >= 0.0
+    assert cfg.constant_state_bytes() >= 0.0
+    assert cfg.encoder_bytes(0) == 0.0
+    assert cfg.encoder_bytes(16) >= 0.0
+    lengths = [0, 1, 16, 64, 256, 4096]
+    values = [cfg.context_bytes(n) for n in lengths]
+    assert all(v >= 0.0 for v in values)
+    assert all(a <= b for a, b in zip(values, values[1:]))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_grows_with_context_matches_class(arch):
+    """The one-bit summary agrees with the declared class: flat classes
+    have zero marginal bytes, growing classes nonzero."""
+    spec = ARCHS[arch].smoke().spec()
+    if spec.memory_class in ("constant_state", "zero_kv"):
+        assert not spec.grows_with_context
+        assert spec.kv_bytes_per_token == 0.0
+    else:
+        assert spec.grows_with_context
+
+
+def test_encoder_bytes_only_for_encoder_decoder():
+    """Encoder bytes are nonzero exactly for encoder–decoder archs, and
+    scale with the prompt (whisper pays its cross-KV at admission)."""
+    whisper = ARCHS["whisper-base"].smoke()
+    assert whisper.encoder_bytes(8) > 0.0
+    assert whisper.encoder_bytes(64) >= whisper.encoder_bytes(8)
+    for arch in ALL_ARCHS:
+        if arch == "whisper-base":
+            continue
+        assert ARCHS[arch].smoke().encoder_bytes(64) == 0.0
+
+
+# --------------------------------------------------------------- engine
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = ARCHS["internlm2-1.8b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def mamba_model():
+    cfg = ARCHS["mamba2-2.7b"].smoke()
+    params = init_model(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _ecfg(cfg, **over):
+    kw = dict(
+        n_slots=2, max_seq=64,
+        hbm_capacity_bytes=kv_bytes_per_token(cfg) * 80
+        + cfg.constant_state_bytes() * 4,
+        policy=FairPolicy(),
+    )
+    kw.update(over)
+    return EngineConfig(**kw)
+
+
+def test_engine_rejects_wrong_model_typed(small_model):
+    """A request targeting a different arch fails TYPED at submit: it
+    never enters the live set, counts a misroute, and keeps conservation
+    (exactly one terminal outcome)."""
+    cfg, params = small_model
+    eng = ServingEngine(cfg, params, _ecfg(cfg))
+    ok = eng.submit(Request("wm0", "T", [1, 2, 3], 4, model="some-other-arch"))
+    assert ok  # accepted INTO the outcome ledger, not into the batch
+    eng.submit(Request("ok0", "T", [1, 2, 3], 4))
+    rep = eng.run(max_ticks=100)
+    assert eng.misroutes == 1
+    rows = {o.request_id: o for o in rep.outcomes}
+    assert rows["wm0"].outcome == "failed"
+    assert rows["wm0"].reason.startswith("wrong_model:")
+    assert rows["wm0"].model == "some-other-arch"
+    assert rows["ok0"].outcome == "completed"
+    assert rows["ok0"].model == cfg.name
+
+
+def test_engine_stats_declare_model_and_class(small_model, mamba_model):
+    """replica_stats carries the hosted model and its memory class — the
+    routing and scaling signal for heterogeneous fleets."""
+    for cfg, params in (small_model, mamba_model):
+        eng = ServingEngine(cfg, params, _ecfg(cfg))
+        stats = eng.replica_stats()
+        assert stats["model"] == cfg.name
+        assert stats["memory_class"] == cfg.memory_class()
+
+
+def test_paged_decode_int8_flag(small_model):
+    """The int8 paged-decode flag runs the quantized kernel on the same
+    hot path: same completion set as the f32 oracle engine, and the
+    int8 tick counter proves the quantized kernel actually ran."""
+    cfg, params = small_model
+    arrivals = [
+        Request(f"r{i}", "T", list(range(4 + i, 12 + i)), 6)
+        for i in range(3)
+    ]
+
+    def run(int8):
+        eng = ServingEngine(
+            cfg, params, _ecfg(cfg, n_slots=3, paged_decode_int8=int8)
+        )
+        for req in arrivals:
+            eng.submit(
+                Request(req.request_id, req.tenant, list(req.prompt),
+                        req.max_new_tokens)
+            )
+        rep = eng.run(max_ticks=200)
+        return eng, rep
+
+    f32_eng, f32_rep = run(False)
+    i8_eng, i8_rep = run(True)
+    assert f32_eng.paged_int8_ticks == 0
+    assert i8_eng.paged_int8_ticks > 0
+    assert i8_rep.completed == f32_rep.completed == len(arrivals)
+
+
+# -------------------------------------------------------------- cluster
+def _ccfg(cfg, n_replicas, **over):
+    kw = dict(
+        engine=lambda: _ecfg(
+            cfg, policy=MursPolicy(MursConfig.for_serving(period=1.0))
+        ),
+        n_replicas=n_replicas,
+        net_bytes_per_tick=kv_bytes_per_token(cfg) * 16,
+    )
+    kw.update(over)
+    return ClusterConfig(**kw)
+
+
+def test_cluster_routes_by_capability(small_model, mamba_model):
+    """On a mixed fleet every request lands only on a replica hosting
+    its model: zero engine misroutes, per-model outcome rows."""
+    tcfg, tparams = small_model
+    mcfg, mparams = mamba_model
+    cl = ServingCluster(
+        tcfg, tparams, _ccfg(tcfg, 2),
+        models=[(tcfg, tparams), (mcfg, mparams)],
+    )
+    assert cl.hosted_models() == [tcfg.name, mcfg.name]
+    for i in range(3):
+        cl.submit(Request(f"t{i}", "T", [1, 2, 3], 4, model=tcfg.name))
+        cl.submit(Request(f"m{i}", "M", [5, 6, 7], 4, model=mcfg.name))
+    rep = cl.run(max_ticks=300)
+    assert rep.completed == 6
+    assert rep.extras["misroutes"] == 0
+    assert rep.extras["unroutable"] == 0
+    per = rep.model_summary()
+    assert per[tcfg.name]["completed"] == 3
+    assert per[mcfg.name]["completed"] == 3
+
+
+def test_cluster_unroutable_model_fails_typed(small_model):
+    """A request whose model NO replica hosts fails typed — a terminal
+    outcome with an ``unroutable:`` reason, never an exception or a
+    silent drop; routable traffic is unaffected."""
+    cfg, params = small_model
+    cl = ServingCluster(cfg, params, _ccfg(cfg, 2))
+    cl.submit(Request("x0", "X", [1, 2], 3, model="no-such-arch"))
+    cl.submit(Request("ok0", "T", [1, 2, 3], 4))
+    rep = cl.run(max_ticks=200)
+    rows = {o.request_id: o for o in rep.outcomes}
+    assert rows["x0"].outcome == "failed"
+    assert rows["x0"].reason.startswith("unroutable:")
+    assert rows["x0"].model == "no-such-arch"
+    assert rows["ok0"].outcome == "completed"
+    assert rep.extras["unroutable"] == 1
+    # conservation: every submission got exactly one outcome row
+    assert len(rep.outcomes) == 2
+
+
+def test_cluster_all_parked_fails_typed_without_autoscale(small_model):
+    """An all-parked static fleet cannot serve: submissions fail typed
+    instead of dividing by an empty score set or hanging forever."""
+    cfg, params = small_model
+    cl = ServingCluster(cfg, params, _ccfg(cfg, 2))
+    for i in list(cl._active_indices()):
+        cl._park(i)
+    cl.submit(Request("p0", "T", [1, 2, 3], 4))
+    rep = cl.run(max_ticks=100)
+    rows = {o.request_id: o for o in rep.outcomes}
+    assert rows["p0"].outcome == "failed"
+    assert rows["p0"].reason.startswith("unroutable:")
+
+
+def test_cluster_all_parked_revives_with_autoscale(small_model):
+    """The same all-parked fleet WITH autoscaling revives a capable
+    replica instead of failing the request."""
+    cfg, params = small_model
+    cl = ServingCluster(
+        cfg, params,
+        _ccfg(cfg, 2, autoscale=True, min_replicas=1, max_replicas=2,
+              scale_sustain_ticks=2, scale_cooldown_ticks=2),
+    )
+    for i in list(cl._active_indices()):
+        cl._park(i)
+    cl.submit(Request("rv0", "T", [1, 2, 3], 4))
+    rep = cl.run(max_ticks=200)
+    rows = {o.request_id: o for o in rep.outcomes}
+    assert rows["rv0"].outcome == "completed"
+    assert cl.scale_ups >= 1
+
+
+def test_cluster_migration_refuses_cross_arch_target(small_model,
+                                                     mamba_model):
+    """migrate() refuses to export when the only other replica hosts a
+    different arch — the request's sole state copy is never stranded."""
+    tcfg, tparams = small_model
+    mcfg, mparams = mamba_model
+    cl = ServingCluster(
+        tcfg, tparams, _ccfg(tcfg, 2),
+        models=[(tcfg, tparams), (mcfg, mparams)],
+    )
+    cl.submit(Request("h0", "T", list(range(8)), 24, model=tcfg.name))
+    for _ in range(6):
+        cl.step()
+    live = [
+        rid for rid, r in cl.replicas[0].requests.items()
+        if r.state not in ("done", "failed")
+    ]
+    assert live, "request should be running on replica 0"
+    assert cl.migrate(live[0], 0) is False
+    rep = cl.run(max_ticks=300)
+    rows = {o.request_id: o for o in rep.outcomes}
+    assert rows["h0"].outcome == "completed"
+
+
+def test_cluster_models_length_mismatch_raises(small_model):
+    """A models list that does not match n_replicas is a config error."""
+    cfg, params = small_model
+    with pytest.raises(ValueError):
+        ServingCluster(
+            cfg, params, _ccfg(cfg, 2), models=[(cfg, params)]
+        )

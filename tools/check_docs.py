@@ -27,6 +27,17 @@ all hard failures:
    has) must appear in ``docs/OPERATIONS.md`` — a new benchmark key
    without operator documentation fails the gate that merges it.
 
+5. **Every architecture config is classified in DESIGN.md §12.**  Each
+   module under ``src/repro/configs/`` (``__init__.py`` aside) must be
+   named in the §12 memory-class table/prose — adding an architecture
+   without declaring where it sits in the class taxonomy fails here.
+
+6. **model_zoo bench keys are documented.**  The heterogeneous-fleet
+   leg must exist in the baseline and every leaf key under its
+   ``model_zoo`` section must appear in ``docs/OPERATIONS.md`` — the
+   leg's gate bits are correctness claims, so undocumented keys are a
+   harder smell here than elsewhere (check 4 already covers the rest).
+
 Usage::
 
     python tools/check_docs.py [--root .]
@@ -172,7 +183,10 @@ def _leaf_keys(obj, out):
 DOC_EXEMPT = re.compile(
     r"^(arch|debug|seed|n_requests|n_arrivals|horizon_ticks|"
     r"service_mode|hbm_capacity_tokens|b\d+_p\d+|us_per_call|max_err|"
-    r"interpret|mean_s|min_s|max_s|source|distinct|paged_decode_ticks)$"
+    r"interpret|mean_s|min_s|max_s|source|distinct|paged_decode_ticks|"
+    # smoke-config arch names key the model_zoo fleet/per_model maps —
+    # the pattern is documented, not each generated name
+    r"[a-z0-9_.\-]+-smoke)$"
 )
 
 
@@ -197,6 +211,60 @@ def check_bench_keys(root: str) -> list:
     return errors
 
 
+def check_configs_in_design(root: str) -> list:
+    """Every architecture config module must be placed in the DESIGN.md
+    §12 memory-class taxonomy by filename."""
+    design_path = os.path.join(root, "DESIGN.md")
+    design = open(design_path, encoding="utf-8").read()
+    m = re.search(r"^## 12\..*?(?=^## |\Z)", design, re.MULTILINE | re.DOTALL)
+    if not m:
+        return [
+            "DESIGN.md has no '## 12.' section "
+            "(architecture memory classes)"
+        ]
+    section = m.group(0)
+    cfg_dir = os.path.join(root, "src", "repro", "configs")
+    errors = []
+    for fn in sorted(os.listdir(cfg_dir)):
+        if not fn.endswith(".py") or fn == "__init__.py":
+            continue
+        if fn not in section:
+            errors.append(
+                f"configs/{fn} is not classified in DESIGN.md §12"
+            )
+    return errors
+
+
+def check_model_zoo_keys(root: str) -> list:
+    """The heterogeneous-fleet leg must exist in the baseline and every
+    leaf key under ``model_zoo`` must be documented in OPERATIONS.md."""
+    bench_path = os.path.join(root, "BENCH_baseline.json")
+    ops_path = os.path.join(root, "docs", "OPERATIONS.md")
+    if not os.path.exists(bench_path):
+        return [f"missing {bench_path} (commit the benchmark baseline)"]
+    if not os.path.exists(ops_path):
+        return ["missing docs/OPERATIONS.md"]
+    record = json.load(open(bench_path, encoding="utf-8"))
+    mz = record.get("model_zoo")
+    if not isinstance(mz, dict):
+        return [
+            "BENCH_baseline.json has no 'model_zoo' section — the "
+            "heterogeneous-fleet leg did not run (or the baseline "
+            "predates it); refresh the baseline"
+        ]
+    ops = open(ops_path, encoding="utf-8").read()
+    errors = []
+    for key in sorted(_leaf_keys(mz, set())):
+        if DOC_EXEMPT.match(key):
+            continue
+        if key not in ops:
+            errors.append(
+                f"model_zoo bench key '{key}' is not documented in "
+                "docs/OPERATIONS.md"
+            )
+    return errors
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--root", default=".")
@@ -206,6 +274,8 @@ def main(argv=None) -> int:
         ("§ references", check_section_refs),
         ("docstring coverage", check_docstrings),
         ("bench-key documentation", check_bench_keys),
+        ("configs classified in DESIGN.md §12", check_configs_in_design),
+        ("model_zoo keys documented", check_model_zoo_keys),
     )
     failed = False
     for name, fn in checks:
