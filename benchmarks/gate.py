@@ -46,7 +46,10 @@ the router never places a request on an incapable replica, class-aware
 routing's tail no worse than round-robin's), and the
 elastic bits (a delta cutover ships fewer bytes than a full copy, a
 checkpoint restore replays only the uncovered suffix, autoscaled
-goodput holds against the static fleet) as hard pass/fail rows — those are correctness claims of the artifact, not
+goodput holds against the static fleet), and the memory-ledger bit
+(``ledger_matches_recount``: the class-stamped ledger's incremental
+byte tallies equal a ground-truth recount after every policy run) as
+hard pass/fail rows — those are correctness claims of the artifact, not
 noisy timings, so they gate at any regression.
 
 A policy that completed nothing reports ``None`` percentiles; ``None``
@@ -139,6 +142,12 @@ ELASTIC_WIN_BITS = (
     "checkpoint_restore_no_replay_from_zero",
     "elastic_goodput_ge_static",
 )
+
+#: memory-ledger acceptance booleans (hard pass/fail, no threshold):
+#: the class-stamped ledger's incremental tallies must equal a
+#: ground-truth recount at the end of every policy run — a drifting
+#: byte counter is a correctness bug, not a noisy timing
+MEMORY_WIN_BITS = ("ledger_matches_recount",)
 
 
 def _delta_pct(base: float, cur: float) -> float:
@@ -297,6 +306,18 @@ def compare(baseline: dict, current: dict, threshold_pct: float):
             )
             if not ok:
                 failures.append(f"elastic.{bit} is False")
+    # memory-ledger acceptance bit: incremental class tallies equal the
+    # ground-truth recount after every policy run — hard pass/fail
+    mem_wins = current.get("memory", {}).get("memory_wins", {})
+    for bit in MEMORY_WIN_BITS:
+        if bit in mem_wins:
+            ok = bool(mem_wins[bit])
+            rows.append(
+                ("memory", bit, True, mem_wins[bit], None,
+                 "ok" if ok else "FAIL")
+            )
+            if not ok:
+                failures.append(f"memory.{bit} is False")
     # prefix-cache acceptance bits: hard booleans, no threshold
     wins = current.get("prefix_cache", {}).get("sharing_wins", {})
     for bit in ("hit_rate_positive", "peak_pool_lower"):

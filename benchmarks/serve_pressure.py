@@ -40,7 +40,11 @@ per-request bookkeeping (``overload.bookkeeping``).
 Besides the CSV rows every benchmark emits, :func:`collect` returns the
 machine-readable record ``benchmarks/run.py`` writes to
 ``BENCH_serve.json``: throughput, p50/p99 ticks-to-finish, offload count,
-prefix-cache trajectory, and the paired simulator GC time per policy.
+prefix-cache trajectory, and the paired simulator GC time per policy —
+plus the ``memory`` key: each policy run's class-stamped ledger summary
+(per-:class:`~repro.serve.PageClass` bytes and peaks, per-tier bytes)
+and the ``memory_wins.ledger_matches_recount`` hard bit asserting the
+incremental tallies equal a ground-truth recount.
 """
 
 import os
@@ -874,6 +878,7 @@ def collect(debug: bool = False) -> dict:
         "engine": {},
         "sim": {},
     }
+    mem_by_mode = {}
     for mode, make_policy in _policies():
         eng = ServingEngine(
             cfg, params,
@@ -882,6 +887,7 @@ def collect(debug: bool = False) -> dict:
         )
         # fresh Request objects per run — the engine mutates them
         out = _run_stream(eng, _arrivals(debug))
+        mem_by_mode[mode] = out["memory"]
         lat = out["latency_ticks"]
         record["engine"][mode] = {
             "completed": out["completed"],
@@ -921,6 +927,16 @@ def collect(debug: bool = False) -> dict:
                 "full_gcs": m.full_gcs,
                 "spills": sum(j.spills for j in m.jobs.values()),
             }
+    # class-stamped ledger leg (DESIGN.md §13): the per-class memory
+    # breakdown each policy run ended with, plus the self-check hard
+    # bit — the incremental tallies must equal a ground-truth recount
+    record["memory"] = dict(mem_by_mode)
+    record["memory"]["memory_wins"] = {
+        "ledger_matches_recount": all(
+            bool(m.get("ledger_matches_recount"))
+            for m in mem_by_mode.values()
+        ),
+    }
     # prefix-sharing leg: shared system prompt, cache on vs off at equal
     # tenant load (the ISSUE acceptance record)
     record["prefix_cache"] = _collect_prefix_sharing(cfg, params, debug)
@@ -987,6 +1003,14 @@ def main() -> dict:
              "policy-driven frozen-KV swap-outs")
     for mode, row in record["sim"].items():
         emit(f"serve.sim.{mode}.gc_time_s", row["gc_time_s"])
+    for mode in record["engine"]:
+        mem = record["memory"][mode]
+        for cls, v in sorted(mem["peak_by_class"].items()):
+            emit(f"serve.memory.{mode}.peak.{cls}", round(v),
+                 "per-class HBM high-water mark (ledger)")
+    emit("serve.memory.ledger_matches_recount",
+         int(record["memory"]["memory_wins"]["ledger_matches_recount"]),
+         "incremental class tallies equal a ground-truth recount")
     pc = record["prefix_cache"]
     emit("serve.prefix.hit_rate", pc["hit_rate"],
          "shared-system-prompt stream, token-level")

@@ -6,17 +6,17 @@ Round-robin core handout across tenants (inherited from
 and ``admission_headroom`` is 1.0, so the runtimes apply stock semantics
 — admit until the pool is full, then resolve overcommit reactively
 (spill / offload-to-host, or OOM-style hard failure when no spill path
-exists).  The ``cache_pressure`` and ``demotion_pressure`` hints stay at
-the BasePolicy default of 0.0 for every tenant: the stock prefix-cache
-eviction order is pure LRU, and frozen KV is never demoted proactively —
-reactive-only tiering is exactly what "stock" means.  Likewise
-``placement_score`` stays at the base 0.0 for every replica, so
-cross-replica routing under FAIR is the router's round-robin tie-break:
-pressure-oblivious request spraying, the multi-server stock baseline.
-``shed_order`` is likewise the inherited FIFO-over-groups order: under
-admission overload the earliest-arrived tenant sheds first, with no
-regard for who is actually filling the pool — the failure mode the
-usage-rate order is measured against.
+exists).  The ``pressure()`` plan stays at the BasePolicy stock: every
+per-class score is 0.0 for every tenant, so prefix-cache eviction order
+is pure LRU and frozen KV is never demoted proactively — reactive-only
+tiering is exactly what "stock" means.  Likewise ``placement_score``
+stays at the base 0.0 for every replica, so cross-replica routing under
+FAIR is the router's round-robin tie-break: pressure-oblivious request
+spraying, the multi-server stock baseline.  The plan's shed key is
+likewise the inherited FIFO-over-groups order: under admission overload
+the earliest-arrived tenant sheds first, with no regard for who is
+actually filling the pool — the failure mode the usage-rate order is
+measured against.
 """
 
 from __future__ import annotations

@@ -372,7 +372,7 @@ class MursPolicy(BasePolicy):
         """True when the group's declared class cannot grow the pool."""
         return self._group_class.get(group) in FLAT_CLASSES
 
-    def shed_order(self, groups, stats) -> List[str]:
+    def _shed_key(self, group: str, row) -> tuple:
         """Shed the highest-usage-rate group FIRST (paper §III at the
         front door): its admitted traffic grows the pool fastest, so
         rejecting it protects the most SLO traffic per rejected request.
@@ -381,22 +381,17 @@ class MursPolicy(BasePolicy):
         in-flight demand stands in — demand-ordered shedding is the
         zero-information approximation of rate-ordered shedding.  Ties
         fall back to group arrival order (FIFO), matching the base."""
-
-        def key(g: str):
-            row = stats.get(g, {})
-            # a structurally flat tenant (mamba / zero-KV) cannot grow the
-            # pool: shedding it buys nothing per §III, so it sheds LAST
-            if self._flat_group(g):
-                rate = 0.0
-            else:
-                rate = self._group_rate.get(g, row.get("rate", 0.0))
-            return (
-                -rate,
-                -row.get("demand_bytes", 0.0),
-                row.get("arrival_seq", 0.0),
-            )
-
-        return sorted(groups, key=key)
+        # a structurally flat tenant (mamba / zero-KV) cannot grow the
+        # pool: shedding it buys nothing per §III, so it sheds LAST
+        if self._flat_group(group):
+            rate = 0.0
+        else:
+            rate = self._group_rate.get(group, row.get("rate", 0.0))
+        return (
+            -rate,
+            -row.get("demand_bytes", 0.0),
+            row.get("arrival_seq", 0.0),
+        )
 
     # ------------------------------------------------------ cluster placement
     def placement_score(self, group: str, replica_stats) -> float:
@@ -475,19 +470,7 @@ class MursPolicy(BasePolicy):
             return 0.5
         return 1.0 - min(rate / top, 1.0)
 
-    def cache_pressure(self, group: str) -> float:
-        """Evictability of ``group``'s cold cached prefixes, in [0, 1].
-
-        MURS reads the memory-usage rate the other way around for CACHED
-        data: a LOW-rate tenant's prefix is cheap to regrow (few bytes per
-        token re-prefilled) and shields little future allocation, so it
-        evicts FIRST; a high-rate tenant's cached prefix spares the pool
-        the most growth and is kept longest.
-        """
-        return self._inverse_rate_score(group)
-
-    # -------------------------------------------------------- demotion hint
-    def demotion_pressure(self, group: str) -> float:
+    def _frozen_score(self, group: str) -> float:
         """How eagerly ``group``'s FROZEN KV demotes to the host tier,
         in [0, 1] — the usage-rate classes of §III applied to tier
         placement.  A low-rate tenant's suspended pages sit frozen the
@@ -499,6 +482,37 @@ class MursPolicy(BasePolicy):
         by definition demotable, the hint only orders who goes first.
         """
         return max(self._inverse_rate_score(group), 0.1)
+
+    @staticmethod
+    def _scratch_score(group: str) -> float:
+        """SCRATCH is free to regenerate by definition: every group's
+        scratch pages are equally first out the door."""
+        return 1.0
+
+    def pressure(self, view=None):
+        """MURS's :class:`~repro.serve.ledger.PressurePlan` — §III as
+        class orders and usage-rate scores.
+
+        The class orders keep the stock shape (reclaim SCRATCH, then
+        COLD_CACHED, then FROZEN; proactively demote FROZEN before
+        COLD_CACHED), so cold cache always evicts before frozen state is
+        touched *by construction*.  The scores are the usage-rate lens:
+        ``COLD_CACHED`` evicts LOW-rate tenants' prefixes first (cheap to
+        regrow, shield little future allocation — a high-rate tenant's
+        cached prefix spares the pool the most growth and is kept
+        longest), ``FROZEN`` demotes low-rate tenants' suspended KV
+        first, and the shed key rejects the highest-rate group's
+        arrivals first."""
+        from repro.serve.ledger import PageClass, PressurePlan
+
+        return PressurePlan(
+            scores={
+                PageClass.SCRATCH: self._scratch_score,
+                PageClass.COLD_CACHED: self._inverse_rate_score,
+                PageClass.FROZEN: self._frozen_score,
+            },
+            shed_key=self._shed_key,
+        )
 
     # ------------------------------------------------------------ resume API
     def on_task_complete(self, task_id: Optional[str] = None) -> Optional[str]:

@@ -96,17 +96,11 @@ class PriorityPolicy(BasePolicy):
             free -= 1
         return picks
 
-    def shed_order(self, groups, stats) -> List[str]:
+    def _shed_key(self, group: str, row) -> tuple:
         """Shed lowest-weight groups first (by 1/weight): under admission
         overload a paid/priority tenant's arrivals are the last to 503.
         Ties fall back to group arrival order (FIFO)."""
-        return sorted(
-            groups,
-            key=lambda g: (
-                self.weight_of(g),
-                stats.get(g, {}).get("arrival_seq", 0.0),
-            ),
-        )
+        return (self.weight_of(group), row.get("arrival_seq", 0.0))
 
     # ------------------------------------------------------ cluster placement
     def placement_score(self, group: str, replica_stats) -> float:
@@ -123,18 +117,26 @@ class PriorityPolicy(BasePolicy):
         slots = float(replica_stats.get("slot_load", 0.0))
         return -0.5 * (demand + slots) / self.weight_of(group)
 
-    # ----------------------------------------------------------- cache hint
-    def cache_pressure(self, group: str) -> float:
-        """Weight-ordered eviction: a low-weight tenant's cold cached
-        prefixes evict before a high-weight tenant's (1/(1+w) keeps the
-        score in (0, 1) and monotone in weight)."""
+    # ------------------------------------------------------ pressure surface
+    def _weight_score(self, group: str) -> float:
+        """Weight-ordered reclaim: a low-weight tenant's pages go first
+        (1/(1+w) keeps the score in (0, 1) and monotone in weight)."""
         return 1.0 / (1.0 + self.weight_of(group))
 
-    def demotion_pressure(self, group: str) -> float:
-        """Weight-ordered tier placement: a low-weight tenant's frozen KV
-        demotes to the host tier first (same score as cache eviction —
-        both hints rank who pays for pressure)."""
-        return self.cache_pressure(group)
+    def pressure(self, view=None):
+        """Weight-ordered :class:`~repro.serve.ledger.PressurePlan`: cold
+        cached prefixes evict and frozen KV demotes low-weight-first (the
+        same 1/(1+w) score ranks who pays for pressure in both classes),
+        and the front door sheds by inverse weight."""
+        from repro.serve.ledger import PageClass, PressurePlan
+
+        return PressurePlan(
+            scores={
+                PageClass.COLD_CACHED: self._weight_score,
+                PageClass.FROZEN: self._weight_score,
+            },
+            shed_key=self._shed_key,
+        )
 
     # -------------------------------------------------------------- pressure
     def propose(

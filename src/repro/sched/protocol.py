@@ -25,7 +25,9 @@ plus two placement hooks:
         door's hook): MURS sheds the highest-usage-rate group first
         (paper §III — its traffic costs the pool the most future
         allocation), PriorityPolicy sheds by inverse weight, and the
-        base/fair order is FIFO over group arrival.
+        base/fair order is FIFO over group arrival.  Implemented as a
+        thin wrapper over ``pressure().shed_key`` — subclasses customize
+        the plan, not this method.
 
     placement_score(group, replica_stats) → preference for placing the
         group's next request on the replica described by ``replica_stats``
@@ -45,23 +47,25 @@ plus two placement hooks:
         when its admitted requests will grow into the pool, not merely
         when its batch rows are busy.
 
-and two memory-placement hints:
+and ONE memory-pressure surface:
 
-    cache_pressure(group) → evictability score for the group's COLD cached
-        data (the serving engine's prefix-cache pages).  Higher = evict
-        sooner; ties fall back to LRU.  The base default is 0.0 for every
-        group (pure LRU).  MURS returns high pressure for LOW-usage-rate
-        tenants — their prefixes regrow cheaply, while a heavy tenant's
-        cached prefix spares the pool the most future allocation.
-
-    demotion_pressure(group) → sibling hint for the TIER hierarchy: how
-        eagerly the group's FROZEN (suspended) KV pages should demote
-        HBM → host, proactively, before the reactive spill path fires.
-        0.0 (the base default) means never-proactively — the stock
-        baseline only pays reactive spills.  MURS marks low-usage-rate
-        tenants: their frozen pages are the cheapest to park in host
-        memory and the paper's ~90% spill reduction is exactly this
-        demote-early-by-class behaviour.
+    pressure(view: LedgerView) → PressurePlan
+        the policy's complete answer to "memory is tight — what goes
+        first?", replacing the three historical hooks (``cache_pressure``,
+        ``demotion_pressure``, ``shed_order``) with one plan built from
+        the class-stamped ledger view: per-:class:`PageClass` reclaim and
+        proactive-demotion orders plus per-class group-scoring callables
+        and a front-door shed key.  The stock plan evicts ``SCRATCH``,
+        then ``COLD_CACHED``, and only then demotes ``FROZEN`` — so MURS
+        evicts cold cache before touching frozen state *by construction*.
+        The base scores are 0.0 for every group (pure LRU eviction,
+        never-proactive demotion — the stock baseline only pays reactive
+        spills); MURS scores by inverse usage rate (a LOW-rate tenant's
+        prefixes regrow cheaply and its frozen pages are cheapest to park
+        in host memory — the paper's ~90% spill reduction is exactly this
+        demote-early-by-class behaviour).  ``cache_pressure(group)`` /
+        ``demotion_pressure(group)`` survive as thin wrappers reading the
+        plan's ``COLD_CACHED`` / ``FROZEN`` scores.
 
 Runtimes interrogate declarative attributes instead of branching on the
 policy's type: ``proactive`` (True → the policy prevents overcommit via
@@ -87,6 +91,7 @@ from typing import (
 if TYPE_CHECKING:  # annotation-only: keeps repro.sched import-cycle free
     from repro.core.memory_manager import MemoryPool
     from repro.core.sampler import TaskStats
+    from repro.serve.ledger import LedgerView, PressurePlan
 
 __all__ = ["SchedulingDecision", "SchedulingPolicy", "BasePolicy"]
 
@@ -153,6 +158,10 @@ class SchedulingPolicy(Protocol):
 
     def group_classes(self) -> Mapping[str, str]: ...
 
+    def pressure(
+        self, view: Optional["LedgerView"] = None
+    ) -> "PressurePlan": ...
+
     def cache_pressure(self, group: str) -> float: ...
 
     def demotion_pressure(self, group: str) -> float: ...
@@ -214,18 +223,57 @@ class BasePolicy:
     def drop(self, task_id: str) -> None:
         self._suspended = [t for t in self._suspended if t != task_id]
 
+    # ------------------------------------------------------ pressure surface
+    @staticmethod
+    def _zero_score(group: str) -> float:
+        """Stock per-group score: 0.0 for everyone — cold-cache eviction
+        falls back to pure LRU and frozen KV never demotes proactively."""
+        return 0.0
+
+    @staticmethod
+    def _fifo_shed_key(group: str, row: Mapping[str, float]) -> tuple:
+        """Stock shed key: earliest-arrived group sheds first (FIFO) —
+        rate-oblivious, the baseline the usage-rate order is measured
+        against."""
+        return (row.get("arrival_seq", 0.0),)
+
+    def pressure(self, view=None) -> "PressurePlan":
+        """The one memory-pressure surface: a :class:`PressurePlan` built
+        from the class-stamped ledger ``view`` (may be ``None`` when the
+        caller has no ledger, e.g. at wiring time).
+
+        The stock plan keeps the default class orders (evict ``SCRATCH``,
+        then ``COLD_CACHED``, then demote ``FROZEN``) with zero scores
+        everywhere: pure-LRU cache eviction, never-proactive demotion,
+        FIFO front-door shedding.  Subclasses override THIS method —
+        ``cache_pressure`` / ``demotion_pressure`` / ``shed_order`` below
+        are wrappers reading the plan and must not be overridden."""
+        from repro.serve.ledger import PageClass, PressurePlan
+
+        return PressurePlan(
+            scores={
+                PageClass.COLD_CACHED: self._zero_score,
+                PageClass.FROZEN: self._zero_score,
+            },
+            shed_key=self._fifo_shed_key,
+        )
+
     # ------------------------------------------------------------ cache hint
     def cache_pressure(self, group: str) -> float:
-        """Evictability of ``group``'s cold cached pages: 0.0 for everyone
-        → the cache falls back to pure LRU (the stock baseline)."""
-        return 0.0
+        """Evictability of ``group``'s cold cached pages — the plan's
+        ``COLD_CACHED`` score (stock: 0.0 for everyone → pure LRU)."""
+        from repro.serve.ledger import PageClass
+
+        return self.pressure().score(PageClass.COLD_CACHED, group)
 
     # --------------------------------------------------------- demotion hint
     def demotion_pressure(self, group: str) -> float:
         """How eagerly ``group``'s frozen KV should demote to the host
-        tier ahead of need: 0.0 for everyone → never proactively (the
-        stock baseline only ever pays the reactive spill path)."""
-        return 0.0
+        tier ahead of need — the plan's ``FROZEN`` score (stock: 0.0 for
+        everyone → only ever the reactive spill path)."""
+        from repro.serve.ledger import PageClass
+
+        return self.pressure().score(PageClass.FROZEN, group)
 
     # ------------------------------------------------------------- placement
     def placement_score(
@@ -301,14 +349,13 @@ class BasePolicy:
         group to ``{"rate", "demand_bytes", "arrival_seq"}`` (usage-rate
         estimate, in-flight projected bytes, first-seen order).
 
-        The base/fair order is FIFO over groups: the earliest-arrived
-        group sheds first — rate-oblivious, exactly the baseline the
-        usage-rate order is measured against.
+        A wrapper over the plan's ``shed_key``: the base/fair key is FIFO
+        over group arrival, MURS sheds the highest-usage-rate group first,
+        PriorityPolicy by inverse weight.  Override :meth:`pressure`, not
+        this.
         """
-        return sorted(
-            groups,
-            key=lambda g: stats.get(g, {}).get("arrival_seq", 0.0),
-        )
+        key = self.pressure().shed_key
+        return sorted(groups, key=lambda g: key(g, stats.get(g, {})))
 
     def assign(self, free: int, pending: Mapping[str, int]) -> List[str]:
         """Round-robin over groups with pending work; one pick per core."""

@@ -11,6 +11,7 @@ from .engine import (
     ServingEngine,
 )
 from .frontdoor import FrontDoor, FrontDoorConfig, TokenBucket
+from .ledger import LedgerView, MemoryLedger, PageClass, PressurePlan
 from .kv_cache import (
     CACHE_OWNER,
     DEMOTED,
@@ -55,11 +56,15 @@ __all__ = [
     "FrontDoorConfig",
     "LOST",
     "LatencySummary",
+    "LedgerView",
+    "MemoryLedger",
     "MigrationTicket",
+    "PageClass",
     "PrecopySnapshot",
     "PageBlockAllocator",
     "PagedKVManager",
     "PrefixCache",
+    "PressurePlan",
     "RATE_LIMITED",
     "Request",
     "RequestOutcome",

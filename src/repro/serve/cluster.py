@@ -89,6 +89,7 @@ from repro.serve.engine import (
     Request,
     ServingEngine,
 )
+from repro.serve.ledger import PageClass
 from repro.serve.report import (
     COMPLETED,
     FAILED,
@@ -398,7 +399,7 @@ class ServingCluster:
             s["used_fraction"] * s["capacity_bytes"] for s in per
         )
         n_slots = sum(eng.ecfg.n_slots for eng in active)
-        return {
+        out = {
             "demand_fraction": demand_bytes / cap if cap > 0 else 0.0,
             "projected_fraction": projected_bytes / cap if cap > 0 else 0.0,
             "used_fraction": used_bytes / cap if cap > 0 else 0.0,
@@ -418,6 +419,52 @@ class ServingCluster:
             "capacity_bytes": float(cap),
             "projected_bytes": float(projected_bytes),
         }
+        # the class-aware fleet view: per-lifetime-class HBM bytes summed
+        # across active replicas (each replica's row is its ledger's
+        # breakdown) — what placement and scale_pressure read per-class
+        for cls in PageClass:
+            key = f"{cls.value}_bytes"
+            out[key] = float(sum(s.get(key, 0.0) for s in per))
+        out["frozen_fraction"] = (
+            out[f"{PageClass.FROZEN.value}_bytes"] / cap if cap > 0 else 0.0
+        )
+        out["reclaimable_fraction"] = (
+            sum(
+                s.get("reclaimable_fraction", 0.0) * s["capacity_bytes"]
+                for s in per
+            )
+            / cap
+            if cap > 0
+            else 0.0
+        )
+        return out
+
+    def memory_stats(self) -> Dict[str, Any]:
+        """Fleet memory view: every replica's ledger stats summed
+        key-wise (per-class, per-tier, peaks, projected, spill), with
+        ``ledger_matches_recount`` the AND across replicas — ONE replica
+        drifting fails the fleet's hard bit."""
+        per = [eng.memory_stats() for eng in self.replicas]
+        out: Dict[str, Any] = {
+            "by_class": {},
+            "peak_by_class": {},
+            "by_tier": {},
+            "hbm_bytes": 0.0,
+            "projected_bytes": 0.0,
+            "disk_spill_bytes": 0.0,
+            "ledger_matches_recount": True,
+        }
+        for s in per:
+            for key in ("by_class", "peak_by_class", "by_tier"):
+                agg = out[key]
+                for k, v in s.get(key, {}).items():
+                    agg[k] = agg.get(k, 0.0) + v
+            for key in ("hbm_bytes", "projected_bytes", "disk_spill_bytes"):
+                out[key] += float(s.get(key, 0.0))
+            out["ledger_matches_recount"] = out[
+                "ledger_matches_recount"
+            ] and bool(s.get("ledger_matches_recount", True))
+        return out
 
     # ------------------------------------------------------- fault injection
     def set_slowdown(self, replica: int, factor: float) -> None:
@@ -1256,6 +1303,7 @@ class ServingCluster:
             "tick_cost": _merge_tick_costs(
                 [eng.tick_cost_stats() for eng in self.replicas]
             ),
+            "memory": self.memory_stats(),
             "replicas": [
                 {
                     "completed": len(eng.completed),
@@ -1346,6 +1394,7 @@ class ServingCluster:
                     "replicas",
                 )
             },
+            memory=legacy["memory"],
             extras=legacy,
         )
         rep.refresh_summaries()

@@ -61,7 +61,7 @@ prefixes evict under pressure in LRU order crossed with the policy's
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,6 +85,7 @@ from repro.serve.kv_cache import (
     DEMOTED,
     PagedKVManager,
 )
+from repro.serve.ledger import PageClass, PressurePlan
 from repro.serve.report import (
     COMPLETED,
     FAILED,
@@ -412,8 +413,13 @@ class ServingEngine:
             ),
         )
         self.policy: SchedulingPolicy = ecfg.resolve_policy()
-        # eviction order consults the active policy: LRU × cache_pressure
-        self.kv.cache_pressure_fn = self.policy.cache_pressure
+        # eviction order consults the active policy's pressure plan:
+        # LRU × the plan's COLD_CACHED score (the scores close over the
+        # policy's live rate state, so binding the plan once is safe)
+        _wiring_plan = self.policy.pressure()
+        self.kv.cache_pressure_fn = lambda g: _wiring_plan.score(
+            PageClass.COLD_CACHED, g
+        )
         self.sampler = Sampler()
         self.tick = 0
         self.queue = _AdmissionQueue()
@@ -429,12 +435,9 @@ class ServingEngine:
         #: dropped with the request) — O(1) counts for has_pending,
         #: replica_stats and the per-tick active-slot cost
         self._state_ids: Dict[str, set] = {}
-        #: running Σ estimate_request_bytes over live requests, and the
-        #: same split per tenant (the front door's group_demand feed)
-        self._projected_bytes = 0.0
-        self._projected_by_tenant: Dict[str, float] = {}
-        self._tenant_live: Dict[str, int] = {}  # tenant → live requests
-        self._est: Dict[str, float] = {}  # rid → cached peak estimate
+        # (projected-demand bookkeeping lives in the KV manager's
+        # MemoryLedger — note_projection/drop_projection in _track_live /
+        # _drop_live; the front door's group_demand reads it there)
         #: rids whose state changed since the last pool sync — merged
         #: with the KV manager's allocator dirty set in _update_pool
         self._pool_dirty: set = set()
@@ -484,7 +487,6 @@ class ServingEngine:
         self._tick_cost_values: set = set()  # bounded distinct sample
         self._tick_prefill_tokens = 0
         self._tick_decode_tokens = 0
-        self._tick_decode_kv_bytes = 0.0
         #: KV snapshots backing cached prefixes: snap_key (the caching
         #: prompt's token tuple) → (slot cache subtree, first greedy token,
         #: snapshot length).  Pruned when the trie evicts the last node
@@ -664,19 +666,20 @@ class ServingEngine:
         self._state_ids.setdefault(new, set()).add(req.request_id)
         req.state = new
         self._pool_dirty.add(req.request_id)
+        # suspension is a lifetime-class transition: the ledger restamps
+        # the request's sole-held pages PRIVATE_SUFFIX ⇄ FROZEN
+        if new == "suspended":
+            self.kv.set_frozen(req.request_id, True)
+        elif old == "suspended":
+            self.kv.set_frozen(req.request_id, False)
 
     def _track_live(self, req: Request) -> None:
         rid = req.request_id
         self._live[rid] = req
         self._state_ids.setdefault(req.state, set()).add(rid)
-        est = self.estimate_request_bytes(req)
-        self._est[rid] = est
-        self._projected_bytes += est
-        tenant = req.tenant
-        self._projected_by_tenant[tenant] = (
-            self._projected_by_tenant.get(tenant, 0.0) + est
+        self.kv.ledger.note_projection(
+            rid, req.tenant, self.estimate_request_bytes(req)
         )
-        self._tenant_live[tenant] = self._tenant_live.get(tenant, 0) + 1
 
     def _drop_live(self, req: Request) -> None:
         rid = req.request_id
@@ -685,22 +688,10 @@ class ServingEngine:
         ids = self._state_ids.get(req.state)
         if ids is not None:
             ids.discard(rid)
-        est = self._est.pop(rid, 0.0)
-        self._projected_bytes -= est
-        tenant = req.tenant
-        left = self._tenant_live.get(tenant, 0) - 1
-        if left <= 0:
-            # popping the emptied tenant also drops any accumulated float
-            # residue, so projected demand cannot drift over a long run
-            self._tenant_live.pop(tenant, None)
-            self._projected_by_tenant.pop(tenant, None)
-        else:
-            self._tenant_live[tenant] = left
-            self._projected_by_tenant[tenant] = (
-                self._projected_by_tenant.get(tenant, 0.0) - est
-            )
-        if not self._live:
-            self._projected_bytes = 0.0  # settle on empty
+        # the ledger settles per-tenant projections exactly (the bucket
+        # is dropped with its last entry), so there is no residue to
+        # reset — the old "settle on empty" workaround is gone
+        self.kv.ledger.drop_projection(rid)
 
     # ------------------------------------------------------------- tenants
     def submit(self, req: Request) -> bool:
@@ -948,7 +939,9 @@ class ServingEngine:
         if req.state == "queued":
             self.queue.append(req)
             return
-        self.kv.register(rid, self.cfg, prompt_tokens=len(req.prompt))
+        self.kv.register(
+            rid, self.cfg, prompt_tokens=len(req.prompt), tenant=req.tenant
+        )
         if ticket.slot_cache is not None or self._payload_covers(ticket):
             self._set_state(req, "importing")
             self._imports[rid] = ticket
@@ -1015,12 +1008,12 @@ class ServingEngine:
         self, page_budget: Optional[int] = None
     ) -> Optional[Dict[str, Any]]:
         """One periodic KV snapshot: the page payloads + token progress a
-        crash restore needs, ordered by DESIGN.md §6 lifetime class —
-        SHARED-PREFIX pages first (they outlive any one request and
-        shield the most replay per byte), then private suffix pages;
-        draft-class pages would never checkpoint (§11).  ``page_budget``
-        truncates after the ordering, so whatever fits is always the
-        longest-lived state.
+        crash restore needs, ordered by the ledger's
+        :class:`~repro.serve.ledger.PageClass` stamp — ``SHARED_PREFIX``
+        pages first (they outlive any one request and shield the most
+        replay per byte), then private suffix pages; ``SCRATCH`` pages
+        would never checkpoint (§11).  ``page_budget`` truncates after
+        the ordering, so whatever fits is always the longest-lived state.
 
         Returns ``{"epoch", "reqs": [{"rid", "pos", "generated",
         "pages": {index: payload}}], "raw_bytes", "stored_bytes"}`` —
@@ -1124,7 +1117,7 @@ class ServingEngine:
             req.pos = 0
             self.queue.append(req)
             return "queued"
-        self.kv.register(rid, self.cfg)
+        self.kv.register(rid, self.cfg, tenant=req.tenant)
         covered = 0
         while page_payloads.get(covered) is not None:
             covered += 1
@@ -1220,7 +1213,7 @@ class ServingEngine:
                 sum(1 for r in self._live.values() if r.state == "suspended")
             )
         else:
-            projected_bytes = self._projected_bytes
+            projected_bytes = self.kv.ledger.projected_bytes()
             suspended = float(len(self._state_ids.get("suspended", ())))
         demand = 0.0
         projected = 0.0
@@ -1232,7 +1225,7 @@ class ServingEngine:
             projected = projected_bytes / cap
         busy = sum(1 for r in self._slot_req if r is not None)
         waiting = len(self.queue) + len(self._restore) + len(self._imports)
-        return {
+        stats = {
             "demand_fraction": demand,
             "projected_fraction": projected,
             "used_fraction": self.pool.used_fraction,
@@ -1247,6 +1240,18 @@ class ServingEngine:
             "model": self.cfg.name,
             "memory_class": self.spec.memory_class,
         }
+        # the class-aware view: per-lifetime-class HBM bytes, straight
+        # off the ledger — placement and scale_pressure read these
+        by_class = self.kv.ledger.class_breakdown()
+        for cls in PageClass:
+            stats[f"{cls.value}_bytes"] = by_class.get(cls, 0.0)
+        stats["frozen_fraction"] = (
+            by_class.get(PageClass.FROZEN, 0.0) / cap if cap > 0 else 0.0
+        )
+        stats["reclaimable_fraction"] = (
+            self.kv.reclaimable_bytes / cap if cap > 0 else 0.0
+        )
+        return stats
 
     def tick_cost_stats(self) -> Dict[str, Any]:
         """Distribution of the roofline-derived tick costs this engine
@@ -1275,7 +1280,7 @@ class ServingEngine:
                     out.get(r.tenant, 0.0) + self.estimate_request_bytes(r)
                 )
             return out
-        return dict(self._projected_by_tenant)
+        return self.kv.ledger.projected_by_tenant()
 
     def estimate_request_bytes(self, req: Request) -> float:
         """Page-rounded bytes the request will pin at its declared peak
@@ -1327,11 +1332,32 @@ class ServingEngine:
         self.peak_used_fraction = max(
             self.peak_used_fraction, self.pool.used_fraction
         )
+        self.kv.ledger.sample_peaks()
         if self.pool.capacity > 0:
             demand = (
                 self.pool.used_bytes - self.kv.reclaimable_bytes
             ) / self.pool.capacity
             self.peak_demand_fraction = max(self.peak_demand_fraction, demand)
+
+    def _pressure_plan(self) -> PressurePlan:
+        """Ask the policy how to relieve pressure, handing it the
+        class-stamped ledger view (the one surface replacing the old
+        ``cache_pressure``/``demotion_pressure``/``shed_order`` trio)."""
+        return self.policy.pressure(self.kv.ledger.view(self.pool.capacity))
+
+    def _reclaim_one(
+        self, cls: PageClass, protect: Sequence[int] = ()
+    ) -> bool:
+        """Reclaim ONE page of ``cls`` (the plan loops this until the
+        deficit clears or the class runs dry).  Returns False when the
+        class has nothing left to give."""
+        if cls is PageClass.SCRATCH:
+            return self.kv.evict_scratch(1) > 0
+        if cls is PageClass.COLD_CACHED:
+            return self.kv.evict_cache(1, protect=protect) > 0
+        if cls is PageClass.FROZEN:
+            return self._demote_frozen_page()
+        return False
 
     def _active(self) -> List[Request]:
         return [
@@ -1455,31 +1481,40 @@ class ServingEngine:
                 self.failed.append(req.request_id)
                 self._drop_live(req)
                 continue
-            # cold cached prefixes are the cheapest bytes to shed — drop
-            # them (policy-ordered) before touching anyone's frozen KV,
-            # but never the pages the probe above counted as shareable
-            while self.pool.used_bytes + prompt_bytes > headroom:
-                if not self.kv.evict_cache(1, protect=protected):
-                    break
-                self._update_pool()
-            # frozen suspended KV pins the pool while slots idle — demote
-            # it PAGE BY PAGE while that can actually open the door (no
-            # more bytes leave HBM than the deficit requires)
-            while (
-                self.pool.used_bytes + prompt_bytes > headroom
-                and self.pool.used_bytes - self._frozen_bytes() + prompt_bytes
-                <= headroom
-            ):
-                if not self._demote_frozen_page():
-                    break
-                self._update_pool()
+            # reclaim class by class in the policy plan's order (stock:
+            # SCRATCH, then COLD_CACHED, then FROZEN) — scratch and cold
+            # cache are cheap drops; frozen suspended KV demotes PAGE BY
+            # PAGE and only while that can actually open the door (no
+            # more bytes leave HBM than the deficit requires).  The probe
+            # above's shareable pages stay protected throughout.
+            plan = self._pressure_plan()
+            for cls in plan.reclaim_order:
+                if cls is PageClass.FROZEN:
+                    while (
+                        self.pool.used_bytes + prompt_bytes > headroom
+                        and self.pool.used_bytes
+                        - self.kv.ledger.class_bytes(PageClass.FROZEN)
+                        + prompt_bytes
+                        <= headroom
+                    ):
+                        if not self._demote_frozen_page():
+                            break
+                        self._update_pool()
+                else:
+                    while self.pool.used_bytes + prompt_bytes > headroom:
+                        if not self._reclaim_one(cls, protect=protected):
+                            break
+                        self._update_pool()
             if self.pool.used_bytes + prompt_bytes > headroom:
                 break  # pool-bound: nobody else fits this tick either
             self.queue.remove(req)
             if by_tenant is not None:
                 by_tenant[tenant].pop(0)
             self.kv.register(
-                req.request_id, self.cfg, prompt_tokens=len(req.prompt)
+                req.request_id,
+                self.cfg,
+                prompt_tokens=len(req.prompt),
+                tenant=req.tenant,
             )
             if self.ecfg.prefix_cache:
                 # the trie hands over every page of the longest cached
@@ -1809,7 +1844,11 @@ class ServingEngine:
         self._update_pool()
 
     # --------------------------------------------------------------- decode
-    def _decode_tick(self) -> None:
+    def _decode_tick(self) -> float:
+        """One decode tick over the resident active slots.  Returns the
+        KV bytes the tick's attention read (the roofline's HBM traffic
+        term), derived from the ledger's per-owner attribution — not a
+        separately maintained tally."""
         active = []
         for i, rid in enumerate(self._slot_req):
             if rid is None or self.requests[rid].state != "decoding":
@@ -1824,9 +1863,9 @@ class ServingEngine:
                 continue
             active.append((i, self.requests[rid]))
         if not active:
-            return
+            return 0.0
         self._tick_decode_tokens = len(active)
-        self._tick_decode_kv_bytes = sum(
+        kv_bytes_read = sum(
             self.kv.request_bytes(req.request_id) for _, req in active
         )
         if self._paged_ok and self.kv.n_pages > 0:
@@ -1858,6 +1897,7 @@ class ServingEngine:
             if req.done:
                 self._finish(req)
         self._update_pool()
+        return kv_bytes_read
 
     def _decode_dense_batch(self, active) -> np.ndarray:
         """Dense vmapped decode over all slots (the differential oracle).
@@ -2038,10 +2078,9 @@ class ServingEngine:
         stalls0 = self.stall_ticks
         self._tick_prefill_tokens = 0
         self._tick_decode_tokens = 0
-        self._tick_decode_kv_bytes = 0.0
         self._admit()
         self._prefill_tick()
-        self._decode_tick()
+        kv_bytes_read = self._decode_tick()
         # roofline-derived tick service time (modeled seconds): bytes
         # moved this tick — weight stream + the KV pages of the requests
         # actually decoded + prefill writes — over HBM bandwidth, vs
@@ -2052,7 +2091,7 @@ class ServingEngine:
         cost = self._tick_cost_model.tick_seconds(
             decode_tokens=self._tick_decode_tokens,
             prefill_tokens=self._tick_prefill_tokens,
-            kv_bytes_read=self._tick_decode_kv_bytes,
+            kv_bytes_read=kv_bytes_read,
             stall_events=self.stall_ticks - stalls0,
         )
         self.last_tick_cost = cost
@@ -2089,25 +2128,9 @@ class ServingEngine:
             self._pruned_at_evictions = self.kv.cache_evictions
         self.tick += 1
 
-    def _frozen_bytes(self) -> float:
-        """Pool bytes held by swappable (suspended, not restoring) KV."""
-        if self.ecfg.legacy_bookkeeping:
-            return sum(
-                self.kv.request_bytes(r.request_id)
-                for r in self._live.values()
-                if r.state == "suspended"
-                and r.request_id not in self._restore
-            )
-        restoring = set(self._restore)
-        return sum(
-            self.kv.request_bytes(rid)
-            for rid in sorted(self._state_ids.get("suspended", ()))
-            if rid not in restoring
-        )
-
     def _frozen_victims(self, require_pressure: bool) -> List[Request]:
         """Suspended requests whose frozen KV may demote, best victim
-        first: highest ``demotion_pressure`` (the policy's hint — MURS
+        first: highest plan ``FROZEN`` score (the policy's hint — MURS
         marks low-usage-rate tenants), then fattest.  With
         ``require_pressure`` only positively-marked tenants qualify (the
         proactive pass is policy-opt-in; the reactive paths take anyone).
@@ -2129,6 +2152,7 @@ class ServingEngine:
             if r.request_id not in self._restore
             and self.kv.demotable_indices(r.request_id)
         ]
+        plan = self._pressure_plan()
         if require_pressure:
             # the FIFO head resumes next (one per completion): demoting
             # its pages proactively would just buy a promotion stall —
@@ -2138,12 +2162,12 @@ class ServingEngine:
             victims = [
                 r
                 for r in victims
-                if self.policy.demotion_pressure(r.tenant) > 0.0
+                if plan.score(PageClass.FROZEN, r.tenant) > 0.0
                 and r.request_id != head
             ]
         victims.sort(
             key=lambda r: (
-                -self.policy.demotion_pressure(r.tenant),
+                -plan.score(PageClass.FROZEN, r.tenant),
                 -self.kv.request_bytes(r.request_id),
                 r.request_id,
             )
@@ -2177,35 +2201,45 @@ class ServingEngine:
             return
         budget = self.ecfg.demote_batch_pages
         line = self.ecfg.demote_threshold
+        plan = self._pressure_plan()
         while budget > 0 and self.pool.used_fraction >= line:
-            # frozen KV first — it is the class the policy explicitly
-            # marked, it stalls nobody, and demoting it leaves the warm
-            # prefix cache (and its hit rate) intact; cold cached pages
-            # go second, node-preserving (the trie survives as host
-            # nodes, promotable on the next match)
-            if self._demote_frozen_page(require_pressure=True):
-                budget -= 1
-                self.proactive_demotions += 1
-                self._update_pool()
-                continue
-            if self._any_demotion_pressure() and self.kv.demote_cold_page(
-                float(self.tick)
-            ):
-                budget -= 1
-                self.proactive_demotions += 1
-                self._update_pool()
-                continue
-            break
+            # walk the plan's proactive order (stock: frozen KV first —
+            # it is the class the policy explicitly marked, it stalls
+            # nobody, and demoting it leaves the warm prefix cache and
+            # its hit rate intact; cold cached pages second, node-
+            # preserving: the trie survives as host nodes, promotable
+            # on the next match)
+            reclaimed = False
+            for cls in plan.proactive_order:
+                if cls is PageClass.FROZEN:
+                    reclaimed = self._demote_frozen_page(
+                        require_pressure=True
+                    )
+                elif cls is PageClass.COLD_CACHED:
+                    reclaimed = self._any_demotion_pressure(
+                        plan
+                    ) and self.kv.demote_cold_page(float(self.tick))
+                elif cls is PageClass.SCRATCH:
+                    reclaimed = self.kv.evict_scratch(1) > 0
+                if reclaimed:
+                    break
+            if not reclaimed:
+                break
+            budget -= 1
+            self.proactive_demotions += 1
+            self._update_pool()
 
-    def _any_demotion_pressure(self) -> bool:
+    def _any_demotion_pressure(self, plan: PressurePlan) -> bool:
         """True when the policy marks ANY live tenant for demotion —
         gates cold-page demotion so a pressure-oblivious policy keeps
         stock (evict-on-shortage) cache behaviour."""
         if self.ecfg.legacy_bookkeeping:
             tenants = {r.tenant for r in self._live.values()}
         else:
-            tenants = self._tenant_live.keys()
-        return any(self.policy.demotion_pressure(t) > 0.0 for t in tenants)
+            tenants = self.kv.ledger.projected_tenants()
+        return any(
+            plan.score(PageClass.FROZEN, t) > 0.0 for t in tenants
+        )
 
     def _promotion_pass(self) -> None:
         """Start tier→HBM DMAs for pages that are now wanted, inside the
@@ -2267,11 +2301,12 @@ class ServingEngine:
         single fat victim may not cover the deficit, and leaving overflow
         pages standing stalls decode for a full tick per victim:
 
-          1. drop cold cached prefixes (stalls nobody, frees pages an
-             overflow entry can reclaim into);
-          2. demote SUSPENDED requests' frozen pages — across however
-             many victims it takes (the multi-victim bugfix);
-          3. the stock reactive spill: demote the fattest ACTIVE
+          1. reclaim class by class in the pressure plan's order (stock:
+             SCRATCH, then cold cached prefixes — both stall nobody and
+             free pages an overflow entry can reclaim into — then
+             SUSPENDED requests' frozen pages, across however many
+             victims it takes: the multi-victim bugfix);
+          2. the stock reactive spill: demote the fattest ACTIVE
              request's pages one by one (it stalls on its own non-resident
              pages but keeps its slot cache; with demotion disabled, fail
              it — the paper's OME).
@@ -2301,12 +2336,11 @@ class ServingEngine:
                 or self.pool.used_fraction > line
             )
 
-        while over() and self.kv.evict_cache(1):
-            self.kv.reclaim()
-            self._update_pool()
-        while over() and self._demote_frozen_page():
-            self.kv.reclaim()
-            self._update_pool()
+        plan = self._pressure_plan()
+        for cls in plan.reclaim_order:
+            while over() and self._reclaim_one(cls):
+                self.kv.reclaim()
+                self._update_pool()
         while over():
             if not self.ecfg.offload_enabled:
                 if not hard_over():
@@ -2381,6 +2415,13 @@ class ServingEngine:
             self.step()
         return self.report()
 
+    def memory_stats(self) -> Dict[str, Any]:
+        """The ledger's class-stamped memory breakdown for this replica:
+        per-class and per-tier byte totals, per-class peaks, projected
+        bytes, the derived host→disk spill, and the
+        ``ledger_matches_recount`` self-check (the gate hard bit)."""
+        return self.kv.ledger.stats()
+
     def report(self) -> ServeReport:
         """Build the ServeReport for the run so far (also usable
         mid-flight — unfinished requests show up as such)."""
@@ -2441,6 +2482,7 @@ class ServingEngine:
             "memory_models": {
                 r.request_id: r.memory_model for r in self.requests.values()
             },
+            "memory": self.memory_stats(),
         }
         outcomes: List[RequestOutcome] = []
         for r in self.requests.values():
@@ -2495,6 +2537,7 @@ class ServingEngine:
             outcomes=outcomes,
             tiering=legacy["tiers"],
             prefix=prefix,
+            memory=legacy["memory"],
             extras=legacy,
         )
         rep.refresh_summaries()

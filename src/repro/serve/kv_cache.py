@@ -64,12 +64,13 @@ from typing import (
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.serve.ledger import CACHE_OWNER, MemoryLedger, PageClass
 
 if TYPE_CHECKING:  # deferred: keeps this module import-light (numpy only)
     from repro.serve.tiers import TierConfig, TieredKVStore
 
 __all__ = [
-    "CACHE_OWNER",
+    "CACHE_OWNER",  # re-exported from repro.serve.ledger (defined there)
     "DEMOTED",
     "PageBlockAllocator",
     "PagedKVManager",
@@ -77,10 +78,6 @@ __all__ = [
     "constant_state_bytes",
     "kv_bytes_per_token",
 ]
-
-#: allocator owner id under which :class:`PrefixCache` holds its pages —
-#: a cached page with no request reference has refcount 1 (the cache's)
-CACHE_OWNER = "__prefix_cache__"
 
 #: page-table sentinel for a page demoted to the tier hierarchy (host or
 #: disk): the entry keeps its position — the tokens still exist, just not
@@ -122,10 +119,17 @@ class PageBlockAllocator:
     Overflow pages are never shared: only HBM-resident pages are cacheable.
     """
 
-    def __init__(self, n_pages: int) -> None:
+    def __init__(
+        self, n_pages: int, ledger: Optional[MemoryLedger] = None
+    ) -> None:
         if n_pages < 0:
             raise ValueError(f"n_pages must be >= 0, got {n_pages}")
         self.n_pages = n_pages
+        #: class-stamped byte ledger (single writer of byte tallies);
+        #: every holder-set mutation below fans out through :meth:`_note`
+        self.ledger = ledger
+        if ledger is not None:
+            ledger.attach_allocator(self)
         self._free: List[int] = list(range(n_pages - 1, -1, -1))
         self._free_overflow: List[int] = []  # recycled overflow ids
         self._tables: Dict[str, List[int]] = {}
@@ -150,6 +154,12 @@ class PageBlockAllocator:
         out = self.dirty
         self.dirty = set()
         return out
+
+    def _note(self, pid: int) -> None:
+        """Propagate a holder-set change on ``pid`` into the ledger (the
+        ledger re-derives the page's class and fractional attribution)."""
+        if self.ledger is not None:
+            self.ledger.page_update(pid, self._holders.get(pid, ()))
 
     # ------------------------------------------------------------- queries
     @property
@@ -226,6 +236,7 @@ class PageBlockAllocator:
         self._ref[pid] = 1
         self._holders[pid] = [owner]
         self.dirty.add(owner)
+        self._note(pid)
         return pid
 
     def _decref(self, pid: int, owner: str) -> bool:
@@ -244,6 +255,7 @@ class PageBlockAllocator:
             self._ref[pid] = n
             if holders:
                 self.dirty.update(holders)
+            self._note(pid)
             return False
         del self._ref[pid]
         self._holders.pop(pid, None)
@@ -252,6 +264,7 @@ class PageBlockAllocator:
         else:
             self._free_overflow.append(pid)
             self.overflow_pages -= 1
+        self._note(pid)
         return True
 
     def grow_to(self, owner: str, n_pages_needed: int) -> int:
@@ -283,6 +296,7 @@ class PageBlockAllocator:
             holders.append(owner)
             self.dirty.add(owner)
             table.append(pid)
+            self._note(pid)
 
     def ensure_private(self, owner: str, index: int) -> int:
         """Copy-on-write: make ``owner``'s page at table ``index`` private.
@@ -306,6 +320,7 @@ class PageBlockAllocator:
             except ValueError:
                 pass
             self.dirty.update(holders)  # co-holders' shares grew
+        self._note(pid)
         self.cow_events += 1
         return new
 
@@ -373,6 +388,7 @@ class PageBlockAllocator:
         self._holders[pid] = [owner]
         self.dirty.add(owner)
         self._tables.setdefault(owner, []).append(pid)
+        self._note(pid)
         return pid
 
     def release_pages(self, owner: str, pages: Sequence[int]) -> None:
@@ -407,11 +423,13 @@ class PageBlockAllocator:
                     self._free_overflow.append(pid)
                     del self._ref[pid]
                     self._holders.pop(pid, None)
+                    self._note(pid)
                     new = self._free.pop()
                     self._ref[new] = 1
                     self._holders[new] = [owner]
                     self.dirty.add(owner)
                     table[i] = new
+                    self._note(new)
                     self.overflow_pages -= 1
                     moved += 1
         return moved
@@ -858,6 +876,13 @@ class PagedKVManager:
     cache_pressure_fn: Optional[Callable[[str], float]] = None
     #: tier hierarchy below HBM (host + disk); None → demotion disabled
     tier_config: Optional["TierConfig"] = None
+    #: the single writer of byte tallies (DESIGN.md §13) — created here
+    #: when not injected, and shared with the allocator and tier store so
+    #: every byte the pool tracks carries a ``(tenant, class, tier)`` stamp
+    ledger: Optional[MemoryLedger] = None
+    #: owners registered as SCRATCH (speculative-decoding draft pages):
+    #: eviction prefers their pages over every other class
+    _scratch: set = field(default_factory=set)
     _page_bytes: Dict[str, float] = field(default_factory=dict)
     _state_bytes: Dict[str, float] = field(default_factory=dict)
     #: request id → arch name it registered under — one pool can host
@@ -886,14 +911,26 @@ class PagedKVManager:
     _write_epoch: Dict[str, Dict[int, int]] = field(default_factory=dict)
 
     def __post_init__(self) -> None:
+        if self.ledger is None:
+            self.ledger = MemoryLedger()
         if self.tier_config is not None:
             from repro.serve.tiers import TieredKVStore
 
-            self.tiers = TieredKVStore(self.tier_config)
+            self.tiers = TieredKVStore(self.tier_config, ledger=self.ledger)
 
     # ------------------------------------------------------------ requests
+    def page_bytes_for(self, cfg: ArchConfig) -> float:
+        """One page's HBM bytes under ``cfg``'s geometry — THE page-size
+        arithmetic; :meth:`register` and :meth:`admission_probe` both use
+        it, so the pool and per-request paths cannot diverge."""
+        return kv_bytes_per_token(cfg) * self.page_tokens
+
     def register(
-        self, request_id: str, cfg: ArchConfig, prompt_tokens: int = 0
+        self,
+        request_id: str,
+        cfg: ArchConfig,
+        prompt_tokens: int = 0,
+        tenant: str = "",
     ) -> None:
         """Start tracking a request: derive its per-page bytes from the
         arch config and create the allocator on first use.
@@ -908,19 +945,29 @@ class PagedKVManager:
         the request's fixed state bytes — it is written once at prefill
         and never grows with decode, so it rides with the constant-state
         term rather than the paged per-token term."""
-        page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
+        page_bytes = self.page_bytes_for(cfg)
         self._page_bytes[request_id] = page_bytes
         self._state_bytes[request_id] = constant_state_bytes(
             cfg
         ) + cfg.encoder_bytes(prompt_tokens)
         self._arch[request_id] = cfg.name
         self._dirty.add(request_id)
+        self.ledger.register_owner(
+            request_id,
+            tenant=tenant,
+            kind="request",
+            page_bytes=page_bytes,
+            state_bytes=self._state_bytes[request_id],
+        )
         if self._alloc is None and page_bytes > 0:
             self._alloc = PageBlockAllocator(
-                int(self.capacity_bytes // page_bytes)
+                int(self.capacity_bytes // page_bytes), ledger=self.ledger
             )
             self._pool_page_bytes = page_bytes
             self._pool_arch = cfg.name
+            self.ledger.register_owner(
+                CACHE_OWNER, kind="cache", page_bytes=page_bytes
+            )
             if self.enable_prefix_cache:
                 self._prefix = PrefixCache(self._alloc, self.page_tokens)
                 self._prefix.promote_cb = self._promote_cache_node
@@ -970,7 +1017,7 @@ class PagedKVManager:
         """Page-rounded HBM bytes ``n_tokens`` would occupy — an
         arithmetic admission probe that allocates nothing."""
         pages = (n_tokens + self.page_tokens - 1) // self.page_tokens
-        return pages * kv_bytes_per_token(cfg) * self.page_tokens
+        return pages * self.page_bytes_for(cfg)
 
     def admission_probe(
         self, cfg: ArchConfig, tokens: Sequence[int]
@@ -983,7 +1030,7 @@ class PagedKVManager:
         free-to-share, and the later allocation overshoots the line that
         was checked."""
         total = (len(tokens) + self.page_tokens - 1) // self.page_tokens
-        page_bytes = kv_bytes_per_token(cfg) * self.page_tokens
+        page_bytes = self.page_bytes_for(cfg)
         if self._prefix is None or (
             self._pool_arch is not None and cfg.name != self._pool_arch
         ):
@@ -1011,7 +1058,70 @@ class PagedKVManager:
         sb = self._state_bytes.pop(request_id, 0.0)
         self._dirty.add(request_id)
         self._write_epoch.pop(request_id, None)
+        self.ledger.release_owner(request_id)
         return pages * pb + sb
+
+    def set_frozen(self, request_id: str, frozen: bool) -> None:
+        """Stamp a request suspended (or resumed): its sole-held pages
+        restamp ``PRIVATE_SUFFIX`` ⇄ ``FROZEN`` in the ledger — frozen
+        bytes are the proactive-demotion pass's primary target."""
+        self.ledger.set_frozen(request_id, frozen)
+
+    # ------------------------------------------------------------- scratch
+    def register_scratch(
+        self, owner: str, n_pages: int, tenant: str = ""
+    ) -> int:
+        """Allocate ``n_pages`` SCRATCH-class pages under ``owner`` (the
+        speculative-decoding draft-page hook): eviction prefers scratch
+        over every other class.  Returns the number of pages allocated
+        (0 when the pool has not been sized yet)."""
+        if self._alloc is None or self._pool_page_bytes <= 0:
+            return 0
+        if owner not in self._scratch:
+            self.ledger.register_owner(
+                owner,
+                tenant=tenant,
+                kind="scratch",
+                page_bytes=self._pool_page_bytes,
+            )
+            self._scratch.add(owner)
+        self._dirty.add(owner)
+        return self._alloc.grow_to(
+            owner, self._alloc.pages_held(owner) + n_pages
+        )
+
+    def evict_scratch(self, n_pages: int) -> int:
+        """Drop up to ``n_pages`` scratch pages (newest first per owner)
+        — the cheapest reclaim there is: scratch holds draft state that
+        is free to regenerate.  Returns the number of pages freed."""
+        if self._alloc is None:
+            return 0
+        freed = 0
+        for owner in list(self._scratch):
+            while freed < n_pages:
+                table = self._alloc.table(owner)
+                live = [pid for pid in table if pid >= 0]
+                if not live:
+                    break
+                self._alloc.release_pages(owner, [live[-1]])
+                freed += 1
+            if freed >= n_pages:
+                break
+        return freed
+
+    def release_scratch(self, owner: str) -> int:
+        """Free every page of a scratch owner and retire it from the
+        ledger; returns the number of pages released."""
+        self._scratch.discard(owner)
+        pages = self._alloc.free(owner) if self._alloc is not None else 0
+        self.ledger.release_owner(owner)
+        self._dirty.add(owner)
+        return pages
+
+    @property
+    def scratch_bytes(self) -> float:
+        """HBM bytes currently held by the SCRATCH class."""
+        return self.ledger.class_bytes(PageClass.SCRATCH)
 
     def drain_dirty(self) -> set:
         """Owners whose attributed bytes may have changed since the last
@@ -1111,8 +1221,8 @@ class PagedKVManager:
         return {
             i
             for i, pid in enumerate(self._alloc.table(request_id))
-            if 0 <= pid < self._alloc.n_pages
-            and self._alloc.refcount(pid) > 1
+            if pid >= 0
+            and self.ledger.page_class(pid) is PageClass.SHARED_PREFIX
         }
 
     def has_demoted(self, request_id: str) -> bool:
@@ -1339,20 +1449,21 @@ class PagedKVManager:
 
     @property
     def reclaimable_bytes(self) -> float:
-        """Bytes of COLD cached pages (held by the cache alone) — memory
-        that one :meth:`evict_cache` call away from being free, the OS
-        page-cache notion of "available".  Pool demand = used −
+        """Bytes one eviction call away from being free — the ledger's
+        ``COLD_CACHED`` + ``SCRATCH`` HBM totals (cold cached pages are
+        held by the cache alone; scratch is droppable by definition) —
+        the OS page-cache notion of "available".  Pool demand = used −
         reclaimable."""
-        return self.evictable_cache_pages * self._pool_page_bytes
+        return self.ledger.class_bytes(
+            PageClass.COLD_CACHED
+        ) + self.ledger.class_bytes(PageClass.SCRATCH)
 
     @property
     def cache_bytes(self) -> float:
         """Pool bytes attributed to the prefix cache (its fractional share
         of the pages it holds — a page also held by a request is mostly
-        charged to the request)."""
-        if self._alloc is None or self._prefix is None:
-            return 0.0
-        return self._alloc.owner_share(CACHE_OWNER) * self._pool_page_bytes
+        charged to the request).  A ledger owner query."""
+        return self.ledger.owner_bytes(CACHE_OWNER)
 
     @property
     def cow_events(self) -> int:
@@ -1464,14 +1575,9 @@ class PagedKVManager:
         return self._alloc.reclaim()
 
     def request_bytes(self, request_id: str) -> float:
-        """The request's attributed HBM bytes (shared pages fractionally)."""
-        if self._alloc is None:
-            return self._state_bytes.get(request_id, 0.0)
-        return (
-            self._alloc.owner_share(request_id)
-            * self._page_bytes.get(request_id, 0.0)
-            + self._state_bytes.get(request_id, 0.0)
-        )
+        """The request's attributed HBM bytes (shared pages fractionally,
+        plus its fixed state) — a ledger owner query."""
+        return self.ledger.owner_bytes(request_id)
 
     @property
     def n_pages(self) -> int:
@@ -1493,12 +1599,10 @@ class PagedKVManager:
 
     @property
     def used_bytes(self) -> float:
-        """Physical bytes held: per-request fractional shares + the prefix
-        cache's share — a page shared k ways is counted exactly once."""
-        total = sum(
-            self.request_bytes(r) for r in self._page_bytes
-        )
-        return total + self.cache_bytes
+        """Physical bytes held: the ledger's total HBM-resident bytes —
+        per-owner fractional shares sum to the physical total, so a page
+        shared k ways is counted exactly once."""
+        return self.ledger.hbm_bytes()
 
     @property
     def used_fraction(self) -> float:

@@ -178,6 +178,9 @@ class ServeReport:
     tiering: Optional[Dict[str, Any]] = None
     prefix: Optional[Dict[str, Any]] = None
     cluster: Optional[Dict[str, Any]] = None
+    #: the ledger's class-stamped memory breakdown (``MemoryLedger.stats()``
+    #: shape: per-class / per-tier bytes, peaks, spill, the recount bit)
+    memory: Optional[Dict[str, Any]] = None
     #: the full legacy dict payload (reach it explicitly: ``.extras``)
     extras: Dict[str, Any] = field(default_factory=dict, repr=False)
 
@@ -275,6 +278,7 @@ class ServeReport:
             "tiering": self.tiering,
             "prefix": self.prefix,
             "cluster": self.cluster,
+            "memory": self.memory,
         }
         if include_outcomes:
             out["outcomes"] = [asdict(o) for o in self.outcomes]
@@ -304,6 +308,7 @@ class ServeReport:
             tiering=payload.get("tiering"),
             prefix=payload.get("prefix"),
             cluster=payload.get("cluster"),
+            memory=payload.get("memory"),
         )
         rep.outcomes = [
             RequestOutcome(**row) for row in payload.get("outcomes", [])

@@ -54,6 +54,7 @@ from typing import Any, Dict, Hashable, List, Optional, Tuple
 import numpy as np
 
 from repro.dist.compression import dequantize, quantize
+from repro.serve.ledger import MemoryLedger
 
 __all__ = [
     "TierConfig",
@@ -234,15 +235,21 @@ class TieredKVStore:
     A key the store does not track is, by definition, HBM-resident.
     """
 
-    def __init__(self, config: TierConfig) -> None:
+    def __init__(
+        self, config: TierConfig, ledger: Optional[MemoryLedger] = None
+    ) -> None:
         self.config = config
         self.link = PcieLink()
+        #: the class-stamped byte ledger — the single writer of resident
+        #: byte tallies (``host_used_bytes`` and ``disk_spill_bytes`` are
+        #: ledger queries below); a standalone store owns a private one
+        self.ledger = ledger if ledger is not None else MemoryLedger()
+        self.ledger.attach_tiers(self)
         self._blocks: Dict[Hashable, CompressedBlock] = {}
         self._state: Dict[Hashable, str] = {}
         # ---- cumulative traffic counters (the spill metrics)
         self.spilled_bytes = 0.0  # raw bytes demoted out of HBM
         self.wire_bytes = 0.0  # compressed bytes submitted to the link
-        self.disk_spill_bytes = 0.0  # host→disk evictions (stored bytes)
         self.disk_read_bytes = 0.0  # disk→HBM promotions (stored bytes)
         self.demotions = 0
         self.promotions = 0
@@ -272,11 +279,15 @@ class TieredKVStore:
 
     @property
     def host_used_bytes(self) -> float:
-        return sum(
-            b.stored_bytes
-            for k, b in self._blocks.items()
-            if self._state[k] == HOST
-        )
+        """Stored bytes at rest in the host tier — a ledger query."""
+        return self.ledger.tier_bytes(HOST)
+
+    @property
+    def disk_spill_bytes(self) -> float:
+        """Host→disk eviction traffic (stored bytes) — the paper's spill
+        metric, DERIVED from the ledger's host→disk flow rather than
+        counted separately."""
+        return self.ledger.flow(HOST, DISK)
 
     @property
     def tracked_raw_bytes(self) -> float:
@@ -320,6 +331,7 @@ class TieredKVStore:
         self.max_quant_error = max(self.max_quant_error, block.quant_error)
         self._blocks[key] = block
         self._state[key] = TO_HOST
+        self.ledger.tier_demote(key, raw_bytes, block.stored_bytes)
         self.wire_bytes += block.stored_bytes
         if not repark:
             self.spilled_bytes += raw_bytes
@@ -347,6 +359,7 @@ class TieredKVStore:
             self.disk_read_bytes += block.stored_bytes
             rate = min(rate, self.config.disk_bytes_per_tick)
         self._state[key] = TO_HBM
+        self.ledger.tier_move(key, TO_HBM)
         self.promotions += 1
         self.link.submit(
             _Transfer(
@@ -367,6 +380,7 @@ class TieredKVStore:
         self.link.cancel(key)
         del self._state[key]
         del self._blocks[key]
+        self.ledger.tier_drop(key)
         self.discards += 1
 
     def extract(self, key: Hashable) -> Optional[CompressedBlock]:
@@ -380,6 +394,7 @@ class TieredKVStore:
         self.link.cancel(key)
         del self._state[key]
         block = self._blocks.pop(key)
+        self.ledger.tier_drop(key)
         self.extractions += 1
         return block
 
@@ -400,6 +415,9 @@ class TieredKVStore:
             if tr.kind == "demote":
                 self._state[tr.key] = HOST
                 self._blocks[tr.key].last_use = now
+                # ledger first: the overflow cascade below reads the
+                # host tier's occupancy through it
+                self.ledger.tier_move(tr.key, HOST)
                 self._spill_host_overflow(tr.key)
                 # sampled AFTER the overflow cascade: the high-water mark
                 # must never claim the host tier held more than it can
@@ -409,6 +427,7 @@ class TieredKVStore:
             else:
                 block = self._blocks.pop(tr.key)
                 del self._state[tr.key]
+                self.ledger.tier_drop(tr.key)
                 events.append(("resident", tr.key, block.decompress()))
         return events
 
@@ -428,7 +447,8 @@ class TieredKVStore:
                 break
             victim = min(victims, key=lambda k: self._blocks[k].last_use)
             self._state[victim] = DISK
-            self.disk_spill_bytes += self._blocks[victim].stored_bytes
+            # the ledger's host→disk flow IS the spill metric
+            self.ledger.tier_move(victim, DISK)
             if victim == arriving:
                 break
 

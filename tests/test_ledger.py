@@ -1,0 +1,394 @@
+"""The MemoryLedger (DESIGN.md §13): class-stamped byte tallies.
+
+Three layers of coverage:
+
+* direct ledger unit tests — class derivation, fractional shared-page
+  attribution, exact settle, tier flows, SCRATCH semantics;
+* a hypothesis property suite driving a :class:`PagedKVManager`
+  through random alloc / share / COW / freeze / demote / promote /
+  evict / free streams, asserting after EVERY op that the incremental
+  state equals :meth:`MemoryLedger.recount` (the gate hard bit), that
+  bytes are conserved across tier transitions, and that no page is
+  ever stamped with two classes at once;
+* a projection drift regression — the incremental admission-estimate
+  total must equal a ground-truth recount after a long random
+  note/drop stream (the old ``_projected_bytes`` float accumulated
+  error and needed a settle-on-empty reset; the ledger must not).
+"""
+
+import math
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import ARCHS
+from repro.serve import (
+    MemoryLedger,
+    PagedKVManager,
+    PageClass,
+    TierConfig,
+)
+from repro.serve.ledger import DISK, HBM, HOST, TO_HOST, PressurePlan
+
+CFG = ARCHS["internlm2-1.8b"].smoke()
+
+
+def make_mgr(capacity_pages=64, tiers=True, prefix=True):
+    mgr = PagedKVManager(
+        capacity_bytes=0.0,  # sized below, in pages
+        page_tokens=16,
+        enable_prefix_cache=prefix,
+        tier_config=TierConfig(host_capacity_bytes=1e12) if tiers else None,
+    )
+    mgr.capacity_bytes = mgr.page_bytes_for(CFG) * capacity_pages
+    return mgr
+
+
+def ledger_single_class_per_page(ledger):
+    """No page is ever in two classes at once."""
+    for pid, entries in ledger._page_entries.items():
+        classes = {cls for (_o, cls, _b) in entries}
+        assert len(classes) == 1, f"page {pid} stamped {classes}"
+
+
+def check_invariants(mgr):
+    led = mgr.ledger
+    assert led.matches_recount()
+    ledger_single_class_per_page(led)
+    # per-class totals at HBM sum to the tier total
+    by_class = led.class_breakdown(HBM)
+    assert math.isclose(
+        sum(by_class.values()), led.tier_bytes(HBM),
+        rel_tol=1e-9, abs_tol=1e-6,
+    )
+    # allocator pages in use == HBM page bytes (HBM total minus fixed state)
+    if mgr._alloc is not None:
+        page_hbm = led.tier_bytes(HBM) - led.class_bytes(
+            PageClass.FIXED_STATE
+        )
+        assert math.isclose(
+            page_hbm,
+            mgr._alloc.pages_in_use * mgr._pool_page_bytes,
+            rel_tol=1e-9, abs_tol=1e-6,
+        )
+
+
+class TestLedgerUnit:
+    def test_fixed_state_registers_and_settles(self):
+        led = MemoryLedger()
+        led.register_owner("r1", tenant="A", kind="request",
+                           page_bytes=100.0, state_bytes=40.0)
+        assert led.class_bytes(PageClass.FIXED_STATE) == 40.0
+        assert led.tenant_class_bytes("A", PageClass.FIXED_STATE) == 40.0
+        led.release_owner("r1")
+        assert led.class_bytes(PageClass.FIXED_STATE) == 0.0
+        assert led.hbm_bytes() == 0.0
+
+    def test_fractional_shared_attribution(self):
+        led = MemoryLedger()
+        led.register_owner("a", tenant="A", page_bytes=90.0)
+        led.register_owner("b", tenant="B", page_bytes=90.0)
+        led.register_owner("c", tenant="C", page_bytes=90.0)
+        led.page_update(7, ["a", "b", "c"])
+        assert led.class_bytes(PageClass.SHARED_PREFIX) == pytest.approx(90.0)
+        for t in "ABC":
+            assert led.tenant_class_bytes(
+                t, PageClass.SHARED_PREFIX
+            ) == pytest.approx(30.0)
+        assert led.owner_bytes("a") == pytest.approx(30.0)
+        # one holder drops: the page turns private for the survivors? no —
+        # two holders is still shared
+        led.page_update(7, ["a", "b"])
+        assert led.page_class(7) is PageClass.SHARED_PREFIX
+        led.page_update(7, ["a"])
+        assert led.page_class(7) is PageClass.PRIVATE_SUFFIX
+        assert led.owner_bytes("a") == pytest.approx(90.0)
+        led.page_update(7, [])
+        assert led.page_class(7) is None
+        assert led.hbm_bytes() == 0.0
+
+    def test_frozen_restamps_sole_pages_only(self):
+        led = MemoryLedger()
+        led.register_owner("r", tenant="A", page_bytes=50.0)
+        led.register_owner("s", tenant="B", page_bytes=50.0)
+        led.page_update(1, ["r"])          # sole: PRIVATE_SUFFIX
+        led.page_update(2, ["r", "s"])     # shared: stays SHARED_PREFIX
+
+        # set_frozen restamps by walking the attached allocator's tables
+        class FakeAlloc:
+            _tables = {"r": (1, 2), "s": (2,)}
+            _holders = {1: ["r"], 2: ["r", "s"]}
+
+        led.attach_allocator(FakeAlloc())
+        led.set_frozen("r", True)
+        assert led.page_class(1) is PageClass.FROZEN
+        assert led.page_class(2) is PageClass.SHARED_PREFIX
+        assert led.class_bytes(PageClass.FROZEN) == pytest.approx(50.0)
+        led.set_frozen("r", False)
+        assert led.page_class(1) is PageClass.PRIVATE_SUFFIX
+        assert led.class_bytes(PageClass.FROZEN) == 0.0
+
+    def test_tier_moves_record_flows(self):
+        led = MemoryLedger()
+        led.register_owner("r", tenant="A", page_bytes=64.0)
+        led.tier_demote(("req", "r", 0), 64.0, 32.0)
+        assert led.tier_bytes(TO_HOST) == pytest.approx(32.0)
+        led.tier_move(("req", "r", 0), HOST)
+        assert led.tier_bytes(HOST) == pytest.approx(32.0)
+        led.tier_move(("req", "r", 0), DISK)
+        assert led.flow(HOST, DISK) == pytest.approx(32.0)
+        led.tier_drop(("req", "r", 0))
+        assert led.tier_bytes(DISK) == 0.0
+        # the cumulative flow survives the drop (spill is monotonic)
+        assert led.flow(HOST, DISK) == pytest.approx(32.0)
+
+    def test_release_owner_drops_tier_copies(self):
+        led = MemoryLedger()
+        led.register_owner("r", tenant="A", page_bytes=64.0)
+        led.tier_demote(("req", "r", 0), 64.0, 32.0)
+        led.tier_move(("req", "r", 0), HOST)
+        led.release_owner("r")
+        assert led.tier_bytes(HOST) == 0.0
+        assert led.matches_recount()
+
+    def test_pressure_plan_default_score_and_orders(self):
+        plan = PressurePlan()
+        assert plan.reclaim_order[0] is PageClass.SCRATCH
+        assert plan.reclaim_order.index(PageClass.COLD_CACHED) < (
+            plan.reclaim_order.index(PageClass.FROZEN)
+        )
+        # a class without a scorer defaults to 1.0 (flat)
+        assert plan.score(PageClass.COLD_CACHED, "anyone") == 1.0
+
+    def test_stats_shape(self):
+        led = MemoryLedger()
+        s = led.stats()
+        assert set(s["by_class"]) == {c.value for c in PageClass}
+        assert set(s["peak_by_class"]) == {c.value for c in PageClass}
+        assert s["ledger_matches_recount"] is True
+        for key in ("by_tier", "hbm_bytes", "projected_bytes",
+                    "disk_spill_bytes"):
+            assert key in s
+
+
+class TestScratchClass:
+    def test_scratch_allocatable_and_classed(self):
+        mgr = make_mgr(capacity_pages=16, tiers=False)
+        mgr.register("r1", CFG, tenant="A")
+        got = mgr.register_scratch("draft", 4, tenant="A")
+        assert got == 4
+        assert mgr.scratch_bytes == pytest.approx(
+            4 * mgr._pool_page_bytes
+        )
+        assert mgr.ledger.class_bytes(PageClass.SCRATCH) == (
+            pytest.approx(mgr.scratch_bytes)
+        )
+        check_invariants(mgr)
+
+    def test_scratch_evicted_before_cold_and_frozen(self):
+        """SCRATCH drains first under pressure — before cold cache is
+        evicted and before any frozen page is demoted (the reclaim
+        order of the default PressurePlan, by construction)."""
+        mgr = make_mgr(capacity_pages=32)
+        mgr.register("warm", CFG, tenant="A")
+        mgr.grow_to("warm", 64)  # 4 pages
+        toks = list(range(100, 164))
+        mgr.insert_prefix("warm", toks, "A", ("snap",))
+        mgr.release("warm")  # pages survive as COLD_CACHED
+        cold_before = mgr.ledger.class_bytes(PageClass.COLD_CACHED)
+        assert cold_before > 0
+        mgr.register("frozen-req", CFG, tenant="B")
+        mgr.grow_to("frozen-req", 32)
+        mgr.set_frozen("frozen-req", True)
+        frozen_before = mgr.ledger.class_bytes(PageClass.FROZEN)
+        assert frozen_before > 0
+        mgr.register_scratch("draft", 3, tenant="B")
+        # drive reclaim in plan order: scratch must empty before the
+        # other classes lose a byte
+        plan = PressurePlan()
+        freed = 0
+        for cls in plan.reclaim_order:
+            if cls is PageClass.SCRATCH:
+                while mgr.evict_scratch(1) > 0:
+                    freed += 1
+                    check_invariants(mgr)
+            if freed >= 3:
+                break
+        assert freed == 3
+        assert mgr.ledger.class_bytes(PageClass.SCRATCH) == 0.0
+        assert mgr.ledger.class_bytes(PageClass.COLD_CACHED) == (
+            pytest.approx(cold_before)
+        )
+        assert mgr.ledger.class_bytes(PageClass.FROZEN) == (
+            pytest.approx(frozen_before)
+        )
+        check_invariants(mgr)
+
+    def test_release_scratch_retires_owner(self):
+        mgr = make_mgr(capacity_pages=16, tiers=False)
+        mgr.register("r1", CFG, tenant="A")
+        mgr.register_scratch("draft", 5, tenant="A")
+        assert mgr.release_scratch("draft") == 5
+        assert mgr.scratch_bytes == 0.0
+        assert not mgr.ledger.has_owner("draft")
+        check_invariants(mgr)
+
+
+class TestProjectionDrift:
+    def test_incremental_equals_recount_after_long_random_run(self):
+        """Satellite-1 regression: the old engine kept a running
+        ``_projected_bytes`` float that drifted under float cancellation
+        and needed a settle-on-empty reset.  The ledger's exact-settle
+        buckets must agree with a ground-truth fsum after thousands of
+        adds/drops WITHOUT any reset."""
+        led = MemoryLedger()
+        rng = random.Random(42)
+        live = []
+        for i in range(5000):
+            if live and rng.random() < 0.45:
+                led.drop_projection(live.pop(rng.randrange(len(live))))
+            else:
+                owner = f"r{i}"
+                led.note_projection(
+                    owner, f"t{rng.randrange(4)}",
+                    rng.uniform(1.0, 1e9) * (10 ** rng.randrange(-3, 3)),
+                )
+                live.append(owner)
+        assert led.projected_bytes() == pytest.approx(
+            led.projected_recount(), rel=1e-9
+        )
+        # drain to empty: every bucket must settle to EXACTLY zero
+        for owner in live:
+            led.drop_projection(owner)
+        assert led.projected_bytes() == 0.0
+        assert led.projected_recount() == 0.0
+        assert led.projected_by_tenant() == {}
+
+
+# --------------------------------------------------------------------------
+# hypothesis property suite: random op streams against recount()
+
+OPS = st.lists(
+    st.tuples(
+        st.sampled_from(
+            ["register", "grow", "match", "insert", "cow", "freeze",
+             "thaw", "demote", "demote_cold", "promote", "tick",
+             "evict_cache", "scratch", "evict_scratch", "release"]
+        ),
+        st.integers(min_value=0, max_value=7),   # actor pick
+        st.integers(min_value=1, max_value=96),  # token count / amount
+    ),
+    min_size=1,
+    max_size=60,
+)
+
+
+@given(ops=OPS, seed=st.integers(min_value=0, max_value=2**32 - 1))
+@settings(max_examples=60, deadline=None)
+def test_ledger_matches_recount_under_random_streams(ops, seed):
+    rng = random.Random(seed)
+    mgr = make_mgr(capacity_pages=24)
+    # four canonical prompt streams — requests on the same stream share
+    # prefix pages; the driver always publishes a request's ACTUAL
+    # tokens (the engine contract: insert_prefix sees the real prompt)
+    streams = [
+        [(seed + i * 131 + j) % 997 for j in range(24 * 16)]
+        for i in range(4)
+    ]
+    live = []           # registered request ids
+    tokens = {}         # rid -> its prompt stream
+    frozen = set()
+    scratch_next = 0
+    now = 0.0
+    counter = 0
+
+    for op, pick, amount in ops:
+        now += 1.0
+        if op == "register":
+            rid = f"r{counter}"
+            counter += 1
+            mgr.register(rid, CFG, tenant=f"t{pick % 3}")
+            tokens[rid] = streams[pick % 4]
+            live.append(rid)
+        elif op == "grow" and live:
+            rid = live[pick % len(live)]
+            mgr.grow_to(rid, min(amount * 4, len(tokens[rid])))
+        elif op == "match" and live:
+            rid = live[pick % len(live)]
+            if mgr._alloc is not None and (
+                mgr._alloc.pages_held(rid) == 0
+            ):
+                mgr.match_prefix(rid, tokens[rid], now)
+        elif op == "insert" and live:
+            rid = live[pick % len(live)]
+            held = (
+                mgr._alloc.pages_held(rid)
+                if mgr._alloc is not None else 0
+            )
+            if held > 0:
+                toks = tokens[rid][: held * 16]
+                mgr.insert_prefix(rid, toks, "g",
+                                  (pick % 4,), now)
+        elif op == "cow" and live:
+            rid = live[pick % len(live)]
+            held = (
+                mgr._alloc.pages_held(rid)
+                if mgr._alloc is not None else 0
+            )
+            if held > 0:
+                mgr.make_private(rid, pick % held)
+        elif op == "freeze" and live:
+            rid = live[pick % len(live)]
+            mgr.set_frozen(rid, True)
+            frozen.add(rid)
+        elif op == "thaw" and frozen:
+            rid = rng.choice(sorted(frozen))
+            if rid in live:
+                mgr.set_frozen(rid, False)
+            frozen.discard(rid)
+        elif op == "demote" and live:
+            rid = live[pick % len(live)]
+            idxs = mgr.demotable_indices(rid)
+            if idxs:
+                mgr.demote_page(rid, idxs[pick % len(idxs)], None, now)
+        elif op == "demote_cold":
+            mgr.demote_cold_page(now)
+        elif op == "promote" and live:
+            rid = live[pick % len(live)]
+            mgr.promote_request(rid, 2, now)
+        elif op == "tick":
+            mgr.tick_tiers(now)
+        elif op == "evict_cache":
+            mgr.evict_cache(1 + pick % 3)
+        elif op == "scratch":
+            owner = f"s{scratch_next % 2}"
+            scratch_next += 1
+            mgr.register_scratch(owner, 1 + amount % 3,
+                                 tenant=f"t{pick % 3}")
+        elif op == "evict_scratch":
+            mgr.evict_scratch(1 + pick % 3)
+        elif op == "release" and live:
+            rid = live.pop(pick % len(live))
+            frozen.discard(rid)
+            tokens.pop(rid, None)
+            mgr.release(rid)
+
+        check_invariants(mgr)
+
+    # drain everything: the ledger must settle back to exactly zero HBM
+    for owner in list(mgr._scratch):
+        mgr.release_scratch(owner)
+    for rid in list(live):
+        mgr.release(rid)
+    mgr.evict_cache(10**6)
+    if mgr.tiers is not None:
+        for _ in range(64):
+            mgr.tick_tiers(now)
+            now += 1.0
+    check_invariants(mgr)
+    led = mgr.ledger
+    live_hbm = led.tier_bytes(HBM) - led.class_bytes(PageClass.COLD_CACHED)
+    # only cache pages (and their host copies) may outlive the requests
+    assert live_hbm == pytest.approx(0.0, abs=1e-6)

@@ -332,8 +332,9 @@ class TestCachePressureHint:
         assert pol.cache_pressure("gold") < pol.cache_pressure("bronze")
 
     def test_engine_wires_policy_hint_into_eviction(self):
-        """The engine hands the resolved policy's cache_pressure to the KV
-        manager — the trie's eviction order is policy-owned."""
+        """The engine hands the resolved policy's pressure plan to the KV
+        manager — the trie's eviction order is policy-owned (the plan's
+        COLD_CACHED score, which ``cache_pressure`` wraps)."""
         from repro.configs import ARCHS
         from repro.models import init_model
 
@@ -346,7 +347,10 @@ class TestCachePressureHint:
                          hbm_capacity_bytes=kv_bytes_per_token(cfg) * 64,
                          policy=pol),
         )
-        assert eng.kv.cache_pressure_fn == pol.cache_pressure
         assert eng.kv.cache_pressure_fn("bronze") == pol.cache_pressure(
+            "bronze"
+        )
+        assert eng.kv.cache_pressure_fn("A") == pytest.approx(1.0 / 5.0)
+        assert eng.kv.cache_pressure_fn("A") < eng.kv.cache_pressure_fn(
             "bronze"
         )

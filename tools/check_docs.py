@@ -1,6 +1,6 @@
 """Documentation consistency gate: links, § references, coverage.
 
-CI's ``docs`` job runs this on every push.  Four checks, all cheap and
+CI's ``docs`` job runs this on every push.  Eight checks, all cheap and
 all hard failures:
 
 1. **Relative links resolve.**  Every ``[text](path)`` in the repo's
@@ -37,6 +37,16 @@ all hard failures:
    ``model_zoo`` section must appear in ``docs/OPERATIONS.md`` — the
    leg's gate bits are correctness claims, so undocumented keys are a
    harder smell here than elsewhere (check 4 already covers the rest).
+
+7. **Every PageClass member is placed in DESIGN.md §6.**  The
+   lifetime-class enum in ``repro/serve/ledger.py`` is the code form
+   of the §6 taxonomy; each member's value string must appear in that
+   section — an enum member the docs don't classify fails here.
+
+8. **memory bench keys are documented.**  The class-stamped ledger leg
+   must exist in the baseline and every leaf key under its ``memory``
+   section must appear in ``docs/OPERATIONS.md`` (the leg carries the
+   ``ledger_matches_recount`` correctness bit).
 
 Usage::
 
@@ -235,6 +245,75 @@ def check_configs_in_design(root: str) -> list:
     return errors
 
 
+def check_page_classes(root: str) -> list:
+    """Every :class:`PageClass` member must be named (by its value
+    string) in the DESIGN.md §6 lifetime-class section — the enum is
+    the code form of that taxonomy, and a member the docs don't place
+    is an unclassified lifetime."""
+    design_path = os.path.join(root, "DESIGN.md")
+    ledger_path = os.path.join(
+        root, "src", "repro", "serve", "ledger.py"
+    )
+    design = open(design_path, encoding="utf-8").read()
+    m = re.search(r"^## 6\..*?(?=^## |\Z)", design, re.MULTILINE | re.DOTALL)
+    if not m:
+        return ["DESIGN.md has no '## 6.' section (lifetime classes)"]
+    section = m.group(0)
+    tree = ast.parse(open(ledger_path, encoding="utf-8").read())
+    members = []
+    for node in tree.body:
+        if isinstance(node, ast.ClassDef) and node.name == "PageClass":
+            for sub in node.body:
+                if (
+                    isinstance(sub, ast.Assign)
+                    and isinstance(sub.value, ast.Constant)
+                    and isinstance(sub.value.value, str)
+                ):
+                    members.append(sub.value.value)
+    if not members:
+        return ["repro/serve/ledger.py defines no PageClass members"]
+    errors = []
+    for value in members:
+        if value not in section:
+            errors.append(
+                f"PageClass member '{value}' is not named in the "
+                "DESIGN.md §6 lifetime-class section"
+            )
+    return errors
+
+
+def check_memory_keys(root: str) -> list:
+    """The class-stamped ledger leg must exist in the baseline and every
+    leaf key under ``memory`` must be documented in OPERATIONS.md — the
+    leg carries the ``ledger_matches_recount`` correctness bit, so its
+    keys are operator-facing by construction."""
+    bench_path = os.path.join(root, "BENCH_baseline.json")
+    ops_path = os.path.join(root, "docs", "OPERATIONS.md")
+    if not os.path.exists(bench_path):
+        return [f"missing {bench_path} (commit the benchmark baseline)"]
+    if not os.path.exists(ops_path):
+        return ["missing docs/OPERATIONS.md"]
+    record = json.load(open(bench_path, encoding="utf-8"))
+    mem = record.get("memory")
+    if not isinstance(mem, dict):
+        return [
+            "BENCH_baseline.json has no 'memory' section — the "
+            "class-stamped ledger leg did not run (or the baseline "
+            "predates it); refresh the baseline"
+        ]
+    ops = open(ops_path, encoding="utf-8").read()
+    errors = []
+    for key in sorted(_leaf_keys(mem, set())):
+        if DOC_EXEMPT.match(key):
+            continue
+        if key not in ops:
+            errors.append(
+                f"memory bench key '{key}' is not documented in "
+                "docs/OPERATIONS.md"
+            )
+    return errors
+
+
 def check_model_zoo_keys(root: str) -> list:
     """The heterogeneous-fleet leg must exist in the baseline and every
     leaf key under ``model_zoo`` must be documented in OPERATIONS.md."""
@@ -276,6 +355,8 @@ def main(argv=None) -> int:
         ("bench-key documentation", check_bench_keys),
         ("configs classified in DESIGN.md §12", check_configs_in_design),
         ("model_zoo keys documented", check_model_zoo_keys),
+        ("PageClass members in DESIGN.md §6", check_page_classes),
+        ("memory keys documented", check_memory_keys),
     )
     failed = False
     for name, fn in checks:
